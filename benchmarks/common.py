@@ -1,0 +1,73 @@
+"""Shared benchmark helpers.
+
+Benchmark scale note: the paper's instances are 10^8–10^9 edges on 8192
+cores; this container is one CPU core.  Each benchmark reproduces the paper
+*comparison* (same algorithms, same metrics, same instance classes) at a
+scale that completes in minutes; the dry-run roofline covers the full-scale
+shape story (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import partition
+from repro.graphs import chung_lu_powerlaw, grid2d, grid3d, rmat, watts_strogatz
+
+# small but structurally faithful instance set (low-degree + high-degree)
+INSTANCES = {
+    "grid2d_2k": lambda: grid2d(48, 48),
+    "grid3d_4k": lambda: grid3d(16, 16, 16),
+    "rgg_like_ws": lambda: watts_strogatz(4096, k=8, beta=0.05, seed=7),
+    "rhg_4k": lambda: chung_lu_powerlaw(4096, avg_deg=12, exponent=3.0, seed=3),
+    "rmat_11": lambda: rmat(scale=11, edge_factor=6, seed=5),
+}
+
+KS = (2, 4, 8)
+EPS = 0.03
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)
+
+
+_RUN_ALL_MEMO: dict = {}
+
+
+def run_all(refiner: str, max_inner: int = 12, seed: int = 0):
+    """{(instance, k): (cut, imbalance, seconds)} — memoised across figure
+    modules (fig1a and fig1d share the same sweep)."""
+    key = (refiner, max_inner, seed)
+    if key in _RUN_ALL_MEMO:
+        return _RUN_ALL_MEMO[key]
+    out = {}
+    for name, fac in INSTANCES.items():
+        g = fac()
+        for k in KS:
+            res, sec = timed(partition, g, k=k, eps=EPS, seed=seed,
+                             refiner=refiner, max_inner=max_inner)
+            out[(name, k)] = (res.cut, res.imbalance, sec)
+    _RUN_ALL_MEMO[key] = out
+    return out
+
+
+def performance_profile(cuts_by_algo: dict[str, dict], taus=(1.0, 1.01, 1.05, 1.10, 1.5)):
+    """Paper Fig. 1 metric: fraction of instances with cut ≤ τ·best."""
+    instances = next(iter(cuts_by_algo.values())).keys()
+    best = {i: min(c[i][0] for c in cuts_by_algo.values()) for i in instances}
+    prof = {}
+    for algo, cuts in cuts_by_algo.items():
+        prof[algo] = {
+            tau: float(np.mean([cuts[i][0] <= tau * max(best[i], 1e-9) for i in instances]))
+            for tau in taus
+        }
+    return prof
+
+
+def gmean(xs):
+    xs = np.maximum(np.asarray(xs, np.float64), 1e-12)
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,44 @@
+"""Fig. 1a — solution quality of dLP vs dJet vs d4xJet (performance profiles).
+
+Paper claim: d4xJet improves the cut by ≥10% on ~50% of instances vs dLP;
+d4xJet ≥ dJet.  Output: per-instance cuts + profile points + headline CSV.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import gmean, performance_profile, run_all, timed
+
+
+def main(emit):
+    algos = {}
+    times = {}
+    for refiner in ("dlp", "djet", "d4xjet"):
+        res = run_all(refiner)
+        algos[refiner] = res
+        times[refiner] = sum(v[2] for v in res.values())
+
+    prof = performance_profile(algos)
+    instances = list(next(iter(algos.values())).keys())
+
+    # headline: fraction of instances where d4xjet cuts ≥10% below dLP
+    improved10 = np.mean([
+        algos["d4xjet"][i][0] <= 0.9 * algos["dlp"][i][0] for i in instances
+    ])
+    ratio_vs_lp = gmean([
+        algos["d4xjet"][i][0] / max(algos["dlp"][i][0], 1e-9) for i in instances
+    ])
+    ratio_vs_jet1 = gmean([
+        algos["d4xjet"][i][0] / max(algos["djet"][i][0], 1e-9) for i in instances
+    ])
+
+    for i in instances:
+        emit(f"fig1a.cut.dlp.{i[0]}.k{i[1]}", algos["dlp"][i][2] * 1e6, algos["dlp"][i][0])
+        emit(f"fig1a.cut.d4xjet.{i[0]}.k{i[1]}", algos["d4xjet"][i][2] * 1e6, algos["d4xjet"][i][0])
+    for algo, p in prof.items():
+        emit(f"fig1a.profile.{algo}.tau1.0", 0, p[1.0])
+        emit(f"fig1a.profile.{algo}.tau1.05", 0, p[1.05])
+    emit("fig1a.frac_ge10pct_better_than_dlp", 0, float(improved10))
+    emit("fig1a.gmean_cut_ratio_d4xjet_over_dlp", 0, ratio_vs_lp)
+    emit("fig1a.gmean_cut_ratio_d4xjet_over_djet", 0, ratio_vs_jet1)

@@ -1,0 +1,20 @@
+"""Fig. 1d — per-instance running times (gmean) of dLP / dJet / d4xJet.
+
+Paper context: d4xJet costs more than dLP but stays in the same regime
+(and is ~9x faster than the strongest competitor; here the derived metric is
+the gmean slowdown of d4xJet vs dLP)."""
+
+from __future__ import annotations
+
+from benchmarks.common import gmean, run_all
+
+
+def main(emit):
+    times = {}
+    for refiner in ("dlp", "djet", "d4xjet"):
+        res = run_all(refiner)
+        times[refiner] = {i: v[2] for i, v in res.items()}
+        emit(f"fig1d.total_sec.{refiner}", sum(times[refiner].values()) * 1e6,
+             sum(times[refiner].values()))
+    slow = [times["d4xjet"][i] / max(times["dlp"][i], 1e-9) for i in times["dlp"]]
+    emit("fig1d.gmean_slowdown_d4xjet_vs_dlp", 0, gmean(slow))

@@ -1,0 +1,83 @@
+"""Fig. 2 — weak/strong scaling of the distributed refinement.
+
+One CPU core cannot demonstrate wall-clock speedup; what this benchmark
+measures instead (and what transfers to real fabric):
+
+  * weak scaling of the *communication volume*: per-PE all-gather/psum bytes
+    per Jet round at P ∈ {1,2,4,8} with fixed per-PE subgraph — the paper's
+    Fig. 2a regime.  Derived = bytes/PE ratio P=8 vs P=1 (ideal: ~constant
+    per-PE compute, O(n) gather volume).
+  * strong scaling of the round count / cut invariance (Table 1 companion:
+    quality must not degrade with P; see table1_cut_vs_p).
+
+Bytes come from the compiled per-PE program of the shard_map'd Jet round,
+via the same HLO collective parser the roofline uses — executed in a
+subprocess with forced host device counts."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(P)d"
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.graphs import grid2d
+from repro.distributed import shard_graph
+from repro.distributed.dgraph import labels_to_sharded, owned_mask
+from repro.distributed.djet import make_djet_round
+from repro.roofline.analysis import parse_collective_bytes
+
+P = %(P)d
+side = int((4096 * P) ** 0.5)   # weak scaling: ~4096 vertices per PE
+g = grid2d(side, side)
+k = 16
+mesh = jax.make_mesh((P,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+sg = shard_graph(g, P)
+fn = make_djet_round(mesh, k, sg.n_local)
+labels = jnp.asarray(np.random.default_rng(0).integers(0, k, g.n), jnp.int32)
+lab_sh = labels_to_sharded(sg, labels)
+owned = owned_mask(sg)
+locked = jnp.zeros((P, sg.n_local), bool)
+args = (sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, locked, jnp.float32(0.5))
+lowered = fn.lower(*args)
+compiled = lowered.compile()
+coll = parse_collective_bytes(compiled.as_text())
+# execute a few rounds for wall time (time-sliced CPU: indicative only)
+import time
+fn(*args)[0].block_until_ready()
+t0 = time.perf_counter()
+for _ in range(3):
+    out = fn(*args)
+out[0].block_until_ready()
+dt = (time.perf_counter() - t0) / 3
+print("RESULT::" + json.dumps({"P": P, "n": g.n, "n_local": sg.n_local,
+      "coll_bytes": sum(coll.values()), "coll": coll, "sec_per_round": dt}))
+"""
+
+
+def main(emit):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    rows = []
+    for P in (1, 2, 4, 8):
+        env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu")
+        proc = subprocess.run([sys.executable, "-c", SCRIPT % {"P": P}],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        if proc.returncode != 0:
+            emit(f"fig2.weak.P{P}.FAILED", 0, -1)
+            continue
+        for line in proc.stdout.splitlines():
+            if line.startswith("RESULT::"):
+                rows.append(json.loads(line[len("RESULT::"):]))
+
+    for r in rows:
+        emit(f"fig2.weak.P{r['P']}.coll_bytes_per_pe", r["sec_per_round"] * 1e6,
+             r["coll_bytes"])
+    if len(rows) >= 2 and rows[0]["coll_bytes"] > 0:
+        emit("fig2.weak.coll_growth_P8_over_P1", 0,
+             rows[-1]["coll_bytes"] / rows[0]["coll_bytes"])

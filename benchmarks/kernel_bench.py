@@ -1,0 +1,49 @@
+"""Gain-kernel microbenchmark: Pallas (interpret) vs jnp oracle vs the
+segment_sum production path.  On CPU the interpret-mode timing is a
+correctness/roofline sanity sweep, not TPU performance — the kernel's VMEM
+arithmetic is what the §Roofline compute term prices."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import best_moves
+from repro.graphs import rmat
+from repro.kernels.gain import gain_scoreboard, pad_for_kernel
+from repro.kernels.gain.ref import gain_scoreboard_ref
+
+
+def bench(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(emit):
+    g = rmat(scale=11, edge_factor=6, seed=1)
+    k = 64
+    labels = jax.random.randint(jax.random.PRNGKey(0), (g.n,), 0, k, dtype=jnp.int32)
+    maxdeg = int(np.asarray(g.degrees).max())
+    nbr, nbr_w = pad_for_kernel(g, maxdeg)
+    cap = jnp.full((k,), jnp.inf)
+
+    us_seg = bench(lambda: best_moves(g, labels, k))
+    us_pal = bench(lambda: gain_scoreboard(nbr, nbr_w, labels, g.nw, cap, k))
+    emit("kernel.gain.segment_sum_path", us_seg, g.m / max(us_seg, 1e-9))
+    emit("kernel.gain.pallas_interpret", us_pal, g.m / max(us_pal, 1e-9))
+
+    # analytic kernel roofline on v5e for this shape (per §Roofline constants)
+    n_pad = nbr.shape[0]
+    d = nbr.shape[1]
+    kp = ((k + 127) // 128) * 128
+    flops = 3.0 * n_pad * d * kp           # compare+select+accumulate per cell
+    bytes_ = n_pad * d * 8 + n_pad * kp * 4
+    emit("kernel.gain.v5e_compute_us", 0, flops / 197e12 * 1e6)
+    emit("kernel.gain.v5e_memory_us", 0, bytes_ / 819e9 * 1e6)

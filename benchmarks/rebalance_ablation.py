@@ -1,0 +1,66 @@
+"""Rebalance ablation (paper §2 + footnote 1): probabilistic vs greedy vs
+hybrid.  Measures (a) rounds to reach balance from a heavily overloaded
+partition, (b) cut damage of the rebalance."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import (
+    edge_cut,
+    greedy_epoch,
+    l_max,
+    partition,
+    probabilistic_pass,
+    rebalance,
+    total_overload,
+)
+from repro.graphs import chung_lu_powerlaw, grid2d
+
+
+def overload_labels(g, k, frac=0.7, seed=0):
+    """frac of vertices forced into block 0 starting from a good partition."""
+    res = partition(g, k=k, eps=0.03, seed=seed, refiner="dlp")
+    lab = np.asarray(res.labels).copy()
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(g.n)[: int(frac * g.n)]
+    lab[idx] = 0
+    return jnp.asarray(lab)
+
+
+def drive(g, labels0, k, lmax, mode, max_iters=40):
+    labels = labels0
+    key = jax.random.PRNGKey(0)
+    for it in range(max_iters):
+        ov = float(total_overload(g, labels, k, lmax))
+        if ov <= 0:
+            return labels, it
+        if mode == "greedy":
+            labels = greedy_epoch(g, labels, k, lmax)
+        elif mode == "prob":
+            key, sub = jax.random.split(key)
+            labels = probabilistic_pass(g, labels, k, lmax, sub)
+        else:  # hybrid (paper)
+            key, sub = jax.random.split(key)
+            return rebalance(g, labels, k, lmax, sub).labels, it
+    return labels, max_iters
+
+
+def main(emit):
+    for name, g in (("grid", grid2d(48, 48)),
+                    ("rhg", chung_lu_powerlaw(3000, avg_deg=10, seed=1))):
+        k = 8
+        lmax = l_max(g, k, 0.03)
+        labels0 = overload_labels(g, k)
+        cut0 = float(edge_cut(g, labels0))
+        for mode in ("greedy", "prob", "hybrid"):
+            (labels, iters), sec = timed(drive, g, labels0, k, lmax, mode)
+            ov = float(total_overload(g, labels, k, lmax))
+            cut = float(edge_cut(g, labels))
+            emit(f"rebalance.{name}.{mode}.iters", sec * 1e6, iters)
+            emit(f"rebalance.{name}.{mode}.residual_overload", 0, ov)
+            emit(f"rebalance.{name}.{mode}.cut_damage_pct", 0,
+                 100.0 * (cut - cut0) / max(cut0, 1e-9))

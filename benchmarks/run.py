@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run fig1a kernel`` (default: all).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig1a", "benchmarks.fig1a_quality"),
+    ("fig1b", "benchmarks.fig1bc_competitors"),
+    ("fig1d", "benchmarks.fig1d_time"),
+    ("fig2", "benchmarks.fig2_scaling"),
+    ("table1", "benchmarks.table1_cut_vs_p"),
+    ("rebalance", "benchmarks.rebalance_ablation"),
+    ("kernel", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    rows: list[tuple[str, float, float]] = []
+
+    def emit(name: str, us_per_call: float, derived: float):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for key, modname in MODULES:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main(emit)
+            emit(f"{key}.__total_wall_sec", (time.time() - t0) * 1e6,
+                 time.time() - t0)
+        except Exception as e:  # keep the harness going; a failed figure is a row
+            traceback.print_exc()
+            emit(f"{key}.__FAILED::{type(e).__name__}", 0, -1)
+
+
+if __name__ == "__main__":
+    main()

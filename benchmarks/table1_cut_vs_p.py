@@ -1,0 +1,47 @@
+"""Table 1 — edge cut vs PE count (quality must not degrade with P; the
+paper observes slight improvement at larger P)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(P)d"
+import json
+from repro.graphs import grid2d, chung_lu_powerlaw
+from repro.distributed import dpartition
+
+out = {}
+for name, g in (("grid", grid2d(48, 48)),
+                ("rhg", chung_lu_powerlaw(2048, avg_deg=10, seed=3))):
+    r = dpartition(g, k=16, P=%(P)d, seed=0, refiner="d4xjet", max_inner=10)
+    out[name] = {"cut": r.cut, "imb": r.imbalance}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def main(emit):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    cuts = {}
+    for P in (1, 2, 4, 8):
+        env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu")
+        proc = subprocess.run([sys.executable, "-c", SCRIPT % {"P": P}],
+                              env=env, capture_output=True, text=True,
+                              timeout=1800)
+        if proc.returncode != 0:
+            emit(f"table1.P{P}.FAILED", 0, -1)
+            continue
+        for line in proc.stdout.splitlines():
+            if line.startswith("RESULT::"):
+                res = json.loads(line[len("RESULT::"):])
+                cuts[P] = res
+                for name, v in res.items():
+                    emit(f"table1.cut.{name}.P{P}", 0, v["cut"])
+    if 1 in cuts and 8 in cuts:
+        for name in cuts[1]:
+            emit(f"table1.cut_ratio_P8_over_P1.{name}", 0,
+                 cuts[8][name]["cut"] / max(cuts[1][name]["cut"], 1e-9))

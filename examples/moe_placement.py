@@ -1,0 +1,43 @@
+"""Paper ↔ framework bridge: use the d4xJet partitioner to place MoE experts
+on devices, minimising cross-device co-activation traffic.
+
+    PYTHONPATH=src python examples/moe_placement.py
+"""
+
+import numpy as np
+
+from repro.sharding.placement import place_experts
+
+
+def synth_routing(T=20_000, E=64, topk=6, n_groups=8, seed=0):
+    """Synthetic router trace with latent topical structure: tokens prefer
+    experts from one latent group (what co-activation looks like in practice)."""
+    rng = np.random.default_rng(seed)
+    group_of_token = rng.integers(0, n_groups, T)
+    experts_by_group = rng.permutation(E).reshape(n_groups, E // n_groups)
+    ids = np.zeros((T, topk), np.int64)
+    for t in range(T):
+        g = group_of_token[t]
+        own = experts_by_group[g]
+        k_own = min(topk - 1, len(own))
+        pick = rng.choice(own, k_own, replace=False)
+        rest = rng.integers(0, E, topk - k_own)
+        ids[t] = np.concatenate([pick, rest])
+    return ids
+
+
+def main():
+    E, D = 64, 8
+    ids = synth_routing(E=E)
+    placement, cross, cross_rand = place_experts(ids, E, D)
+    sizes = np.bincount(placement, minlength=D)
+    print(f"experts={E} devices={D} group sizes={sizes.tolist()}")
+    print(f"cross-device co-activation traffic: partitioned {cross:.1%} "
+          f"vs random {cross_rand:.1%}")
+    print(f"reduction: {100 * (1 - cross / max(cross_rand, 1e-9)):.1f}% "
+          "less all-to-all affinity traffic")
+    assert cross < cross_rand
+
+
+if __name__ == "__main__":
+    main()

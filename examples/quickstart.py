@@ -1,0 +1,24 @@
+"""Quickstart: partition a generated graph with d4xJet and inspect quality.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import partition
+from repro.graphs import grid2d, rmat
+
+
+def main():
+    for name, g in (("grid 64x64", grid2d(64, 64)),
+                    ("rmat-12 (power law)", rmat(scale=12, edge_factor=8))):
+        print(f"\n=== {name}: n={g.n} m={g.m}")
+        for refiner in ("dlp", "d4xjet"):
+            res = partition(g, k=8, eps=0.03, seed=0, refiner=refiner,
+                            max_inner=16)
+            print(f"  {refiner:8s} cut={res.cut:10.0f} imbalance={res.imbalance:.4f} "
+                  f"levels={res.levels}")
+        print("  (d4xJet = paper configuration: 4 temperature rounds of "
+              "unconstrained Jet + probabilistic rebalancing)")
+
+
+if __name__ == "__main__":
+    main()

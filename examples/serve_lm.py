@@ -1,0 +1,46 @@
+"""Batched greedy decoding with a KV cache (serve path).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+from repro.train import build_serve_step
+
+
+def main():
+    cfg = configs.get_smoke("granite_3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    serve = jax.jit(build_serve_step(model), static_argnums=())
+
+    B, prompt_len, gen_len = 4, 8, 24
+    s_max = prompt_len + gen_len
+    cache = model.cache_init(B, s_max, jnp.float32)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len), 0,
+                                cfg.vocab_size)
+
+    # prefill token-by-token (decode path doubles as prefill at smoke scale)
+    tok = prompt[:, 0]
+    for t in range(prompt_len):
+        tok_next, logits, cache = serve(params, cache, {"tokens": prompt[:, t]},
+                                        jnp.int32(t))
+    out = []
+    t0 = time.perf_counter()
+    tok = tok_next
+    for t in range(prompt_len, s_max):
+        tok, logits, cache = serve(params, cache, {"tokens": tok}, jnp.int32(t))
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"generated {gen.shape} tokens, {gen_len / dt:.1f} tok/s/batch")
+    print("sequences:", gen[:2].tolist())
+
+
+if __name__ == "__main__":
+    main()

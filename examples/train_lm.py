@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+a learnable synthetic stream, with checkpointing + restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --arch qwen1_5_0_5b
+
+The config is the assigned architecture scaled to ~100M params (depth/width
+reduced, identical block structure), because this box is one CPU core.
+Resume-after-kill works: rerun the same command and it continues from the
+last committed checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import MarkovTextDataset
+from repro.models import build_model
+from repro.optim import make_optimizer, wsd_schedule
+from repro.train import Trainer, TrainerConfig, build_train_step
+
+
+def scaled_100m(arch: str):
+    cfg = configs.get(arch)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "_100m",
+        n_layers=min(cfg.n_layers, 6),
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=min(8, max(1, cfg.n_kv_heads * 8 // max(cfg.n_heads, 1))),
+        d_ff=1536 if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 8192),
+        head_dim=64,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        d_expert=256 if cfg.n_experts else 0,
+        q_lora_rank=128 if cfg.attn_type == "mla" else 0,
+        kv_lora_rank=64 if cfg.attn_type == "mla" else 0,
+        qk_nope_head_dim=32 if cfg.attn_type == "mla" else 0,
+        qk_rope_head_dim=16 if cfg.attn_type == "mla" else 0,
+        v_head_dim=32 if cfg.attn_type == "mla" else 0,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = scaled_100m(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M")
+
+    opt = make_optimizer(
+        "adamw", lr=wsd_schedule(3e-3, warmup=20, total=args.steps),
+        weight_decay=0.01,
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    data = MarkovTextDataset(cfg.vocab_size, seq_len=args.seq,
+                             global_batch=args.batch, seed=0)
+    print(f"data: first-order Markov chain, conditional entropy "
+          f"{data.entropy:.3f} nats/token (loss floor)")
+
+    step_fn = build_train_step(model, opt)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=50,
+                         max_steps=args.steps, log_every=10)
+    trainer = Trainer(step_fn, params, opt_state, data, tcfg)
+    hist = trainer.run(args.steps - trainer.step)
+    if hist:
+        print(f"\nloss: {hist[0]['loss']:.3f} → {hist[-1]['loss']:.3f} "
+              f"(floor {data.entropy:.3f})")
+
+
+if __name__ == "__main__":
+    main()

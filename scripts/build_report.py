@@ -1,0 +1,120 @@
+"""Render the §Roofline table (markdown) from results/dryrun/*.json.
+
+Recomputes the analytic memory term + bottleneck uniformly (early sweep
+records predate the analytic-HBM fix), so the table is consistent."""
+
+import glob
+import json
+import os
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _fake_mesh(mesh_str):
+    if mesh_str == "2x16x16":
+        return SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16},
+                               devices=np.empty(512))
+    return SimpleNamespace(shape={"data": 16, "model": 16},
+                           devices=np.empty(256))
+
+
+def _recompute(r):
+    if (r.get("status") != "ok" or r["arch"].startswith("paper_partitioner")
+            or "+" in r["arch"]):
+        return r
+    from repro import configs
+    from repro.launch.dryrun import ARCH_POLICY, analytic_hbm_bytes, analytic_memory
+
+    cfg = configs.get(r["arch"])
+    shape = configs.SHAPES[r["shape"]]
+    mesh = _fake_mesh(r["mesh"])
+    zop = ARCH_POLICY.get(r["arch"], {}).get("zero_over_pod", False)
+    r = dict(r)
+    r["analytic_mem"] = analytic_memory(cfg, shape, mesh, zop)
+    hbm = analytic_hbm_bytes(cfg, shape, mesh, zop)
+    r["memory_s"] = hbm / 819e9
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    r["bottleneck"] = max(terms, key=terms.get)
+    return r
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = [
+    "starcoder2_15b", "minicpm_2b", "granite_3_2b", "qwen1_5_0_5b",
+    "deepseek_v3_671b", "deepseek_moe_16b", "musicgen_medium",
+    "llama3_2_vision_90b", "zamba2_7b", "xlstm_125m",
+    "paper_partitioner_jet",
+]
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def load(d):
+    recs = {}
+    for fn in glob.glob(os.path.join(d, "*.json")):
+        with open(fn) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = _recompute(r)
+    return recs
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    recs = load(d)
+    print(f"### Roofline table — mesh {mesh} (256 chips)"
+          if mesh == "16x16" else f"### Mesh {mesh} (512 chips)")
+    print()
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "MODEL_FLOPS/HLO | mem/dev (analytic) | fits 16G | compile |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                if a != "paper_partitioner_jet":
+                    print(f"| {a} | {s} | — | — | — | *pending* | | | | |")
+                continue
+            if r.get("status") == "skipped":
+                print(f"| {a} | {s} | — | — | — | *skipped: "
+                      f"{r.get('reason','')[:40]}* | | | | |")
+                continue
+            if r.get("status") != "ok":
+                print(f"| {a} | {s} | — | — | — | **{r.get('status')}** | | | | |")
+                continue
+            am = r.get("analytic_mem", {})
+            print("| {a} | {s} | {c} | {m} | {k} | **{b}** | {u:.2f} | {mem:.1f} GB | {fit} | {cs:.0f}s |".format(
+                a=a, s=s,
+                c=fmt_s(r.get("compute_s")), m=fmt_s(r.get("memory_s")),
+                k=fmt_s(r.get("collective_s")), b=r.get("bottleneck", "?"),
+                u=r.get("useful_ratio", 0.0),
+                mem=am.get("total_b", 0) / 1e9,
+                fit="✓" if am.get("fits_16g") else "✗",
+                cs=r.get("compile_s", 0),
+            ))
+    # partitioner + §Perf variant cells (hillclimbs)
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh or r.get("status") != "ok":
+            continue
+        if not (a.startswith("paper_partitioner") or "+" in a):
+            continue
+        print("| {a} | {s} | {c} | {m_} | {k} | **{b}** | | | | {cs:.0f}s |".format(
+            a=a, s=s, c=fmt_s(r.get("compute_s")), m_=fmt_s(r.get("memory_s")),
+            k=fmt_s(r.get("collective_s")), b=r.get("bottleneck", "?"),
+            cs=r.get("compile_s", 0)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> marker)."""
+
+import io
+import subprocess
+import sys
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def run(mesh):
+    out = subprocess.run(
+        [sys.executable, "scripts/build_report.py", "results/dryrun", mesh],
+        capture_output=True, text=True, check=True)
+    return out.stdout
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    tables = run("16x16") + "\n" + run("2x16x16")
+    if MARK in doc:
+        doc = doc.replace(MARK, tables)
+    else:
+        # refresh: replace between the §Roofline bullet list and §Perf
+        import re
+        doc = re.sub(
+            r"### Roofline table — mesh 16x16.*?(?=\n---\n\n## §Perf)",
+            tables + "\n", doc, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: distributed unconstrained local search for multilevel graph
+partitioning (Sanders & Seemaier 2024) in JAX, plus the assigned LM
+framework substrate.  See DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

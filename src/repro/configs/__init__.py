@@ -1,0 +1,77 @@
+"""Architecture registry: exact assigned configs + reduced smoke configs.
+
+``get(arch)`` returns the full config; ``get_smoke(arch)`` a reduced config
+of the same family for CPU tests.  ``SHAPES`` defines the assigned input
+shapes; ``shape_applicable`` encodes the long_500k / decode skip rules
+(documented in DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "starcoder2_15b",
+    "minicpm_2b",
+    "granite_3_2b",
+    "qwen1_5_0_5b",
+    "deepseek_v3_671b",
+    "deepseek_moe_16b",
+    "musicgen_medium",
+    "llama3_2_vision_90b",
+    "zamba2_7b",
+    "xlstm_125m",
+)
+
+# canonical dashed aliases (CLI --arch accepts either)
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic sequence mixing — the only ones that run long_500k
+SUBQUADRATIC = {"zamba2_7b", "xlstm_125m"}
+
+
+def canon(arch: str) -> str:
+    return ALIASES.get(arch, arch)
+
+
+def get(arch: str):
+    arch = canon(arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.config()
+
+
+def get_smoke(arch: str):
+    arch = canon(arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke()
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    arch = canon(arch)
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 512k dense KV decode excluded by brief"
+    return True, ""
+
+
+def all_cells():
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            yield a, s

@@ -1,0 +1,23 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066]: 2 shared + 64 routed top-6,
+fine-grained experts (d_expert=1408), 1 leading dense layer (d_ff 10944)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek_moe_16b", family="moe",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=10944, vocab_size=102400, act="silu",
+        n_experts=64, n_shared_experts=2, experts_per_token=6,
+        d_expert=1408, n_dense_layers=1,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek_moe_smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, act="silu",
+        n_experts=8, n_shared_experts=2, experts_per_token=2,
+        d_expert=24, n_dense_layers=1,
+    )

@@ -1,0 +1,33 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437]: MLA, 1 shared + 256 routed top-8
+(aux-loss-free balancing), 3 leading dense layers, MTP.
+
+Assigned d_ff=2048 is the per-expert (moe_intermediate) width; the three
+dense layers use the tech report's 18432.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek_v3_671b", family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+        d_ff=18432, vocab_size=129280, act="silu",
+        n_experts=256, n_shared_experts=1, experts_per_token=8,
+        d_expert=2048, n_dense_layers=3, router_aux_free=True,
+        attn_type="mla", q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+        mtp_depth=1,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek_v3_smoke", family="moe",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, act="silu",
+        n_experts=8, n_shared_experts=1, experts_per_token=2,
+        d_expert=32, n_dense_layers=1, router_aux_free=True,
+        attn_type="mla", q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        mtp_depth=1,
+    )

@@ -1,0 +1,18 @@
+"""Granite-3.0-2B [hf:ibm-granite/granite-3.0-2b-base]: dense GQA(kv=8)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite_3_2b", family="dense",
+        n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab_size=49155, act="silu", tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite_smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=192, vocab_size=256, act="silu", tie_embeddings=True,
+    )

@@ -1,0 +1,22 @@
+"""Llama-3.2-Vision-90B [hf:meta-llama/Llama-3.2-90B-Vision; unverified]:
+dense GQA(kv=8) with gated cross-attention layers every 5th layer onto
+precomputed vision patch embeddings (ViT frontend is a STUB per the brief)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3_2_vision_90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=28672, vocab_size=128256, act="silu", rope_theta=5e5,
+        cross_attn_every=5, n_vision_tokens=1601,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama_vision_smoke", family="vlm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=256, act="silu",
+        cross_attn_every=2, n_vision_tokens=16,
+    )

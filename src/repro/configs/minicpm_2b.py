@@ -1,0 +1,18 @@
+"""MiniCPM-2B [arXiv:2404.06395]: llama-like dense, MHA(36), tied emb, WSD."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm_2b", family="dense",
+        n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+        d_ff=5760, vocab_size=122753, act="silu", tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm_smoke", family="dense",
+        n_layers=2, d_model=72, n_heads=6, n_kv_heads=6,
+        d_ff=160, vocab_size=256, act="silu", tie_embeddings=True,
+    )

@@ -1,0 +1,23 @@
+"""MusicGen-medium [arXiv:2306.05284]: decoder-only transformer over EnCodec
+tokens.  The EnCodec frontend is a STUB per the brief — input_specs provides
+precomputed frame embeddings (B, S, d); the backbone predicts codebook
+tokens (vocab 2048)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen_medium", family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab_size=2048, act="gelu",
+        embed_inputs=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen_smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=64, act="gelu",
+        embed_inputs=False,
+    )

@@ -1,0 +1,20 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B]: dense MHA(16) with QKV bias."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1_5_0_5b", family="dense",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=2816, vocab_size=151936, act="silu", qkv_bias=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen_smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, act="silu", qkv_bias=True,
+        tie_embeddings=True,
+    )

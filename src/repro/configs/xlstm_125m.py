@@ -1,0 +1,21 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified]: alternating mLSTM / sLSTM
+blocks (d_ff=0: the blocks carry their own projections)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm_125m", family="ssm",
+        n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=50304, act="gelu",
+        layer_pattern=("mlstm", "slstm"),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm_smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=256, act="gelu",
+        layer_pattern=("mlstm", "slstm"),
+    )

@@ -1,0 +1,26 @@
+"""Zamba2-7B [arXiv:2411.15242; unverified]: Mamba2 backbone with shared
+attention blocks.  Pattern approximation: (mamba2, mamba2, attn) x 27 = 81
+layers (the real model interleaves a shared transformer block; DESIGN.md
+records the simplification).  long_500k uses a sliding window (8192) for the
+attention blocks — the SSM carries long-range state."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab_size=32000, act="silu",
+        layer_pattern=("mamba2", "mamba2", "attn"),
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_smoke", family="hybrid",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, act="silu",
+        layer_pattern=("mamba2", "mamba2", "attn"),
+        ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_chunk=32,
+    )

@@ -1,0 +1,16 @@
+# The paper's primary contribution: distributed unconstrained local search
+# (Jet) + probabilistic rebalancing inside a multilevel graph partitioner.
+from repro.core.graph import PAD, Graph, from_coo, pad_graph, to_padded, to_padded_fast  # noqa: F401
+from repro.core.jet import jet_round  # noqa: F401
+from repro.core.multilevel import PartitionResult, partition  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    best_moves,
+    block_weights,
+    conn_dense,
+    edge_cut,
+    imbalance,
+    l_max,
+    total_overload,
+)
+from repro.core.rebalance import greedy_epoch, probabilistic_pass, rebalance  # noqa: F401
+from repro.core.refine import jet_refine, lp_refine_balanced, temperature_schedule  # noqa: F401

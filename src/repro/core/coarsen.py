@@ -1,0 +1,153 @@
+"""Multilevel coarsening: size-constrained label-propagation clustering +
+graph contraction (the dKaMinPar coarsening scheme the paper builds on).
+
+Clustering runs on device (jit) without materialising an (n, n_clusters)
+table: per-vertex best-neighbouring-cluster is computed by lexsorting edge
+(src, cluster[dst]) pairs and doing grouped reductions — the sparse analogue
+of ``conn_dense`` that works when the "number of blocks" is Θ(n).
+
+Contraction is a host-side (numpy) data-management step: level sizes are
+data-dependent, so the multilevel driver is a host loop anyway (dKaMinPar
+synchronises globally per level as well).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, from_coo
+
+
+@partial(jax.jit, static_argnames=())
+def _best_neighbor_cluster(g: Graph, cluster: jax.Array):
+    """For each vertex: (best_cluster, best_conn) over neighbouring clusters.
+
+    Grouped reduction over lexsorted (src, cluster[dst]) pairs.
+    """
+    cl_dst = cluster[g.safe_col()]
+    w = jnp.where(g.edge_mask, g.ew, 0.0)
+    # exclude self-cluster edges from "join" scoring? No: conn to own cluster
+    # competes fairly (a vertex stays if its own cluster is strongest).
+    order = jnp.lexsort((cl_dst, g.src))
+    src_s = g.src[order]
+    cl_s = cl_dst[order]
+    w_s = w[order]
+
+    first = jnp.concatenate(
+        [jnp.array([True]), (src_s[1:] != src_s[:-1]) | (cl_s[1:] != cl_s[:-1])]
+    )
+    gid = jnp.cumsum(first) - 1  # group id per sorted edge, groups ≤ m
+
+    gsum = jax.ops.segment_sum(w_s, gid, num_segments=g.m)
+    gsrc = jax.ops.segment_max(jnp.where(first, src_s, -1), gid, num_segments=g.m)
+    gcl = jax.ops.segment_max(jnp.where(first, cl_s, -1), gid, num_segments=g.m)
+    gsrc_safe = jnp.maximum(gsrc, 0)
+
+    vmax = jax.ops.segment_max(gsum, gsrc_safe, num_segments=g.n)
+    vmax = jnp.where(jnp.isfinite(vmax), vmax, 0.0)
+
+    # among groups achieving the max, pick the smallest cluster id (determinism)
+    is_best = (gsum >= vmax[gsrc_safe]) & (gsrc >= 0)
+    cand_cl = jnp.where(is_best, gcl, jnp.iinfo(jnp.int32).max)
+    best_cl = jax.ops.segment_min(cand_cl, gsrc_safe, num_segments=g.n)
+    has = best_cl != jnp.iinfo(jnp.int32).max
+    best_cl = jnp.where(has, best_cl, cluster)
+    return best_cl.astype(jnp.int32), vmax
+
+
+@partial(jax.jit, static_argnames=())
+def cluster_round(
+    g: Graph,
+    cluster: jax.Array,
+    cl_weight_cap: jax.Array,
+    key: jax.Array,
+):
+    """One LP clustering round with probabilistic size-cap admission."""
+    best_cl, best_conn = _best_neighbor_cluster(g, cluster)
+    cl_w = jax.ops.segment_sum(g.nw, cluster, num_segments=g.n)
+    want = (best_cl != cluster) & (best_conn > 0)
+    want &= cl_w[best_cl] + g.nw <= cl_weight_cap
+
+    # in-expectation cap: admit into cluster c with prob room_c / inflow_c
+    inflow = jax.ops.segment_sum(jnp.where(want, g.nw, 0.0), best_cl, num_segments=g.n)
+    room = jnp.maximum(cl_weight_cap - cl_w, 0.0)
+    p = jnp.where(inflow > 0, jnp.clip(room / jnp.maximum(inflow, 1e-9), 0.0, 1.0), 1.0)
+    accept = want & (jax.random.uniform(key, (g.n,)) < p[best_cl])
+    return jnp.where(accept, best_cl, cluster), jnp.sum(accept)
+
+
+def cluster(
+    g: Graph,
+    weight_cap: float,
+    key: jax.Array,
+    rounds: int = 5,
+) -> jax.Array:
+    """Run a few clustering rounds; returns (n,) cluster leader ids."""
+    cl = jnp.arange(g.n, dtype=jnp.int32)
+    cap = jnp.asarray(weight_cap, jnp.float32)
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        cl, moved = cluster_round(g, cl, cap, sub)
+        if int(moved) == 0:
+            break
+    # path-compress: follow leader once (LP may chain v→u→w between rounds)
+    cl = cl[cl]
+    return cl
+
+
+def contract(g: Graph, cluster) -> tuple[Graph, jax.Array]:
+    """Contract clusters into a coarse graph.  Host-side numpy.
+
+    Returns (coarse_graph, mapping) with ``mapping[v] = coarse id of v`` so
+    label projection during uncoarsening is ``labels_fine = labels_coarse[mapping]``.
+    """
+    cl = np.asarray(cluster, dtype=np.int64)
+    uniq, mapping = np.unique(cl, return_inverse=True)
+    nc = int(len(uniq))
+
+    nw_c = np.zeros(nc, dtype=np.float32)
+    np.add.at(nw_c, mapping, np.asarray(g.nw))
+
+    live = np.asarray(g.edge_mask)
+    cu = mapping[np.asarray(g.src)[live]]
+    cv = mapping[np.asarray(g.safe_col())[live]]
+    w = np.asarray(g.ew)[live]
+    keep = cu != cv  # intra-cluster edges vanish
+    cu, cv, w = cu[keep], cv[keep], w[keep]
+
+    # coalesce parallel edges; from_coo would double them if we symmetrised,
+    # but (cu, cv) already contains both directions — keep as directed COO.
+    coarse = from_coo(nc, cu, cv, w, nw=nw_c, symmetrize=False)
+    return coarse, jnp.asarray(mapping.astype(np.int32))
+
+
+def coarsen_hierarchy(
+    g: Graph,
+    k: int,
+    key: jax.Array,
+    coarsen_until: int | None = None,
+    max_levels: int = 30,
+    shrink_min: float = 0.05,
+):
+    """Iteratively coarsen; returns (levels, coarsest) where levels is a list
+    of (fine_graph, mapping) from finest to coarsest-1."""
+    if coarsen_until is None:
+        coarsen_until = max(512, 16 * k)
+    total_w = float(g.total_node_weight)
+    levels = []
+    cur = g
+    while cur.n > coarsen_until and len(levels) < max_levels:
+        # max cluster weight: a cluster must never exceed what fits a block
+        cap = max(total_w / coarsen_until, float(np.asarray(cur.nw).max()))
+        key, sub = jax.random.split(key)
+        cl = cluster(cur, cap, sub)
+        coarse, mapping = contract(cur, cl)
+        if coarse.n >= (1.0 - shrink_min) * cur.n:
+            break  # diminishing returns — stop coarsening
+        levels.append((cur, mapping))
+        cur = coarse
+    return levels, cur

@@ -1,0 +1,221 @@
+"""Static-shape graph representation for XLA.
+
+The partitioner operates on an undirected graph stored as *directed* CSR
+(every undirected edge {u, v} appears as (u, v) and (v, u)), exactly as in the
+paper's distributed model: the directed copy (u, v) lives with the tail u.
+
+Two materialisations are kept:
+
+* **CSR / COO hybrid** — ``row_ptr`` (n+1,), ``col`` (m,), ``src`` (m,)
+  (``src[e]`` is the tail of edge e, i.e. the expanded row index) and edge
+  weights ``ew`` (m,). ``src`` makes every per-edge computation a gather +
+  ``segment_sum`` — the natural XLA formulation.
+* **Padded adjacency** — ``(n, max_deg)`` neighbour / weight matrices used by
+  the Pallas gain kernel (dense VMEM tiles; TPU prefers regular shapes).
+  Derived lazily via :func:`to_padded`.
+
+Shapes are static; padding edges use ``col == PAD`` with weight 0 so they are
+inert in every reduction.  All arrays are JAX arrays; :class:`Graph` is a
+pytree so it can flow through ``jit`` / ``shard_map`` unimpeded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = jnp.iinfo(jnp.int32).max  # sentinel column for padding edges
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Immutable static-shape graph pytree.
+
+    ``n``/``m`` are static (aux) fields — they define array shapes.  ``m`` is
+    the number of *directed* edge slots including padding; ``m_real`` (traced)
+    counts live directed edges.
+    """
+
+    row_ptr: jax.Array  # (n+1,) int32
+    col: jax.Array      # (m,)  int32, PAD for padding slots
+    src: jax.Array      # (m,)  int32, tail vertex of each slot (always valid)
+    ew: jax.Array       # (m,)  float32, 0 for padding slots
+    nw: jax.Array       # (n,)  float32, vertex weights
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def degrees(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    @property
+    def edge_mask(self) -> jax.Array:
+        """(m,) bool — True for live (non-padding) edge slots."""
+        return self.col != PAD
+
+    @property
+    def total_node_weight(self) -> jax.Array:
+        return jnp.sum(self.nw)
+
+    @property
+    def total_edge_weight(self) -> jax.Array:
+        """Sum of directed edge weights (2x undirected total)."""
+        return jnp.sum(self.ew)
+
+    def safe_col(self) -> jax.Array:
+        """Column indices with padding redirected to vertex 0 (weight-0 edges
+        make the contribution inert)."""
+        return jnp.where(self.edge_mask, self.col, 0)
+
+
+# --------------------------------------------------------------------------
+# Constructors
+# --------------------------------------------------------------------------
+
+def from_coo(
+    n: int,
+    u: np.ndarray,
+    v: np.ndarray,
+    w: Optional[np.ndarray] = None,
+    nw: Optional[np.ndarray] = None,
+    symmetrize: bool = True,
+) -> Graph:
+    """Build a :class:`Graph` on the host from a COO edge list.
+
+    ``u, v`` are undirected endpoints.  Self loops and duplicate edges are
+    coalesced (weights summed).  Host-side (numpy) — graph construction is a
+    data-pipeline step, not a compute step.
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    if w is None:
+        w = np.ones(u.shape[0], dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+
+    keep = u != v  # drop self loops — they never contribute to a cut
+    u, v, w = u[keep], v[keep], w[keep]
+
+    if symmetrize:
+        uu = np.concatenate([u, v])
+        vv = np.concatenate([v, u])
+        ww = np.concatenate([w, w])
+    else:
+        uu, vv, ww = u, v, w
+
+    # Coalesce duplicates.
+    key = uu * n + vv
+    order = np.argsort(key, kind="stable")
+    key, ww = key[order], ww[order]
+    uniq, start = np.unique(key, return_index=True)
+    wsum = np.add.reduceat(ww, start) if len(ww) else ww
+    uu = (uniq // n).astype(np.int32)
+    vv = (uniq % n).astype(np.int32)
+
+    m = int(len(uniq))
+    row_ptr = np.zeros(n + 1, dtype=np.int32)
+    np.add.at(row_ptr, uu + 1, 1)
+    row_ptr = np.cumsum(row_ptr, dtype=np.int64).astype(np.int32)
+
+    if nw is None:
+        nw = np.ones(n, dtype=np.float32)
+    nw = np.asarray(nw, dtype=np.float32)
+
+    return Graph(
+        row_ptr=jnp.asarray(row_ptr),
+        col=jnp.asarray(vv),
+        src=jnp.asarray(uu),
+        ew=jnp.asarray(wsum.astype(np.float32)),
+        nw=jnp.asarray(nw),
+        n=n,
+        m=m,
+    )
+
+
+def pad_graph(g: Graph, n_pad: int, m_pad: int) -> Graph:
+    """Pad vertex/edge arrays to (n_pad, m_pad) with inert entries.
+
+    Padding vertices get weight 0 and no edges; padding edge slots get
+    ``col == PAD`` / weight 0 and ``src`` pointing at vertex 0.
+    """
+    assert n_pad >= g.n and m_pad >= g.m
+    row_ptr = jnp.concatenate(
+        [g.row_ptr, jnp.full((n_pad - g.n,), g.row_ptr[-1], jnp.int32)]
+    )
+    col = jnp.concatenate([g.col, jnp.full((m_pad - g.m,), PAD, jnp.int32)])
+    src = jnp.concatenate([g.src, jnp.zeros((m_pad - g.m,), jnp.int32)])
+    ew = jnp.concatenate([g.ew, jnp.zeros((m_pad - g.m,), jnp.float32)])
+    nw = jnp.concatenate([g.nw, jnp.zeros((n_pad - g.n,), jnp.float32)])
+    return Graph(row_ptr=row_ptr, col=col, src=src, ew=ew, nw=nw, n=n_pad, m=m_pad)
+
+
+# --------------------------------------------------------------------------
+# Padded-adjacency view (Pallas kernel input format)
+# --------------------------------------------------------------------------
+
+def to_padded(g: Graph, max_deg: Optional[int] = None):
+    """Return ``(nbr, nbr_w)`` with shapes (n, max_deg).
+
+    ``nbr`` holds neighbour ids (PAD where unused), ``nbr_w`` the edge weight
+    (0 where unused).  Vertices with degree > max_deg raise on the host.
+    """
+    deg = np.asarray(g.degrees)
+    if max_deg is None:
+        max_deg = int(deg.max()) if len(deg) else 1
+    max_deg = max(1, int(max_deg))
+    if deg.max(initial=0) > max_deg:
+        raise ValueError(f"max degree {deg.max()} exceeds padding width {max_deg}")
+
+    row_ptr = np.asarray(g.row_ptr)
+    col = np.asarray(g.col)
+    ew = np.asarray(g.ew)
+    nbr = np.full((g.n, max_deg), int(PAD), dtype=np.int32)
+    nbr_w = np.zeros((g.n, max_deg), dtype=np.float32)
+    for vtx in range(g.n):  # host-side, construction only
+        s, e = row_ptr[vtx], row_ptr[vtx + 1]
+        nbr[vtx, : e - s] = col[s:e]
+        nbr_w[vtx, : e - s] = ew[s:e]
+    return jnp.asarray(nbr), jnp.asarray(nbr_w)
+
+
+def to_padded_fast(g: Graph, max_deg: int):
+    """Vectorised (device-side) padded-adjacency construction.
+
+    Scatter each edge slot to (src, rank-within-row).  Works under jit; used
+    at every coarse level where the host loop in :func:`to_padded` would be
+    too slow.
+    """
+    rank = jnp.arange(g.m, dtype=jnp.int32) - g.row_ptr[g.src]
+    ok = (rank < max_deg) & g.edge_mask
+    rows = jnp.where(ok, g.src, 0)
+    cols_ = jnp.where(ok, rank, max_deg - 1)
+    nbr = jnp.full((g.n, max_deg), PAD, dtype=jnp.int32)
+    nbr_w = jnp.zeros((g.n, max_deg), dtype=jnp.float32)
+    nbr = nbr.at[rows, cols_].set(jnp.where(ok, g.col, PAD), mode="drop")
+    nbr_w = nbr_w.at[rows, cols_].add(jnp.where(ok, g.ew, 0.0), mode="drop")
+    return nbr, nbr_w
+
+
+def validate(g: Graph) -> None:
+    """Host-side structural validation (tests / data ingestion)."""
+    row_ptr = np.asarray(g.row_ptr)
+    col = np.asarray(g.col)
+    src = np.asarray(g.src)
+    ew = np.asarray(g.ew)
+    assert row_ptr.shape == (g.n + 1,)
+    assert col.shape == src.shape == ew.shape == (g.m,)
+    assert row_ptr[0] == 0
+    assert np.all(np.diff(row_ptr) >= 0)
+    live = col != int(PAD)
+    assert np.all(col[live] >= 0) and np.all(col[live] < g.n)
+    assert np.all(src >= 0) and np.all(src < g.n)
+    assert np.all(ew[~live] == 0)
+    # symmetry of live directed edges (undirected graph)
+    a = set(zip(src[live].tolist(), col[live].tolist()))
+    assert all((b, c) in a for (c, b) in a), "graph is not symmetric"

@@ -1,0 +1,76 @@
+"""Jet move generation + afterburner filter (paper §2, "Jet Refinement").
+
+One Jet round, vectorized for XLA:
+
+1. move candidates   v ∈ M  ⇔  g(v) ≥ −⌊τ·conn(v, V_own)⌋, v unlocked,
+   where g(v) = max_{j≠own} conn(v,V_j) − conn(v,V_own)  (*unconstrained*:
+   the balance constraint is ignored — that is the paper's point);
+2. afterburner: v re-evaluates its move assuming every neighbour u with
+   (g(u), −u) > (g(v), −v) (the virtual gain order; ties broken by id) and
+   u ∈ M moves first; v is dropped if the re-evaluated move would increase
+   the cut;
+3. survivors move and are locked for the next round.
+
+In the distributed setting step 2's neighbour gains arrive via the ghost
+exchange (``distributed/djet.py``); the compute here is identical.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+from repro.core.partition import best_moves
+
+
+class JetRoundResult(NamedTuple):
+    labels: jax.Array   # (n,) new block assignment
+    locked: jax.Array   # (n,) bool — moved this round, locked for the next
+    n_moved: jax.Array  # () int32
+
+
+@partial(jax.jit, static_argnames=("k",))
+def jet_round(
+    g: Graph,
+    labels: jax.Array,
+    locked: jax.Array,
+    k: int,
+    tau: jax.Array | float,
+) -> JetRoundResult:
+    own, gain, target = best_moves(g, labels, k)  # unconstrained: no capacity
+
+    # -- 1. candidate set M (negative-gain moves admitted up to τ·conn_own) --
+    threshold = -jnp.floor(tau * own)
+    cand = (gain >= threshold) & (~locked) & (target != labels)
+    cand &= jnp.isfinite(gain)
+
+    # -- 2. afterburner ------------------------------------------------------
+    # Edge (v, u): u is assumed to have moved to target[u] iff u ∈ M and u
+    # precedes v in the virtual order (g desc, id asc).
+    src = g.src
+    col = g.safe_col()
+    gu, gv = gain[col], gain[src]
+    precede = cand[col] & ((gu > gv) | ((gu == gv) & (col < src)))
+    assumed = jnp.where(precede, target[col], labels[col])
+
+    w = jnp.where(g.edge_mask, g.ew, 0.0)
+    tv = target[src]
+    lv = labels[src]
+    delta_e = w * ((assumed == tv).astype(w.dtype) - (assumed == lv).astype(w.dtype))
+    delta = jax.ops.segment_sum(delta_e, src, num_segments=g.n)
+
+    # "removing all vertices v that would increase the partition cut"
+    move = cand & (delta >= 0.0)
+
+    # -- 3. apply + lock -----------------------------------------------------
+    new_labels = jnp.where(move, target, labels)
+    return JetRoundResult(new_labels, move, jnp.sum(move).astype(jnp.int32))
+
+
+def temperature(i: int | jax.Array, t: int, tau0: float = 0.75, tau1: float = 0.25):
+    """τ_i = τ0 + (i/t)(τ1 − τ0) — the multi-temperature schedule (paper §2)."""
+    return tau0 + (i / t) * (tau1 - tau0)

@@ -1,0 +1,76 @@
+"""Size-constrained label propagation — the dLP baseline (paper Ref. [9]).
+
+Plain dKaMinPar refines only with label propagation; the paper's Fig. 1a
+baseline ("dLP").  Each round every vertex moves to the block maximising
+conn(v, ·) among blocks with remaining capacity, if the gain is positive.
+
+Parallel-apply safety: dKaMinPar guards block weights with atomic CAS.  In a
+bulk-synchronous formulation we instead admit moves into a target block with
+probability min(1, capacity_u / W_u) — the same in-expectation argument the
+paper's Alg. 1 uses — so a round cannot systematically overshoot L_max.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+from repro.core.partition import best_moves, block_weights
+
+
+class LPRoundResult(NamedTuple):
+    labels: jax.Array
+    n_moved: jax.Array
+
+
+@partial(jax.jit, static_argnames=("k",))
+def lp_round(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    lmax: jax.Array,
+    key: jax.Array,
+) -> LPRoundResult:
+    bw = block_weights(g, labels, k)
+    capacity = lmax - bw  # may be negative for overloaded blocks → ineligible
+    own, gain, target = best_moves(g, labels, k, capacity=capacity)
+    want = (gain > 0.0) & jnp.isfinite(gain) & (target != labels)
+
+    # probabilistic admission so target blocks stay ≤ L_max in expectation
+    w_in = jax.ops.segment_sum(jnp.where(want, g.nw, 0.0), target, num_segments=k)
+    p = jnp.where(w_in > 0, jnp.clip(capacity / jnp.maximum(w_in, 1e-9), 0.0, 1.0), 1.0)
+    accept = want & (jax.random.uniform(key, (g.n,)) < p[target])
+
+    new_labels = jnp.where(accept, target, labels)
+    return LPRoundResult(new_labels, jnp.sum(accept).astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("k", "max_rounds"))
+def lp_refine(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    lmax: jax.Array,
+    key: jax.Array,
+    max_rounds: int = 16,
+) -> jax.Array:
+    """Repeat lp_round until no vertex moves or max_rounds is hit."""
+
+    def cond(state):
+        _, _, moved, it = state
+        return (moved > 0) & (it < max_rounds)
+
+    def body(state):
+        labels, key, _, it = state
+        key, sub = jax.random.split(key)
+        res = lp_round(g, labels, k, lmax, sub)
+        return (res.labels, key, res.n_moved, it + 1)
+
+    labels, _, _, _ = jax.lax.while_loop(
+        cond, body, (labels, key, jnp.int32(1), jnp.int32(0))
+    )
+    return labels

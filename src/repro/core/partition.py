@@ -1,0 +1,96 @@
+"""Partition state and metrics.
+
+Terminology follows the paper: partition Π = {V_1..V_k}; balance constraint
+c(V_i) ≤ L_max := (1+ε)·⌈c(V)/k⌉; objective = total weight of cut edges.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+
+def l_max(g: Graph, k: int, eps: float) -> jax.Array:
+    """Balance bound L_max = (1+ε)·⌈c(V)/k⌉ (paper §1)."""
+    return (1.0 + eps) * jnp.ceil(g.total_node_weight / k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def block_weights(g: Graph, labels: jax.Array, k: int) -> jax.Array:
+    """(k,) block weights c(V_i)."""
+    return jax.ops.segment_sum(g.nw, labels, num_segments=k)
+
+
+@jax.jit
+def edge_cut(g: Graph, labels: jax.Array) -> jax.Array:
+    """Total weight of cut edges (undirected; directed copies halved)."""
+    lu = labels[g.src]
+    lv = labels[g.safe_col()]
+    w = jnp.where(g.edge_mask & (lu != lv), g.ew, 0.0)
+    return jnp.sum(w) * 0.5
+
+
+@partial(jax.jit, static_argnames=("k",))
+def imbalance(g: Graph, labels: jax.Array, k: int) -> jax.Array:
+    """max_i c(V_i) / (c(V)/k) − 1."""
+    bw = block_weights(g, labels, k)
+    return jnp.max(bw) / (g.total_node_weight / k) - 1.0
+
+
+@partial(jax.jit, static_argnames=("k",))
+def total_overload(g: Graph, labels: jax.Array, k: int, lmax: jax.Array) -> jax.Array:
+    """Σ_o max(0, c(V_o) − L_max) — the quantity Alg. 1 drives to zero."""
+    bw = block_weights(g, labels, k)
+    return jnp.sum(jnp.maximum(bw - lmax, 0.0))
+
+
+# --------------------------------------------------------------------------
+# Connectivity conn(v, V_j) — the partitioner's core primitive.
+# Dense (n, k) formulation: one segment_sum over edge slots with key
+# src·k + label[dst].  The Pallas kernel (kernels/gain) computes the same
+# quantities tile-wise without materialising (n, k) in HBM.
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def conn_dense(g: Graph, labels: jax.Array, k: int) -> jax.Array:
+    """(n, k) matrix of conn(v, V_j) = Σ_{(v,u)∈E, u∈V_j} ω(v,u)."""
+    lv = labels[g.safe_col()]
+    key = g.src * k + lv
+    w = jnp.where(g.edge_mask, g.ew, 0.0)
+    return jax.ops.segment_sum(w, key, num_segments=g.n * k).reshape(g.n, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def best_moves(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    capacity: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-vertex (own_conn, best_gain, best_target).
+
+    ``capacity`` is an optional (k,) vector of remaining block capacity; a
+    target j is eligible for vertex v iff capacity[j] ≥ c(v) (used by the
+    rebalancer: capacity = L_max − c(V_u) for non-overloaded blocks, −inf
+    otherwise).  With ``capacity=None`` every block except v's own is
+    eligible (Jet move generation).
+
+    best_gain = max_eligible_j conn(v,V_j) − conn(v,V_own); if no block is
+    eligible, best_gain = −inf and best_target = own block.
+    """
+    conn = conn_dense(g, labels, k)
+    own = jnp.take_along_axis(conn, labels[:, None], axis=1)[:, 0]
+    blk = jnp.arange(k, dtype=jnp.int32)
+    eligible = blk[None, :] != labels[:, None]
+    if capacity is not None:
+        eligible &= capacity[None, :] >= g.nw[:, None]
+    masked = jnp.where(eligible, conn, -jnp.inf)
+    best_target = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    best_conn = jnp.max(masked, axis=1)
+    best_gain = best_conn - own
+    best_target = jnp.where(jnp.isfinite(best_conn), best_target, labels)
+    return own, best_gain, best_target

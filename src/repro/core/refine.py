@@ -1,0 +1,131 @@
+"""d4xJet integration (paper §2, "Integration").
+
+t = 4 outer rounds with temperature schedule τ_i interpolating linearly from
+τ0 = 0.75 down to τ1 = 0.25.  Within a round, (Jet refinement → rebalance)
+repeats until ``patience`` = 12 consecutive repetitions fail to improve the
+best *balanced* partition seen; that best partition is kept (Jet is allowed
+to wander through worse/imbalanced states in between — that is the point of
+unconstrained search).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+from repro.core.jet import jet_round
+from repro.core.partition import edge_cut, l_max, total_overload
+from repro.core.rebalance import rebalance
+
+TAU0 = 0.75
+TAU1 = 0.25
+
+
+def temperature_schedule(rounds: int, tau0: float = TAU0, tau1: float = TAU1):
+    """τ_i linear from τ0 (round 0) to τ1 (last round), inclusive.
+
+    The paper writes τ_i = τ0 + (i/t)(τ1 − τ0); with 1-based i ∈ {1..t} this
+    never evaluates τ0, with 0-based it never reaches τ1.  We use the
+    inclusive linear ramp over the t rounds, which matches the stated intent
+    (start hot at 0.75, finish cold at 0.25).
+    """
+    if rounds == 1:
+        return [tau1]  # single-round dJet runs cold (pure Jet)
+    return [tau0 + (i / (rounds - 1)) * (tau1 - tau0) for i in range(rounds)]
+
+
+class JetInnerState(NamedTuple):
+    labels: jax.Array
+    locked: jax.Array
+    best_labels: jax.Array
+    best_cut: jax.Array
+    since_improve: jax.Array
+    it: jax.Array
+    key: jax.Array
+
+
+@partial(jax.jit, static_argnames=("k", "patience", "max_inner"))
+def jet_inner(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    tau: jax.Array | float,
+    lmax: jax.Array,
+    key: jax.Array,
+    patience: int = 12,
+    max_inner: int = 64,
+) -> jax.Array:
+    """One temperature round: repeat (jet_round → rebalance) until `patience`
+    consecutive non-improvements (paper: 12) or `max_inner` iterations."""
+
+    def cond(s: JetInnerState):
+        return (s.since_improve < patience) & (s.it < max_inner)
+
+    def body(s: JetInnerState):
+        key, k_reb = jax.random.split(s.key)
+        jr = jet_round(g, s.labels, s.locked, k, tau)
+        reb = rebalance(g, jr.labels, k, lmax, k_reb)
+        cut = edge_cut(g, reb.labels)
+        balanced = reb.overload <= 0
+        improved = balanced & (cut < s.best_cut)
+        best_labels = jnp.where(improved, reb.labels, s.best_labels)
+        best_cut = jnp.where(improved, cut, s.best_cut)
+        since = jnp.where(improved, 0, s.since_improve + 1)
+        return JetInnerState(
+            reb.labels, jr.locked, best_labels, best_cut, since, s.it + 1, key
+        )
+
+    cut0 = edge_cut(g, labels)
+    ov0 = total_overload(g, labels, k, lmax)
+    best_cut0 = jnp.where(ov0 <= 0, cut0, jnp.inf)
+    init = JetInnerState(
+        labels=labels,
+        locked=jnp.zeros(g.n, dtype=bool),
+        best_labels=labels,
+        best_cut=best_cut0,
+        since_improve=jnp.int32(0),
+        it=jnp.int32(0),
+        key=key,
+    )
+    final = jax.lax.while_loop(cond, body, init)
+    # if no balanced state was ever seen, fall back to the last labels
+    return jnp.where(jnp.isfinite(final.best_cut), final.best_labels, final.labels)
+
+
+def jet_refine(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    eps: float,
+    key: jax.Array,
+    rounds: int = 4,
+    patience: int = 12,
+    max_inner: int = 64,
+) -> jax.Array:
+    """d4xJet (rounds=4) / dJet (rounds=1) refinement at one level."""
+    lmax = l_max(g, k, eps)
+    for tau in temperature_schedule(rounds):
+        key, sub = jax.random.split(key)
+        labels = jet_inner(g, labels, k, tau, lmax, sub, patience, max_inner)
+    return labels
+
+
+def lp_refine_balanced(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    eps: float,
+    key: jax.Array,
+    max_rounds: int = 16,
+) -> jax.Array:
+    """dLP baseline refinement: size-constrained LP + rebalance finisher."""
+    from repro.core.lp import lp_refine
+
+    lmax = l_max(g, k, eps)
+    k1, k2 = jax.random.split(key)
+    labels = lp_refine(g, labels, k, lmax, k1, max_rounds=max_rounds)
+    return rebalance(g, labels, k, lmax, k2).labels

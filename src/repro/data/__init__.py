@@ -1,0 +1,2 @@
+from repro.data.synthetic import MarkovTextDataset, SyntheticTokenDataset  # noqa: F401
+from repro.data.pipeline import Prefetcher  # noqa: F401

@@ -1,0 +1,39 @@
+"""Host-side prefetch pipeline.
+
+Straggler mitigation at the input layer: batches are produced by a
+background thread into a bounded queue so a slow host-side generation step
+overlaps device compute instead of stalling the whole BSP step.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class Prefetcher:
+    def __init__(self, dataset, start_step: int = 0, depth: int = 2):
+        self.dataset = dataset
+        self.queue: queue.Queue = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.dataset.batch(step)
+            while not self._stop.is_set():
+                try:
+                    self.queue.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self):
+        return self.queue.get()
+
+    def stop(self):
+        self._stop.set()

@@ -1,0 +1,147 @@
+"""Block-sharded graph for the distributed partitioner.
+
+Model (paper §2): PEs 1..P each own a *contiguous* range of vertices with
+roughly the same number of edges per PE; undirected edges are stored as two
+directed copies with the tail's owner; remote endpoints are ghost vertices —
+each PE knows the block id of every ghost (here: the label array of owned
+vertices is all-gathered each round, the BSP analogue of the ghost update —
+see DESIGN.md §2 for the halo=interface variant).
+
+Layout (leading axis = PE, sharded over mesh axis "pe" by shard_map):
+
+  src   (P, m_local) int32 — *local* row index of the tail (0..n_local)
+  dst   (P, m_local) int32 — head id in *gathered layout* (see below); PAD pad
+  ew    (P, m_local) f32
+  nw    (P, n_local) f32   — weights of owned vertices (0 on padding)
+  n_local, m_local, n_pad = P·n_local static.
+
+Gathered layout: after ``all_gather`` of the (n_local,) per-PE label slices
+the full label array has shape (P·n_local,) with PE p's owned vertex i at
+position p·n_local + i.  ``dst`` is pre-translated into this coordinate
+system at shard time so the ghost lookup is a single gather per round.
+
+The vertex split is chosen to equalise *edges* per PE (the paper's layout):
+a prefix-sum split of the degree array into P roughly-equal-weight ranges,
+then each range padded to common n_local / m_local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import PAD, Graph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    src: jax.Array   # (P, m_local) local row ids
+    dst: jax.Array   # (P, m_local) global head ids, PAD on padding
+    ew: jax.Array    # (P, m_local)
+    nw: jax.Array    # (P, n_local)
+    vtx_start: jax.Array  # (P,) global id of each PE's first owned vertex
+    n_real: int = dataclasses.field(metadata=dict(static=True))
+    P: int = dataclasses.field(metadata=dict(static=True))
+    n_local: int = dataclasses.field(metadata=dict(static=True))
+    m_local: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_pad(self) -> int:
+        return self.P * self.n_local
+
+    @property
+    def total_node_weight(self):
+        return jnp.sum(self.nw)
+
+
+def shard_graph(g: Graph, P: int) -> ShardedGraph:
+    """Host-side partition of ``g`` into P contiguous, edge-balanced ranges."""
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    row_ptr = np.asarray(g.row_ptr, dtype=np.int64)
+    m_live = int(row_ptr[-1])
+
+    # contiguous ranges with ~equal edges: cut at multiples of m/P
+    targets = (np.arange(1, P) * m_live) / P
+    cuts = np.searchsorted(row_ptr[1:], targets, side="left") + 1
+    starts = np.concatenate([[0], cuts, [g.n]]).astype(np.int64)
+    starts = np.maximum.accumulate(starts)  # guard degenerate graphs
+
+    n_local = int(np.max(np.diff(starts))) if P > 0 else g.n
+    n_local = max(1, n_local)
+    m_per = [int(row_ptr[starts[p + 1]] - row_ptr[starts[p]]) for p in range(P)]
+    m_local = max(1, max(m_per))
+
+    src = np.zeros((P, m_local), dtype=np.int32)
+    dst = np.full((P, m_local), int(PAD), dtype=np.int32)
+    ew = np.zeros((P, m_local), dtype=np.float32)
+    nw = np.zeros((P, n_local), dtype=np.float32)
+
+    col = np.asarray(g.col)
+    gsrc = np.asarray(g.src)
+    gew = np.asarray(g.ew)
+    gnw = np.asarray(g.nw)
+
+    # translate global head ids → gathered-layout ids (owner·n_local + offset)
+    owner_starts = starts[:P]
+    def to_gathered(v: np.ndarray) -> np.ndarray:
+        owner = np.searchsorted(owner_starts, v, side="right") - 1
+        return owner * n_local + (v - owner_starts[owner])
+
+    for p in range(P):
+        v0, v1 = starts[p], starts[p + 1]
+        e0, e1 = int(row_ptr[v0]), int(row_ptr[v1])
+        cnt = e1 - e0
+        src[p, :cnt] = gsrc[e0:e1] - v0
+        heads = col[e0:e1]
+        live = heads != int(PAD)
+        dst[p, :cnt][live] = to_gathered(heads[live].astype(np.int64))
+        ew[p, :cnt] = gew[e0:e1]
+        nw[p, : v1 - v0] = gnw[v0:v1]
+
+    return ShardedGraph(
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        ew=jnp.asarray(ew),
+        nw=jnp.asarray(nw),
+        vtx_start=jnp.asarray(starts[:P].astype(np.int32)),
+        n_real=g.n,
+        P=P,
+        n_local=n_local,
+        m_local=m_local,
+    )
+
+
+def labels_to_sharded(sg: ShardedGraph, labels: jax.Array) -> jax.Array:
+    """(n,) global labels → (P, n_local) owner-sharded layout (host/setup)."""
+    starts = np.asarray(sg.vtx_start, dtype=np.int64)
+    lab = np.asarray(labels)
+    out = np.zeros((sg.P, sg.n_local), dtype=np.int32)
+    for p in range(sg.P):
+        v0 = starts[p]
+        v1 = starts[p + 1] if p + 1 < sg.P else sg.n_real
+        out[p, : v1 - v0] = lab[v0:v1]
+    return jnp.asarray(out)
+
+
+def labels_from_sharded(sg: ShardedGraph, lab_sh: jax.Array) -> jax.Array:
+    """(P, n_local) → (n,) global labels (host/extraction)."""
+    starts = np.asarray(sg.vtx_start, dtype=np.int64)
+    lab = np.asarray(lab_sh)
+    out = np.zeros(sg.n_real, dtype=np.int32)
+    for p in range(sg.P):
+        v0 = starts[p]
+        v1 = starts[p + 1] if p + 1 < sg.P else sg.n_real
+        out[v0:v1] = lab[p, : v1 - v0]
+    return jnp.asarray(out)
+
+
+def owned_mask(sg: ShardedGraph) -> jax.Array:
+    """(P, n_local) bool — True where the slot holds a real owned vertex."""
+    starts = np.asarray(sg.vtx_start, dtype=np.int64)
+    ends = np.concatenate([starts[1:], [sg.n_real]])
+    idx = np.arange(sg.n_local)[None, :]
+    return jnp.asarray(idx < (ends - starts)[:, None])

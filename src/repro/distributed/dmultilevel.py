@@ -1,0 +1,137 @@
+"""Distributed multilevel driver.
+
+Refinement — the paper's contribution — is fully distributed (shard_map over
+the "pe" axis; see djet.py for the per-round communication pattern).
+Coarsening and initial partitioning run centralised on the host at this
+demo scale: level sizes are data-dependent, and dKaMinPar itself
+synchronises globally per level.  The production design (bucketed all_to_all
+edge reshuffle after contraction) is described in DESIGN.md and exercised
+shape-wise by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coarsen as C
+from repro.core.graph import Graph
+from repro.core.initial import initial_partition
+from repro.core.partition import edge_cut, imbalance, l_max
+from repro.core.refine import temperature_schedule
+from repro.distributed.dgraph import (
+    ShardedGraph,
+    labels_from_sharded,
+    labels_to_sharded,
+    owned_mask,
+    shard_graph,
+)
+from repro.distributed.djet import make_djet_refine, make_dlp_round, make_drebalance
+
+
+@dataclasses.dataclass(frozen=True)
+class DPartitionResult:
+    labels: jax.Array
+    cut: float
+    imbalance: float
+    levels: int
+    P: int
+
+
+def make_pe_mesh(P: int | None = None):
+    if P is None:
+        P = jax.device_count()
+    mesh = jax.make_mesh(
+        (P,), ("pe",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    return mesh, P
+
+
+def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
+                   max_inner, halo: bool = False):
+    P_ = mesh.devices.size
+    lmax = l_max(g, k, eps)
+
+    if halo and refiner != "dlp":
+        # interface-only exchange fast path (§Perf cell 1, paper's ghost
+        # protocol); rebalancing via probabilistic passes only
+        from repro.distributed.halo import (
+            halo_labels_from_sharded,
+            halo_labels_to_sharded,
+            make_halo_refine,
+            shard_graph_halo,
+        )
+
+        hsg, perm = shard_graph_halo(g, P_)
+        lab_sh = halo_labels_to_sharded(hsg, perm, labels)
+        rounds = 1 if refiner == "djet" else 4
+        refine = make_halo_refine(mesh, hsg, k, patience=patience,
+                                  max_inner=max_inner)
+        for tau in temperature_schedule(rounds):
+            key, sub = jax.random.split(key)
+            lab_sh = refine(hsg, lab_sh, sub, jnp.float32(tau), lmax)
+        return halo_labels_from_sharded(hsg, perm, lab_sh)
+
+    sg = shard_graph(g, P_)
+    owned = owned_mask(sg)
+    lab_sh = labels_to_sharded(sg, labels)
+
+    if refiner == "dlp":
+        lp = make_dlp_round(mesh, k, sg.n_local)
+        reb = make_drebalance(mesh, k, sg.n_local)
+        for _ in range(8):
+            key, sub = jax.random.split(key)
+            lab_sh = lp(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub, lmax)
+        key, sub = jax.random.split(key)
+        lab_sh, _ = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub, lmax)
+    else:
+        rounds = 1 if refiner == "djet" else 4
+        refine = make_djet_refine(mesh, k, sg.n_local, patience=patience,
+                                  max_inner=max_inner)
+        for tau in temperature_schedule(rounds):
+            key, sub = jax.random.split(key)
+            lab_sh = refine(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub,
+                            jnp.float32(tau), lmax)
+
+    return labels_from_sharded(sg, lab_sh)
+
+
+def dpartition(
+    g: Graph,
+    k: int,
+    P: int | None = None,
+    eps: float = 0.03,
+    seed: int = 0,
+    refiner: str = "d4xjet",
+    coarsen_until: int | None = None,
+    patience: int = 12,
+    max_inner: int = 64,
+    halo: bool = False,
+) -> DPartitionResult:
+    mesh, P_ = make_pe_mesh(P)
+    key = jax.random.PRNGKey(seed)
+    k_coarse, k_init, key = jax.random.split(key, 3)
+
+    levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse, coarsen_until=coarsen_until)
+    labels = initial_partition(coarsest, k, eps, k_init)
+
+    key, sub = jax.random.split(key)
+    labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, refiner,
+                            patience, max_inner, halo=halo)
+
+    for fine, mapping in reversed(levels):
+        labels = labels[mapping]
+        key, sub = jax.random.split(key)
+        labels = _drefine_level(mesh, fine, labels, k, eps, sub, refiner,
+                                patience, max_inner, halo=halo)
+
+    return DPartitionResult(
+        labels=labels,
+        cut=float(edge_cut(g, labels)),
+        imbalance=float(imbalance(g, labels, k)),
+        levels=len(levels) + 1,
+        P=P_,
+    )

@@ -1,0 +1,12 @@
+from repro.graphs.generators import (  # noqa: F401
+    BENCHMARK_SET,
+    chung_lu_powerlaw,
+    generate,
+    grid2d,
+    grid3d,
+    rgg2d,
+    rgg3d,
+    ring,
+    rmat,
+    watts_strogatz,
+)

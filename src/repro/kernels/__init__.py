@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots.
+#   gain/  — per-vertex block-connectivity scoreboard (conn/gain/target),
+#            the inner loop of Jet move generation, LP and rebalancing.
+#   flash/ — causal flash attention (LM prefill/training hot-spot).
+# Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper; interpret-mode on CPU) and ref.py (pure-jnp oracle).

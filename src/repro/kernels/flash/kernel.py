@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The LM-side compute hot-spot: prefill/training attention at seq 4k–32k.
+The portable lax.scan formulation (models/attention.py) materialises a
+(B, H, S, C) score block per step; this kernel keeps the whole
+online-softmax state in VMEM:
+
+  grid = (B·H, S/BLOCK_Q, S/BLOCK_K) with kv as the innermost axis;
+  scratch (persists across the kv axis): m, l (BLOCK_Q, 1) and the
+  accumulator (BLOCK_Q, hd), all fp32;
+  fully-masked (q_block < kv_block) tiles are skipped with pl.when —
+  the causal-wedge ~2x flop saving the scan version cannot express.
+
+VMEM per instance (BLOCK_Q = BLOCK_K = 256, hd ≤ 256):
+q/k/v tiles 3·256·hd·2B + scores 256·256·4B + acc 256·hd·4B ≲ 1.2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, block_q: int, block_k: int, scale: float, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[:, :] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:, :] = jnp.zeros_like(l_ref)
+        acc_ref[:, :] = jnp.zeros_like(acc_ref)
+
+    @pl.when(qi * block_q + block_q - 1 >= ki * block_k)  # causal-live tiles
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                     # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale          # (BQ, BK)
+
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+        m_prev = m_ref[:, :]                                 # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, :] = l_ref[:, :] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[:, :] = acc_ref[:, :] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[:, :] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, :, :] = (
+            acc_ref[:, :] / jnp.maximum(l_ref[:, :], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention_bh(q, k, v, *, block_q: int = 256, block_k: int = 256,
+                       interpret: bool = False):
+    """q, k, v: (BH, S, hd) — batch·heads flattened.  Causal.  → (BH, S, hd)."""
+    bh, s_len, hd = q.shape
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, s_len)
+    assert s_len % block_q == 0 and s_len % block_k == 0
+    n_k = s_len // block_k
+    scale = 1.0 / (hd ** 0.5)
+    grid = (bh, s_len // block_q, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

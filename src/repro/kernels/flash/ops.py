@@ -1,0 +1,32 @@
+"""jit'd public wrapper: (B, S, H, hd) causal attention via the flash kernel.
+
+On TPU this is the Pallas kernel; on CPU the body runs in interpret mode.
+Drop-in for models/attention.blockwise_attention on the forward/serving
+path (GQA callers expand kv heads first, as they do for the scan version).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_bh
+
+
+@partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256,
+                    interpret: bool | None = None):
+    """q, k, v: (B, S, H, hd) with kv already head-expanded.  Causal."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = q.shape
+
+    def flat(x):
+        return x.swapaxes(1, 2).reshape(B * H, S, hd)
+
+    o = flash_attention_bh(flat(q), flat(k), flat(v),
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+    return o.reshape(B, H, S, hd).swapaxes(1, 2)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """q, k, v: (BH, S, hd), causal.  Dense softmax reference."""
+    bh, s_len, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+    s = jnp.where(mask[None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", a, v.astype(jnp.float32)).astype(q.dtype)

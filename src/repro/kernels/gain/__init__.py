@@ -1,0 +1,2 @@
+from repro.kernels.gain.ops import gain_scoreboard, pad_for_kernel  # noqa: F401
+from repro.kernels.gain.ref import gain_scoreboard_ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""jit'd public wrapper around the gain scoreboard kernel.
+
+On TPU this lowers to the Pallas kernel; on CPU (this container) the kernel
+body executes in interpret mode — same code path, Python-evaluated — so the
+BlockSpec tiling is validated for correctness here and for performance via
+the dry-run's lowered HLO.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PAD, Graph, to_padded_fast
+from repro.kernels.gain.kernel import gain_scoreboard_pallas
+
+LANE = 128
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def pad_for_kernel(g: Graph, max_deg: int, tile_n: int = 256, deg_chunk: int = 16):
+    """Padded-adjacency arrays sized for the kernel: N → multiple of tile_n,
+    D → multiple of deg_chunk.  Labels of neighbours are substituted by the
+    caller per round; this returns neighbour *ids* + weights."""
+    d = _round_up(max(max_deg, 1), deg_chunk)
+    nbr, nbr_w = to_padded_fast(g, d)
+    n_pad = _round_up(g.n, tile_n)
+    if n_pad != g.n:
+        nbr = jnp.pad(nbr, ((0, n_pad - g.n), (0, 0)), constant_values=int(PAD))
+        nbr_w = jnp.pad(nbr_w, ((0, n_pad - g.n), (0, 0)))
+    return nbr, nbr_w
+
+
+@partial(jax.jit, static_argnames=("k", "tile_n", "deg_chunk", "interpret"))
+def gain_scoreboard(
+    nbr: jax.Array,        # (N, D) neighbour ids (PAD-padded)
+    nbr_w: jax.Array,      # (N, D)
+    labels: jax.Array,     # (n,) block labels of *all* vertices
+    nw: jax.Array,         # (n,) vertex weights
+    capacity: jax.Array,   # (k,) remaining block capacity (+inf = Jet mode)
+    k: int,
+    tile_n: int = 256,
+    deg_chunk: int = 16,
+    interpret: bool | None = None,
+):
+    """Returns (own, gain, target), each (n,) — matching partition.best_moves.
+
+    ``nbr`` holds neighbour *ids*; the label gather happens here so one padded
+    adjacency serves every round.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pad = nbr.shape[0]
+    n = labels.shape[0]
+
+    # gather labels of neighbours; PAD slots stay PAD (match no block)
+    safe = jnp.where(nbr == PAD, 0, nbr)
+    nbr_lab = jnp.where(nbr == PAD, PAD, labels[safe])
+
+    k_pad = _round_up(k, LANE)
+    cap = jnp.full((k_pad,), -jnp.inf, jnp.float32).at[:k].set(capacity)
+
+    lab_p = jnp.pad(labels, (0, n_pad - n))
+    nw_p = jnp.pad(nw, (0, n_pad - n))
+
+    own, gain, tgt = gain_scoreboard_pallas(
+        nbr_lab, nbr_w, lab_p, nw_p, cap,
+        tile_n=tile_n, deg_chunk=deg_chunk, interpret=interpret,
+    )
+    return own[:n, 0], gain[:n, 0], tgt[:n, 0]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the gain scoreboard kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gain_scoreboard_ref(nbr_labels, nbr_w, labels, nw, capacity):
+    """Identical contract to kernel.gain_scoreboard_pallas, dense jnp.
+
+    Returns (own, gain, target) with shapes (N,1), (N,1), (N,1).
+    """
+    n, d = nbr_labels.shape
+    k = capacity.shape[0]
+    blk = jnp.arange(k, dtype=jnp.int32)
+    onehot = (nbr_labels[:, :, None] == blk[None, None, :]).astype(jnp.float32)
+    conn = jnp.einsum("nd,ndk->nk", nbr_w, onehot)
+
+    own = jnp.take_along_axis(conn, labels[:, None], axis=1)
+    eligible = (blk[None, :] != labels[:, None]) & (capacity[None, :] >= nw[:, None])
+    masked = jnp.where(eligible, conn, -jnp.inf)
+    best = jnp.max(masked, axis=1, keepdims=True)
+    tgt = jnp.argmax(masked, axis=1).astype(jnp.int32)[:, None]
+    gain = jnp.where(jnp.isfinite(best), best - own, -jnp.inf)
+    tgt = jnp.where(jnp.isfinite(best), tgt, labels[:, None])
+    return own, gain, tgt

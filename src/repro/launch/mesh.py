@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and the
+dry-run must set XLA_FLAGS before that happens).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data×model single pod, or (2, 16, 16) pod×data×model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(
+        dev_array, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_cpu_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    import numpy as np
+
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(
+        dev, ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

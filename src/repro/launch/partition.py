@@ -1,0 +1,54 @@
+"""Partitioner CLI — the paper-side launcher.
+
+    PYTHONPATH=src python -m repro.launch.partition --graph rmat_14 --k 16 \
+        --refiner d4xjet [--distributed P]
+"""
+
+import argparse
+import json
+import time
+
+from repro.core import partition
+from repro.graphs import BENCHMARK_SET, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="grid2d_64k", choices=sorted(BENCHMARK_SET))
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--eps", type=float, default=0.03)
+    ap.add_argument("--refiner", default="d4xjet", choices=("dlp", "djet", "d4xjet"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distributed", type=int, default=0,
+                    help="run refinement under shard_map with P forced host devices")
+    ap.add_argument("--halo", action="store_true",
+                    help="interface-only halo exchange (distributed fast path)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import os
+
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.distributed}"
+        )
+        from repro.distributed import dpartition
+
+        g = generate(args.graph)
+        t0 = time.time()
+        res = dpartition(g, k=args.k, P=args.distributed, eps=args.eps,
+                         seed=args.seed, refiner=args.refiner, halo=args.halo)
+        out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
+                   P=res.P, sec=round(time.time() - t0, 2))
+    else:
+        g = generate(args.graph)
+        t0 = time.time()
+        res = partition(g, k=args.k, eps=args.eps, seed=args.seed,
+                        refiner=args.refiner)
+        out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
+                   sec=round(time.time() - t0, 2))
+    out.update(graph=args.graph, n=g.n, m=g.m, k=args.k, refiner=args.refiner)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Abstract input/state specs for every (arch × shape) dry-run cell.
+
+Everything here is ShapeDtypeStruct-only — no allocation.  The modality
+frontends are stubs per the brief: musicgen receives precomputed frame
+embeddings, llama-vision receives patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.zoo import Model, build_model
+from repro.optim.api import Optimizer
+from repro.sharding.rules import make_opt_specs, make_param_specs
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def batch_pspec(mesh, batch: int, include_model: bool = False) -> P:
+    """Batch sharding over the DP axes; ``include_model=True`` (the FSDP-only
+    §Perf variant) spreads the batch over the model axis too — with no TP,
+    'model' is free to act as extra data parallelism."""
+    axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if include_model:
+        axes = axes + ("model",)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    if batch % n == 0:
+        return P(axes)
+    if batch % dp_size(mesh) == 0 and include_model:
+        return P(axes[:-1])
+    return P()  # unshardable batch (long_500k B=1) → replicate batch dim
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      batch_over_model: bool = False):
+    B, S = shape.global_batch, shape.seq_len
+    bp = batch_pspec(mesh, B, include_model=batch_over_model)
+    specs, shards = {}, {}
+    if cfg.embed_inputs:
+        specs["tokens"] = sds((B, S), jnp.int32)
+        shards["tokens"] = P(*bp, None)
+    else:
+        specs["embeddings"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        shards["embeddings"] = P(*bp, None, None)
+    specs["targets"] = sds((B, S), jnp.int32)
+    shards["targets"] = P(*bp, None)
+    if cfg.n_vision_tokens:
+        specs["vision_embeddings"] = sds((B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        shards["vision_embeddings"] = P(*bp, None, None)
+    return specs, shards
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    B = shape.global_batch
+    bp = batch_pspec(mesh, B)
+    specs, shards = {}, {}
+    if cfg.embed_inputs:
+        specs["tokens"] = sds((B,), jnp.int32)
+        shards["tokens"] = P(*bp)
+    else:
+        specs["embeddings"] = sds((B, 1, cfg.d_model), jnp.bfloat16)
+        shards["embeddings"] = P(*bp, None, None)
+    if cfg.n_vision_tokens:
+        specs["vision_embeddings"] = sds((B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        shards["vision_embeddings"] = P(*bp, None, None)
+    return specs, shards
+
+
+# --------------------------------------------------------------------------
+# cache sharding: shape-driven rules
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, model: Model, shape: ShapeSpec, mesh,
+                dtype=jnp.bfloat16, seq_shard: bool = False):
+    """(abstract cache, sharding tree).
+
+    Field-aware rules (leading dim of every leaf = segment-repeat axis, never
+    sharded; batch over the DP axes; the head-like dim over 'model' when it
+    divides the axis):
+      KVCache.k/v      (R,B,S,Hkv,hd) → (None, dp, None, model?, None)
+      MLACache.ckv/k_rope (R,B,S,r)   → (None, dp, None, None)   [latent: no
+                                         head split — that's the MLA point]
+      SSMState.h       (R,B,nh,N,P)   → (None, dp, model?, None, None)
+      MLSTMState.C/n/m (R,B,H,...)    → (None, dp, model?, ...)
+      SLSTMState.*     (R,B,H,hd)     → (None, dp, model?, None)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    abstract = jax.eval_shape(lambda: model.cache_init(B, S, dtype))
+    bp = batch_pspec(mesh, B)
+    model_size = mesh.shape.get("model", 1)
+
+    head_dim_index = {  # index within shape[2:] of the head-like axis
+        "k": 1, "v": 1,          # KVCache (S, Hkv, hd)
+        "h": 0, "C": 0, "n": 0, "m": 0, "c": 0,  # SSM/xLSTM states (heads first)
+        "ckv": None, "k_rope": None,  # MLA latent — never head-sharded
+    }
+
+    b_entry = bp[0] if len(bp) else None  # explicit batch-dim entry (B=1 → None)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    specs = []
+    for path, leaf in flat:
+        shp = leaf.shape
+        if len(shp) <= 1:  # stateless placeholder (xattn)
+            specs.append(P(*([None] * len(shp))))
+            continue
+        name = None
+        for pe in reversed(path):
+            if hasattr(pe, "name"):
+                name = str(pe.name)
+                break
+            if hasattr(pe, "key"):
+                name = str(pe.key)
+                break
+        rest = shp[2:]
+        hidx = head_dim_index.get(name, None)
+        # §Perf "seqkv" variant: shard the cache's sequence dim over 'model'
+        # instead of heads (KV k/v and MLA latents have S at rest index 0) —
+        # fits GQA caches whose few KV heads can't split 16 ways.
+        sidx = 0 if (seq_shard and name in ("k", "v", "ckv", "k_rope")
+                     and shp[2] % model_size == 0) else None
+        spec = [None, b_entry]
+        for i, d in enumerate(rest):
+            if sidx is not None:
+                spec.append("model" if i == sidx else None)
+            elif hidx is not None and i == hidx and d % model_size == 0:
+                spec.append("model")
+            else:
+                spec.append(None)
+        specs.append(P(*spec))
+    shards = jax.tree_util.tree_unflatten(treedef, specs)
+    return abstract, shards
+
+
+# --------------------------------------------------------------------------
+# full cell assembly
+# --------------------------------------------------------------------------
+
+def abstract_params(model: Model, dtype=jnp.bfloat16):
+    m = build_model(model.cfg, param_dtype=dtype)
+    return jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, optimizer: Optimizer | None,
+              zero_over_pod: bool = False, param_dtype=jnp.bfloat16,
+              unroll_layers: bool = True, variant: str = "baseline"):
+    """Returns (fn, args, in_shardings) ready for jit(...).lower(*args).
+
+    ``unroll_layers`` defaults True: the dry-run unrolls the layer scan so
+    ``cost_analysis`` counts every layer (XLA counts while bodies once).
+    ``variant``: "baseline" | "fsdp" (no TP) | "seqkv" (sequence-sharded KV)."""
+    model = build_model(cfg, param_dtype=param_dtype, unroll_layers=unroll_layers)
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = make_param_specs(cfg, params_abs, mesh, zero_over_pod=zero_over_pod,
+                              tp_enable=(variant != "fsdp"))
+
+    if shape.mode == "train":
+        assert optimizer is not None
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        ospecs = make_opt_specs(pspecs, opt_abs)
+        batch_abs, bspecs = train_batch_specs(
+            cfg, shape, mesh, batch_over_model=(variant == "fsdp"))
+
+        from repro.train.step import build_train_step
+
+        fn = build_train_step(model, optimizer)
+        args = (params_abs, opt_abs, batch_abs, sds((), jnp.int32))
+        in_shardings = (pspecs, ospecs, bspecs, P())
+        return fn, args, in_shardings
+
+    if shape.mode == "prefill":
+        batch_abs, bspecs = train_batch_specs(cfg, shape, mesh)
+        batch_abs.pop("targets")
+        bspecs.pop("targets")
+
+        def fn(params, batch):
+            x, _aux = model.forward(params, batch)
+            return x
+
+        return fn, (params_abs, batch_abs), (pspecs, bspecs)
+
+    if shape.mode == "decode":
+        cache_abs, cspecs = cache_specs(cfg, model, shape, mesh,
+                                        seq_shard=(variant == "seqkv"))
+        batch_abs, bspecs = decode_batch_specs(cfg, shape, mesh)
+
+        from repro.train.step import build_serve_step
+
+        fn = build_serve_step(model)
+        args = (params_abs, cache_abs, batch_abs, sds((), jnp.int32))
+        in_shardings = (pspecs, cspecs, bspecs, P())
+        return fn, args, in_shardings
+
+    raise ValueError(shape.mode)

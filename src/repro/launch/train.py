@@ -1,0 +1,76 @@
+"""Training launcher: --arch <id> on the production mesh (or CPU smoke).
+
+On real hardware this is the entrypoint a multi-host job runs under
+``jax.distributed.initialize()``; here it supports:
+
+  * smoke: reduced config, real training on the single CPU device;
+  * dryrun: lower+compile the full config on the production mesh (defers to
+    repro.launch.dryrun so the 512-device env var is set before jax init).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b --smoke --steps 20
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    if not args.smoke:
+        raise SystemExit(
+            "full-scale training needs a TPU pod; use --smoke here, or "
+            "python -m repro.launch.dryrun for the production-mesh compile"
+        )
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data import MarkovTextDataset
+    from repro.models import build_model
+    from repro.optim import make_optimizer, cosine_schedule
+    from repro.train import Trainer, TrainerConfig, build_train_step
+
+    cfg = configs.get_smoke(args.arch)
+    model = build_model(cfg)
+    opt = make_optimizer(args.optimizer,
+                         lr=cosine_schedule(1e-3, 10, args.steps))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    data = MarkovTextDataset(cfg.vocab_size, seq_len=args.seq,
+                             global_batch=args.batch, seed=0)
+    # musicgen-style embedding inputs: wrap the token stream with a frozen
+    # random projection standing in for the EnCodec frontend stub
+    if not cfg.embed_inputs:
+        table = jax.random.normal(jax.random.PRNGKey(9),
+                                  (cfg.vocab_size, cfg.d_model)) * 0.02
+
+        class EmbWrap:
+            def batch(self, step):
+                b = data.batch(step)
+                return {"embeddings": table[b["tokens"]], "targets": b["targets"]}
+
+        src = EmbWrap()
+    else:
+        src = data
+
+    step_fn = build_train_step(model, opt, microbatch=args.microbatch)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=25,
+                         max_steps=args.steps, log_every=5)
+    trainer = Trainer(step_fn, params, opt_state, src, tcfg)
+    hist = trainer.run(args.steps - trainer.step)
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""GQA/MHA self-attention (train: chunked online-softmax; decode: KV cache)
+plus cross-attention for the VLM family.
+
+Training/prefill attention is *blockwise* (flash-style online softmax over KV
+chunks, a `lax.scan`) so the (S, S) score matrix is never materialised —
+required for seq 32 k prefill to fit HBM.  The Pallas flash kernel
+(kernels/flash) plugs in behind the same signature on TPU; the scan is the
+portable reference (and what the CPU tests execute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import bf16_grad, dense_init
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype=jnp.float32, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cross:
+        p["gate"] = jnp.zeros((), dtype)  # zero-init gated cross-attn
+    return p
+
+
+def _project_q(p, x, cfg):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+
+def _project_kv(p, x, cfg):
+    B, S, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _expand_kv(k, cfg):
+    """(B,S,Hkv,hd) → (B,S,Hq,hd) by repeating each kv head G times."""
+    groups = cfg.n_heads // cfg.n_kv_heads
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+# --------------------------------------------------------------------------
+# blockwise causal attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        chunk: int = 512):
+    """Online-softmax attention.  q,k,v: (B, S, H, hd) (kv pre-expanded).
+
+    Scans KV chunks; never materialises (S, S).  ``window`` > 0 restricts
+    attention to the last `window` positions (sliding window).
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    nc = Skv // chunk
+    assert Skv % chunk == 0, (Skv, chunk)
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    q_pos = jnp.arange(S)
+
+    def body(carry, c):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, ks) * scale        # (B,H,S,C)
+        kv_pos = c * chunk + jnp.arange(chunk)
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vs.dtype), vs
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    acc0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,S,H,hd)
+
+
+def self_attention(p, x, cfg, positions, *, dtype=None):
+    # bf16_grad: keep the f32 softmax cotangents out of the TP backward
+    # matmuls (they would force f32 activation all-reduces — §Perf iter. 4)
+    q = bf16_grad(_project_q(p, x, cfg))
+    k, v = _project_kv(p, x, cfg)
+    k, v = bf16_grad(k), bf16_grad(v)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k, v = _expand_kv(k, cfg), _expand_kv(v, cfg)
+    o = blockwise_attention(q, k, v, causal=True, window=cfg.attn_window)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attention(p, x, memory, cfg):
+    """Gated cross-attention onto (B, M, d) memory (vision tokens)."""
+    B, S, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, memory, cfg)
+    k, v = _expand_kv(k, cfg), _expand_kv(v, cfg)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(x.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, -1)
+    return jnp.tanh(p["gate"]) * (o @ p["wo"])
+
+
+# --------------------------------------------------------------------------
+# decode (KV cache, one token)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # (B, S_max, Hkv, hd)
+    v: jax.Array
+
+
+def init_kv_cache(cfg, batch, s_max, dtype=jnp.bfloat16):
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_self_attention(p, x, cfg, cache: KVCache, pos):
+    """x: (B, 1, d); pos: scalar current position.  Returns (out, new_cache)."""
+    B = x.shape[0]
+    q = _project_q(p, x, cfg)                       # (B,1,Hq,hd)
+    k_new, v_new = _project_kv(p, x, cfg)           # (B,1,Hkv,hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+
+    kx = _expand_kv(k, cfg)
+    vx = _expand_kv(v, cfg)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(k.shape[1])
+    valid = kv_pos <= pos
+    if cfg.attn_window:
+        valid &= kv_pos > pos - cfg.attn_window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, vx.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, -1)
+    return o @ p["wo"], KVCache(k=k, v=v)

@@ -1,0 +1,80 @@
+"""Shared layer primitives: norms, linear init, embeddings, activations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def bf16_grad(x):
+    """Identity with the cotangent forced to the primal's (bf16) dtype.
+
+    Attention/softmax internals run in f32; without this, their f32
+    cotangents flow into the TP backward matmuls and GSPMD emits the
+    activation all-reduces in f32 — 2x the wire bytes (measured; see
+    EXPERIMENTS.md §Perf iteration 4).  No-op for f32 primals (CPU tests)."""
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _bf16_grad_bwd(res, g):
+    if res.dtype == jnp.bfloat16:
+        return (g.astype(jnp.bfloat16),)
+    return (g,)
+
+
+bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def rms_norm(w, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * w
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def swiglu_init(key, d, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype),
+        "up": dense_init(k2, d, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(p, x, act="silu"):
+    f = act_fn(act)
+    return (f(x @ p["gate"]) * (x @ p["up"])) @ p["down"]
+
+
+def gelu_mlp_init(key, d, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, d_ff, dtype), "down": dense_init(k2, d_ff, d, dtype)}
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["up"]) @ p["down"]
+
+
+def mlp_init(key, d, d_ff, act, dtype=jnp.float32):
+    return swiglu_init(key, d, d_ff, dtype) if act == "silu" else gelu_mlp_init(key, d, d_ff, dtype)
+
+
+def mlp_apply(p, x, act):
+    return swiglu(p, x, act) if act == "silu" else gelu_mlp(p, x)

@@ -1,0 +1,137 @@
+"""Model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str            # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen1.5
+    act: str = "silu"                       # silu (SwiGLU) | gelu
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # ---- MoE ------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    d_expert: int = 0                       # per-expert FFN hidden size
+    n_dense_layers: int = 0                 # leading dense layers (dsv3: 3)
+    router_aux_free: bool = False           # dsv3 bias-based balancing
+
+    # ---- MLA (deepseek-v3) ----------------------------------------------
+    attn_type: str = "gqa"                  # gqa | mla
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # ---- multi-token prediction (deepseek-v3) ----------------------------
+    mtp_depth: int = 0
+
+    # ---- hybrid / SSM -----------------------------------------------------
+    layer_pattern: Tuple[str, ...] = ()     # one period, e.g. 5*('mamba2',)+('attn',)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+
+    # ---- modality frontends (stubs) ---------------------------------------
+    embed_inputs: bool = True               # False → input_specs provides embeddings
+    cross_attn_every: int = 0               # vlm: every Nth layer cross-attends
+    n_vision_tokens: int = 0
+    attn_window: int = 0                    # 0 = full causal; >0 sliding window
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def layer_types(self) -> Tuple[str, ...]:
+        """Expanded per-layer type list of length n_layers."""
+        if self.layer_pattern:
+            pat = self.layer_pattern
+            reps = (self.n_layers + len(pat) - 1) // len(pat)
+            return tuple((pat * reps)[: self.n_layers])
+        out = []
+        for i in range(self.n_layers):
+            if self.cross_attn_every and (i % self.cross_attn_every == self.cross_attn_every - 1):
+                out.append("xattn")
+            elif self.n_experts and i >= self.n_dense_layers:
+                out.append("moe")
+            else:
+                out.append("dense")
+        return tuple(out)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (exact for the families we build)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        for lt in self.layer_types:
+            total += self._attn_params(lt) + self._ffn_params(lt) + 2 * d
+        return total
+
+    def _attn_params(self, lt: str) -> int:
+        d, hd = self.d_model, self.head_dim
+        if lt in ("mamba2", "slstm", "mlstm"):
+            if lt == "mamba2":
+                d_in = self.ssm_expand * d
+                nh = d_in // self.ssm_head_dim
+                return d * (2 * d_in + 2 * self.ssm_state + nh) + d_in * d + d_in
+            # xLSTM blocks: in/out proj + gates (rough)
+            d_in = 2 * d
+            return d * d_in * 2 + d_in * d + 4 * d * d
+        if self.attn_type == "mla":
+            qd = self.q_lora_rank * (d + self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim))
+            kvd = self.kv_lora_rank * (d + self.n_heads * (self.qk_nope_head_dim + self.v_head_dim))
+            rope = d * self.qk_rope_head_dim
+            out = self.n_heads * self.v_head_dim * d
+            return qd + kvd + rope + out
+        nq, nkv = self.n_heads, self.n_kv_heads
+        base = d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+        if lt == "xattn":
+            base += d * (nq * hd)  # extra kv proj sizing comparable; gate
+        return base
+
+    def _ffn_params(self, lt: str) -> int:
+        d = self.d_model
+        if lt in ("mamba2", "slstm", "mlstm"):
+            return 0  # SSM/xLSTM blocks carry their own projections, no MLP
+        if lt == "moe":
+            per_exp = 3 * d * self.d_expert
+            shared = self.n_shared_experts * per_exp
+            router = d * self.n_experts
+            return self.n_experts * per_exp + shared + router
+        mult = 3 if self.act == "silu" else 2
+        return mult * d * self.d_ff
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (= param_count for dense models)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d + (0 if self.tie_embeddings else v * d)
+        for lt in self.layer_types:
+            total += self._attn_params(lt) + 2 * d
+            if lt == "moe":
+                per_exp = 3 * d * self.d_expert
+                total += (self.experts_per_token + self.n_shared_experts) * per_exp
+                total += d * self.n_experts
+            else:
+                total += self._ffn_params(lt)
+        return total

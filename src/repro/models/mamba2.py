@@ -1,0 +1,140 @@
+"""Mamba2 (SSD) block — chunked scan (arXiv:2405.21060 form).
+
+State-space dual with scalar-per-head decay a_t, head dim P, state size N:
+
+  h_t = a_t · h_{t-1} + dt_t · (b_t ⊗ x_t)      (per head: (N, P) state)
+  y_t = c_tᵀ h_t + D · x_t
+
+Training scans over chunks of C tokens: within a chunk the quadratic
+(attention-like) term is computed directly; across chunks only the (N, P)
+state is carried.  The (C, C, nh) decay tensor exists only inside one scan
+step, so activation memory is O(S·N·P/C + C²·nh), not O(S²).
+Decode is the O(1) recurrent update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * N + nh, dtype),  # z,x,B,C,dt
+        "w_out": dense_init(ks[1], d_in, d, dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),      # a = exp(-exp(A_log)·dt)
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+    }
+
+
+def _split_proj(p, u, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    z, x, Bm, Cm, dt = jnp.split(
+        u @ p["w_in"], [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                        # decay ∈ (0,1)
+    nh = d_in // cfg.ssm_head_dim
+    return z, x, Bm, Cm, dt, a, nh
+
+
+def _gated_out(p, y, z, w_out):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5).astype(y.dtype)) * p["norm"]
+    return y @ w_out
+
+
+def mamba2_forward(p, u, cfg):
+    """u: (B, S, d) → (B, S, d)."""
+    Bsz, S, _ = u.shape
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    C = min(cfg.ssm_chunk, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+
+    z, x, Bm, Cm, dt, a, nh = _split_proj(p, u, cfg)
+    xh = x.reshape(Bsz, S, nh, P)
+    causal = jnp.tril(jnp.ones((C, C), bool))
+
+    def chunked(t):  # (B,S,...) → (nc,B,C,...) for scan xs
+        return t.reshape(Bsz, nc, C, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (
+        chunked(xh.astype(jnp.float32)),
+        chunked(Bm.astype(jnp.float32)),
+        chunked(Cm.astype(jnp.float32)),
+        chunked(jnp.log(jnp.maximum(a, 1e-20))),
+        chunked(dt),
+    )
+
+    def body(h, inp):
+        xh_c, B_c, C_c, loga_c, dt_c = inp              # (B,C,·)
+        cum = jnp.cumsum(loga_c, axis=1)                # (B,C,nh)
+        total = cum[:, -1]                              # (B,nh)
+
+        scores = jnp.einsum("bcd,bsd->bcs", C_c, B_c)   # (B,C,C)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,C,C,nh)
+        w = jnp.where(causal[None, :, :, None], scores[..., None] * decay, 0.0)
+        w = w * dt_c[:, None, :, :]
+        y_intra = jnp.einsum("bcsh,bshp->bchp", w, xh_c)
+
+        y_inter = jnp.einsum("bcd,bch,bhdp->bchp", C_c, jnp.exp(cum), h)
+
+        carry_w = jnp.exp(total[:, None, :] - cum) * dt_c          # (B,C,nh)
+        h_chunk = jnp.einsum("bsh,bsd,bshp->bhdp", carry_w, B_c, xh_c)
+        h_new = h * jnp.exp(total)[:, :, None, None] + h_chunk
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, nh, N, P), jnp.float32)
+    _, y = jax.lax.scan(body, h0, xs)                   # y: (nc,B,C,nh,P)
+    y = y.swapaxes(0, 1).reshape(Bsz, S, nh, P)
+    y = y + p["D"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, nh * P).astype(u.dtype)
+    return _gated_out(p, y, z, p["w_out"])
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    h: jax.Array  # (B, nh, N, P) fp32
+
+
+def init_ssm_state(cfg, batch):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return SSMState(h=jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))
+
+
+def mamba2_decode(p, u, cfg, state: SSMState):
+    """u: (B, 1, d) → (y (B,1,d), new_state).  O(1) per token."""
+    Bsz = u.shape[0]
+    P = cfg.ssm_head_dim
+    z, x, Bm, Cm, dt, a, nh = _split_proj(p, u, cfg)
+    xh = x.reshape(Bsz, 1, nh, P)[:, 0]                 # (B,nh,P)
+    b, c = Bm[:, 0], Cm[:, 0]                           # (B,N)
+    at, dtt = a[:, 0], dt[:, 0]                         # (B,nh)
+
+    outer = jnp.einsum("bd,bhp->bhdp", b.astype(jnp.float32), xh.astype(jnp.float32))
+    h = state.h * at[:, :, None, None] + outer * dtt[:, :, None, None]
+    y = jnp.einsum("bd,bhdp->bhp", c.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, nh * P).astype(u.dtype)
+    return _gated_out(p, y, z, p["w_out"]), SSMState(h=h)

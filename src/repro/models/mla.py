@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437 §2.1.1).
+
+Queries and key/values are projected through low-rank latents; the decode
+cache stores only the compressed KV latent (kv_lora_rank) plus the shared
+RoPE key (qk_rope_head_dim) per position — the memory saving that lets
+DeepSeek serve long contexts.
+
+Shapes (paper values): d=7168, H=128, q_lora=1536, kv_lora=512,
+qk_nope=128, qk_rope=64, v_head=128.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_down": dense_init(ks[0], d, qr, dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "wq_up": dense_init(ks[1], qr, H * (dn + dr), dtype),
+        "wkv_down": dense_init(ks[2], d, kvr, dtype),
+        "kv_norm": jnp.ones((kvr,), dtype),
+        "wkv_up": dense_init(ks[3], kvr, H * (dn + dv), dtype),
+        "wk_rope": dense_init(ks[4], d, dr, dtype),
+        "wo": dense_init(ks[5], H * dv, d, dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    """Returns q (B,S,H,dn+dr), k (B,S,H,dn+dr), v (B,S,H,dv)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    cq = rms_norm(p["q_norm"], x @ p["wq_down"], cfg.norm_eps)
+    q = (cq @ p["wq_up"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rms_norm(p["kv_norm"], x @ p["wkv_down"], cfg.norm_eps)
+    kv = (ckv @ p["wkv_up"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_rope = apply_rope(x @ p["wk_rope"], positions, cfg.rope_theta)  # (B,S,dr) shared
+    k_rope = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q, k, v, ckv
+
+
+def mla_self_attention(p, x, cfg, positions):
+    from repro.models.attention import blockwise_attention
+
+    B, S, _ = x.shape
+    q, k, v, _ = _mla_qkv(p, x, cfg, positions)
+    # blockwise attention handles unequal q/v head dims via separate einsums;
+    # here dq == dk, dv may differ — pad v path by reusing the kernel per-dim
+    o = blockwise_attention(q, k, _pad_to(v, q.shape[-1]), causal=True)
+    o = o[..., : cfg.v_head_dim]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def _pad_to(v, dim):
+    pad = dim - v.shape[-1]
+    if pad == 0:
+        return v
+    return jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+
+
+# --------------------------------------------------------------------------
+# decode with compressed cache
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    ckv: jax.Array     # (B, S_max, kv_lora_rank) — compressed latent
+    k_rope: jax.Array  # (B, S_max, qk_rope_head_dim)
+
+
+def init_mla_cache(cfg, batch, s_max, dtype=jnp.bfloat16):
+    return MLACache(
+        ckv=jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def decode_mla_attention(p, x, cfg, cache: MLACache, pos):
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    posv = jnp.full((B, 1), pos, jnp.int32)
+
+    cq = rms_norm(p["q_norm"], x @ p["wq_down"], cfg.norm_eps)
+    q = (cq @ p["wq_up"]).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    ckv_new = rms_norm(p["kv_norm"], x @ p["wkv_down"], cfg.norm_eps)   # (B,1,kvr)
+    kr_new = apply_rope(x @ p["wk_rope"], posv, cfg.rope_theta)         # (B,1,dr)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.ckv, ckv_new.astype(cache.ckv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+
+    # absorb wkv_up into the score computation (the MLA decode trick):
+    # score = q_nopeᵀ (W_uk ckv) + q_ropeᵀ k_rope
+    wkv = p["wkv_up"].reshape(cfg.kv_lora_rank, H, dn + dv)
+    w_uk, w_uv = wkv[..., :dn], wkv[..., dn:]
+    # project q_nope into latent space: (B,1,H,dn) x (kvr,H,dn) → (B,1,H,kvr)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))
+    s = s / jnp.sqrt(dn + dr)
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    # o = Σ_s a · v_s  with v_s = W_uv ckv_s, again absorbed
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", a, ckv.astype(jnp.float32))  # (B,1,H,kvr)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, H * dv)
+    return o @ p["wo"], MLACache(ckv=ckv, k_rope=k_rope)

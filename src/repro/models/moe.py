@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN: shared + routed experts with top-k routing.
+
+Compute formulation: sort-by-expert + ``jax.lax.ragged_dot`` grouped matmul
+(the MaxText/megablocks-style dense-grouped form).  Static shapes, no
+capacity dropping (every token is computed — DeepSeek-V3 drops no tokens).
+
+Load balancing:
+  * classic switch-style auxiliary loss (deepseek-moe-16b), and
+  * auxiliary-loss-free bias balancing (DeepSeek-V3): a per-expert bias is
+    added to the routing scores *for selection only*; the trainer nudges it
+    against the observed load (see optim/router_bias.py).
+
+Expert parallelism: expert-stacked weights (E, d, f) are sharded over the
+"model" mesh axis; GSPMD turns the grouped matmul into all-gather/all-to-all
+schedules which the roofline pass accounts for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, de = cfg.d_model, cfg.d_expert
+    E = cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # router kept fp32
+        "w_gate": (jax.random.normal(ks[1], (E, d, de)) / jnp.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, de)) / jnp.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, de, d)) / jnp.sqrt(de)).astype(dtype),
+    }
+    if cfg.router_aux_free:
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if cfg.n_shared_experts:
+        ds = de * cfg.n_shared_experts
+        p["shared"] = {
+            "gate": dense_init(ks[4], d, ds, dtype),
+            "up": dense_init(ks[5], d, ds, dtype),
+            "down": dense_init(ks[6], ds, d, dtype),
+        }
+    return p
+
+
+def route(p, x2d, cfg):
+    """x2d: (T, d) → (gates (T,topk), expert_ids (T,topk), router_probs (T,E))."""
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = logits + p["router_bias"] if "router_bias" in p else logits
+    _, idx = jax.lax.top_k(select, cfg.experts_per_token)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32), probs
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, d) → (y, aux) where aux = (aux_loss, expert_load (E,))."""
+    B, S, d = x.shape
+    T = B * S
+    E, topk = cfg.n_experts, cfg.experts_per_token
+    x2d = x.reshape(T, d)
+
+    gates, idx, probs = route(p, x2d, cfg)
+
+    flat_e = idx.reshape(-1)                        # (T·topk,)
+    order = jnp.argsort(flat_e)
+    tok = order // topk
+    xs = x2d[tok]                                    # (T·topk, d)
+    group_sizes = jnp.bincount(flat_e, length=E)
+
+    f = act_fn(cfg.act)
+    h = f(jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)) * jax.lax.ragged_dot(
+        xs, p["w_up"], group_sizes
+    )
+    ys = jax.lax.ragged_dot(h, p["w_down"], group_sizes)  # (T·topk, d)
+
+    gate_sorted = gates.reshape(-1)[order]
+    y = jnp.zeros((T, d), x.dtype).at[tok].add((ys * gate_sorted[:, None]).astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        y = y + (f(x2d @ sp["gate"]) * (x2d @ sp["up"])) @ sp["down"]
+
+    # switch-style aux loss: E · Σ_e load_e · route_prob_e
+    load = group_sizes.astype(jnp.float32) / jnp.maximum(T * topk, 1)
+    imp = probs.mean(axis=0)
+    aux_loss = E * jnp.sum(load * imp)
+    return y.reshape(B, S, d), (aux_loss, group_sizes.astype(jnp.float32))
+
+
+def update_router_bias(bias, expert_load, rate: float = 1e-3):
+    """Aux-free balancing (DeepSeek-V3): push bias against load violation."""
+    mean = jnp.mean(expert_load)
+    return bias - rate * jnp.sign(expert_load - mean)

@@ -1,0 +1,115 @@
+"""Expert-parallel MoE with explicit all-to-all (shard_map) — the scheduled
+fix for the GSPMD fallback measured on deepseek-v3 train_4k (93 TB of
+all-reduce per step; EXPERIMENTS.md §Perf "Additional finding").
+
+Schedule per MoE layer, experts sharded E_local = E/P per device over axis
+``axis`` (= 'model'):
+
+  1. route locally: (T_loc, topk) expert ids + gates;
+  2. bucket token-routes by destination shard (sort + rank-in-group),
+     capacity C per destination shard (static; overflow dropped — set
+     ``capacity_factor`` ≥ P·topk/… for dropless behaviour in tests);
+  3. all_to_all the (P, C, d) send buffer + (P, C) local-expert ids/validity;
+  4. grouped FFN on received rows (sort by local expert + ragged_dot);
+  5. all_to_all back to the sender's slots; combine with gates.
+
+Wire bytes per device per layer ≈ 2 · min(T_loc·topk, P·C) · d — the
+all-to-all payload the napkin analysis predicts, instead of GSPMD's
+replicated dispatch buffers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn
+
+
+def _a2a(x, axis):
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def moe_ep_local(p_local, x, cfg, *, axis: str = "model",
+                 capacity_factor: float = 2.0):
+    """Per-shard body (inside shard_map over ``axis``).
+
+    p_local: routed-expert params with the E axis already sharded:
+      router (d, E) replicated, w_gate/w_up (E_local, d, f), w_down
+      (E_local, f, d), optional shared expert params replicated.
+    x: (T_loc, d) local tokens.  Returns (T_loc, d).
+    """
+    P = jax.lax.axis_size(axis)
+    T, d = x.shape
+    E = cfg.n_experts
+    topk = cfg.experts_per_token
+    E_local = E // P
+    f = act_fn(cfg.act)
+
+    # ---- 1. local routing -------------------------------------------------
+    logits = x.astype(jnp.float32) @ p_local["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = logits + p_local["router_bias"] if "router_bias" in p_local else logits
+    _, idx = jax.lax.top_k(select, topk)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1).astype(jnp.int32)       # (T·topk,)
+    flat_g = gates.reshape(-1)
+    tok = jnp.arange(T * topk, dtype=jnp.int32) // topk
+
+    # ---- 2. bucket by destination shard -----------------------------------
+    dest = flat_e // E_local                          # (T·topk,) in [0, P)
+    order = jnp.argsort(dest)
+    dest_s = dest[order]
+    # rank within destination group: position − start-of-run (max-scan)
+    same = jnp.concatenate([jnp.array([False]), dest_s[1:] == dest_s[:-1]])
+    run_start = jnp.where(~same, jnp.arange(T * topk), 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    rank = jnp.arange(T * topk) - run_start
+
+    C = int(max(1, round(capacity_factor * T * topk / P)))
+    keep = rank < C
+
+    dsafe = jnp.where(keep, dest_s, 0)
+    rsafe = jnp.where(keep, rank, C - 1)
+
+    send_x = jnp.zeros((P, C, d), x.dtype)
+    send_x = send_x.at[dsafe, rsafe].set(
+        jnp.where(keep[:, None], x[tok[order]], 0.0), mode="drop")
+    send_el = jnp.full((P, C), E_local, jnp.int32)    # E_local ⇒ invalid
+    send_el = send_el.at[dsafe, rsafe].set(
+        jnp.where(keep, flat_e[order] % E_local, E_local), mode="drop")
+
+    # ---- 3. dispatch all-to-all -------------------------------------------
+    recv_x = _a2a(send_x, axis)                        # (P, C, d)
+    recv_el = _a2a(send_el, axis)                      # (P, C)
+
+    # ---- 4. grouped FFN over received rows ---------------------------------
+    rows = recv_x.reshape(P * C, d)
+    els = recv_el.reshape(P * C)
+    r_order = jnp.argsort(els)                         # invalid rows sort last
+    rows_s = rows[r_order]
+    group_sizes = jnp.bincount(els[r_order], length=E_local + 1)[:E_local]
+
+    h = f(jax.lax.ragged_dot(rows_s, p_local["w_gate"], group_sizes)) * \
+        jax.lax.ragged_dot(rows_s, p_local["w_up"], group_sizes)
+    y_s = jax.lax.ragged_dot(h, p_local["w_down"], group_sizes)
+    # rows beyond Σgroup_sizes (invalid) got expert 0's tail — zero them
+    valid_s = els[r_order] < E_local
+    y_s = jnp.where(valid_s[:, None], y_s, 0.0)
+
+    y_rows = jnp.zeros_like(y_s).at[r_order].set(y_s)   # unsort
+    back = _a2a(y_rows.reshape(P, C, d), axis)          # (P, C, d) to senders
+
+    # ---- 5. combine ----------------------------------------------------------
+    gathered = back[dsafe, rsafe]                       # (T·topk, d) in sorted order
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    contrib = gathered * flat_g[order][:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok[order]].add(contrib.astype(x.dtype))
+
+    # shared experts compute locally (replicated weights)
+    if "shared" in p_local:
+        sp = p_local["shared"]
+        y = y + (f(x @ sp["gate"]) * (x @ sp["up"])) @ sp["down"]
+    return y

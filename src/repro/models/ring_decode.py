@@ -1,0 +1,72 @@
+"""Context-parallel (ring) decode attention — §Perf cell 3, iteration 2.
+
+With the KV cache sequence-sharded over 'model' (variant seqkv), GSPMD
+lowers decode attention by all-gathering K/V (44.9 GB/step on the
+starcoder2 decode_32k cell).  The right schedule is a *distributed online
+softmax*: each shard attends over its local S/16 cache slice and the shards
+combine (max, sum-exp, weighted-V) with tiny psums:
+
+    per device:  m_i = max(s_i), l_i = Σexp(s_i−m_i), o_i = p_i·V_i
+    combine:     m = pmax(m_i);  l = psum(l_i·e^{m_i−m});
+                 o = psum(o_i·e^{m_i−m}) / l
+
+Collective payload per layer: (B,H,hd)+(B,H)+(B,H) fp32 ≈ 3 MB vs 1.1 GB of
+K/V gather — a ~350x reduction of the attention collective.
+
+Exact (not approximate): online-softmax recombination; verified against the
+dense reference in tests/test_ring_decode.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ring_decode_attention_local(q, k_loc, v_loc, pos, n_kv_groups: int,
+                                axis: str = "model"):
+    """Per-shard body (inside shard_map over ``axis``).
+
+    q: (B, H, hd) replicated over `axis`; k_loc/v_loc: (B, S_loc, Hkv, hd)
+    sequence-sharded; pos: scalar global position (entries > pos masked).
+    Returns (B, H, hd).
+    """
+    B, S_loc, Hkv, hd = k_loc.shape
+    kx = jnp.repeat(k_loc, n_kv_groups, axis=2)  # (B,S,H,hd)
+    vx = jnp.repeat(v_loc, n_kv_groups, axis=2)
+
+    idx = jax.lax.axis_index(axis)
+    gpos = idx * S_loc + jnp.arange(S_loc)
+    valid = gpos <= pos
+
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / jnp.sqrt(hd)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_loc = jnp.max(s, axis=-1)                                  # (B,H)
+    p = jnp.exp(s - m_loc[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l_loc = jnp.sum(p, axis=-1)                                  # (B,H)
+    o_loc = jnp.einsum("bhs,bshd->bhd", p, vx.astype(jnp.float32))
+
+    m = jax.lax.pmax(m_loc, axis)
+    corr = jnp.exp(m_loc - m)
+    l = jax.lax.psum(l_loc * corr, axis)
+    o = jax.lax.psum(o_loc * corr[..., None], axis)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def ring_cache_update(k_loc, v_loc, k_new, v_new, pos, axis: str = "model"):
+    """Write the new token's K/V into the shard that owns position ``pos``."""
+    S_loc = k_loc.shape[1]
+    idx = jax.lax.axis_index(axis)
+    owner = pos // S_loc
+    off = pos - owner * S_loc
+    upd_k = jax.lax.dynamic_update_slice_in_dim(
+        k_loc, k_new.astype(k_loc.dtype), off, axis=1)
+    upd_v = jax.lax.dynamic_update_slice_in_dim(
+        v_loc, v_new.astype(v_loc.dtype), off, axis=1)
+    mine = idx == owner
+    return (jnp.where(mine, upd_k, k_loc), jnp.where(mine, upd_v, v_loc))

@@ -1,0 +1,244 @@
+"""Block assembly for all families.
+
+Layers are grouped into *segments* — maximal runs of a repeating pattern
+(e.g. llama-vision: 20 × (4 self-attn + 1 cross-attn)).  Within a segment,
+parameters are stacked with a leading repeat axis and the forward pass is a
+``lax.scan`` with a remat'd body: compile time and HLO size stay O(pattern),
+not O(n_layers) — necessary when lowering 40 (arch × shape) dry-run cells.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attn_init,
+    cross_attention,
+    decode_self_attention,
+    init_kv_cache,
+    self_attention,
+)
+from repro.models.common import mlp_apply, mlp_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import init_ssm_state, mamba2_decode, mamba2_forward, mamba2_init
+from repro.models.mla import decode_mla_attention, init_mla_cache, mla_init, mla_self_attention
+from repro.models.moe import moe_ffn, moe_init
+from repro.models.xlstm import (
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_decode,
+    mlstm_forward,
+    mlstm_init,
+    slstm_decode,
+    slstm_forward,
+    slstm_init,
+)
+
+MIXER_HAS_MLP = {"dense": True, "moe": True, "xattn": True, "attn": True,
+                 "mamba2": False, "mlstm": False, "slstm": False}
+
+
+def segments(cfg: ModelConfig):
+    """[(pattern tuple, repeats)] covering cfg.layer_types in order."""
+    lt = cfg.layer_types
+    L = len(lt)
+    if cfg.layer_pattern:
+        p = cfg.layer_pattern
+        reps, rem = divmod(L, len(p))
+        segs = [(tuple(p), reps)] if reps else []
+        if rem:
+            segs.append((tuple(p[:rem]), 1))
+        return segs
+    if cfg.cross_attn_every:
+        p = tuple(lt[: cfg.cross_attn_every])
+        assert L % cfg.cross_attn_every == 0
+        return [(p, L // cfg.cross_attn_every)]
+    if cfg.n_experts and cfg.n_dense_layers:
+        return [(("dense",), cfg.n_dense_layers), (("moe",), L - cfg.n_dense_layers)]
+    return [((lt[0],), L)]
+
+
+# --------------------------------------------------------------------------
+# single block
+# --------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, lt: str, dtype):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": jnp.ones((d,), dtype)}
+    if lt in ("dense", "moe", "attn"):
+        p["attn"] = mla_init(k1, cfg, dtype) if cfg.attn_type == "mla" else attn_init(k1, cfg, dtype)
+    elif lt == "xattn":
+        p["attn"] = attn_init(k1, cfg, dtype, cross=True)
+    elif lt == "mamba2":
+        p["mixer"] = mamba2_init(k1, cfg, dtype)
+    elif lt == "mlstm":
+        p["mixer"] = mlstm_init(k1, cfg, dtype)
+    elif lt == "slstm":
+        p["mixer"] = slstm_init(k1, cfg, dtype)
+    else:
+        raise ValueError(lt)
+    if MIXER_HAS_MLP[lt] and (cfg.d_ff or lt == "moe"):
+        p["ln2"] = jnp.ones((d,), dtype)
+        if lt == "moe":
+            p["moe"] = moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(k3, d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, lt: str, positions, memory=None):
+    """Returns (x, aux_loss) — aux_loss is 0.0 for non-MoE blocks."""
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if lt in ("dense", "moe", "attn"):
+        mix = (mla_self_attention(p["attn"], h, cfg, positions)
+               if cfg.attn_type == "mla"
+               else self_attention(p["attn"], h, cfg, positions))
+    elif lt == "xattn":
+        mix = cross_attention(p["attn"], h, memory, cfg)
+    elif lt == "mamba2":
+        mix = mamba2_forward(p["mixer"], h, cfg)
+    elif lt == "mlstm":
+        mix = mlstm_forward(p["mixer"], h, cfg)
+    elif lt == "slstm":
+        mix = slstm_forward(p["mixer"], h, cfg)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if "ln2" in p:
+        h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if lt == "moe":
+            y, (aux, _load) = moe_ffn(p["moe"], h2, cfg)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.act)
+        x = x + y
+    return x, aux
+
+
+def block_decode(p, x, cfg: ModelConfig, lt: str, cache, pos, memory=None):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache = cache
+    if lt in ("dense", "moe", "attn"):
+        if cfg.attn_type == "mla":
+            mix, new_cache = decode_mla_attention(p["attn"], h, cfg, cache, pos)
+        else:
+            mix, new_cache = decode_self_attention(p["attn"], h, cfg, cache, pos)
+    elif lt == "xattn":
+        mix = cross_attention(p["attn"], h, memory, cfg)
+    elif lt == "mamba2":
+        mix, new_cache = mamba2_decode(p["mixer"], h, cfg, cache)
+    elif lt == "mlstm":
+        mix, new_cache = mlstm_decode(p["mixer"], h, cfg, cache)
+    elif lt == "slstm":
+        mix, new_cache = slstm_decode(p["mixer"], h, cfg, cache)
+    x = x + mix
+    if "ln2" in p:
+        h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if lt == "moe":
+            y, _ = moe_ffn(p["moe"], h2, cfg)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+def block_cache_init(cfg: ModelConfig, lt: str, batch: int, s_max: int, dtype):
+    if lt in ("dense", "moe", "attn"):
+        if cfg.attn_type == "mla":
+            return init_mla_cache(cfg, batch, s_max, dtype)
+        return init_kv_cache(cfg, batch, s_max, dtype)
+    if lt == "xattn":
+        return jnp.zeros((0,), dtype)  # stateless (memory passed separately)
+    if lt == "mamba2":
+        return init_ssm_state(cfg, batch)
+    if lt == "mlstm":
+        return init_mlstm_state(cfg, batch)
+    if lt == "slstm":
+        return init_slstm_state(cfg, batch)
+    raise ValueError(lt)
+
+
+# --------------------------------------------------------------------------
+# segment-stacked forward / decode
+# --------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig, dtype):
+    """Per-segment stacked params: list of tuples (one per pattern position)
+    of pytrees with leading repeat axis."""
+    stacks = []
+    for pat, reps in segments(cfg):
+        keys = jax.random.split(key, reps + 1)
+        key = keys[0]
+        seg_keys = keys[1:]
+
+        def one_rep(k, pat=pat):
+            ks = jax.random.split(k, len(pat))
+            return tuple(block_init(ks[i], cfg, lt, dtype) for i, lt in enumerate(pat))
+
+        stacks.append(jax.vmap(one_rep)(seg_keys))
+    return stacks
+
+
+def stack_apply(stacks, x, cfg: ModelConfig, positions, memory=None,
+                remat: bool = True, unroll: bool = False):
+    """``unroll=True`` replaces the layer scan with a Python loop — used by
+    the dry-run so cost_analysis counts every layer (XLA's cost model counts
+    a while-loop body once) at the price of a bigger HLO."""
+    total_aux = jnp.float32(0.0)
+    for (pat, reps), params in zip(segments(cfg), stacks):
+
+        def body(carry, p_slice, pat=pat):
+            x, aux = carry
+            for i, lt in enumerate(pat):
+                x, a = block_apply(p_slice[i], x, cfg, lt, positions, memory)
+                aux = aux + a
+            return (x, aux), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if unroll:
+            for r in range(reps):
+                p_slice = jax.tree.map(lambda a, r=r: a[r], params)
+                (x, total_aux), _ = body((x, total_aux), p_slice)
+        else:
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), params)
+    return x, total_aux
+
+
+def cache_init(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    caches = []
+    for pat, reps in segments(cfg):
+        one = tuple(block_cache_init(cfg, lt, batch, s_max, dtype) for lt in pat)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (reps, *a.shape)).copy(), one
+        ))
+    return caches
+
+
+def stack_decode(stacks, caches, x, cfg: ModelConfig, pos, memory=None,
+                 unroll: bool = False):
+    new_caches = []
+    for (pat, reps), params, cache in zip(segments(cfg), stacks, caches):
+
+        def body(x, pc, pat=pat):
+            p_slice, c_slice = pc
+            new_c = []
+            for i, lt in enumerate(pat):
+                x, nc = block_decode(p_slice[i], x, cfg, lt, c_slice[i], pos, memory)
+                new_c.append(nc)
+            return x, tuple(new_c)
+
+        if unroll:
+            reps_out = []
+            for r in range(reps):
+                slc = jax.tree.map(lambda a, r=r: a[r], (params, cache))
+                x, nc = body(x, slc)
+                reps_out.append(nc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *reps_out)
+        else:
+            x, new_cache = jax.lax.scan(body, x, (params, cache))
+        new_caches.append(new_cache)
+    return x, new_caches

@@ -1,0 +1,255 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent block-diagonal connections), arXiv:2405.04517.
+
+mLSTM — per head, matrix memory C ∈ R^{hd×hd}:
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ,   n_t = f_t n_{t-1} + i_t k_t
+    y_t = C_tᵀ q_t / max(|n_tᵀ q_t|, 1)
+with exponential input gate and the m_t stabiliser from the paper.  Training
+uses a *chunkwise* form: sequential scan over chunks, quadratic within chunk
+(mirrors kernels used by the official implementation); decode is O(1).
+
+sLSTM — per head block-diagonal recurrence; inherently sequential, computed
+with a scan over time (the paper accepts this: sLSTM trades parallelism for
+state tracking).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, H * hd, dtype),
+        "wv": dense_init(ks[2], d, H * hd, dtype),
+        "wi": dense_init(ks[3], d, H, dtype, scale=0.01),
+        "wf": dense_init(ks[4], d, H, dtype, scale=0.01),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # forget-gate open at init
+        "wo": dense_init(ks[5], H * hd, d, dtype),
+        "norm": jnp.ones((H * hd,), dtype),
+    }
+
+
+def _mlstm_gates(p, x, H):
+    logi = (x @ p["wi"]).astype(jnp.float32)                  # (B,S,H)
+    logf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32) + p["f_bias"])
+    return logi, logf
+
+
+def mlstm_forward(p, x, cfg, chunk: int = 64):
+    """Chunkwise-parallel mLSTM.  x: (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    C = min(chunk, S)
+    assert S % C == 0
+    nc = S // C
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    logi, logf = _mlstm_gates(p, x, H)
+
+    def chunked(t):
+        return t.reshape(B, nc, C, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(chunked, (q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), logi, logf)))
+    causal = jnp.tril(jnp.ones((C, C), bool))
+
+    def body(carry, inp):
+        Cm, n, m = carry        # (B,H,hd,hd), (B,H,hd), (B,H)
+        qc, kc, vc, ic, fc = inp                    # (B,C,·)
+        cumf = jnp.cumsum(fc, axis=1)               # (B,C,H)
+        # log gate weight of source s as seen at t:  cumf_t − cumf_s + i_s
+        g_src = ic - cumf                            # (B,C,H) (+cumf_t at use)
+        # intra-chunk stabilised weights
+        m_intra = jnp.max(jnp.where(causal[None, :, :, None],
+                                    g_src[:, None, :, :] + cumf[:, :, None, :],
+                                    -jnp.inf), axis=2)          # (B,C,H)
+        # inter-chunk: carried m + cumf_t
+        m_inter = m[:, None, :] + cumf                           # (B,C,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+
+        w = jnp.exp(g_src[:, None, :, :] + cumf[:, :, None, :] - m_t[:, :, None, :])
+        w = jnp.where(causal[None, :, :, None], w, 0.0)          # (B,C,C,H)
+        sc = jnp.einsum("bthd,bshd->btsh", qc, kc)               # (B,C,C,H)
+        wsc = w * sc
+        num_intra = jnp.einsum("btsh,bshd->bthd", wsc, vc)
+        den_intra = jnp.einsum("btsh,bsh->bth", wsc, jnp.ones_like(cumf))
+
+        carry_scale = jnp.exp(m_inter - m_t)                     # (B,C,H)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qc, Cm) * carry_scale[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qc, n) * carry_scale
+
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        y = (num_intra + num_inter) / den[..., None]             # (B,C,H,hd)
+
+        # update carried state to end of chunk
+        tot = cumf[:, -1]                                        # (B,H)
+        m_new = jnp.maximum(m + tot, jnp.max(ic + tot[:, None, :] - cumf, axis=1))
+        upd_w = jnp.exp(ic + tot[:, None, :] - cumf - m_new[:, None, :])  # (B,C,H)
+        Cm_new = Cm * jnp.exp(m + tot - m_new)[:, :, None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", upd_w, kc, vc
+        )
+        n_new = n * jnp.exp(m + tot - m_new)[:, :, None] + jnp.einsum(
+            "bsh,bshd->bhd", upd_w, kc
+        )
+        return (Cm_new, n_new, m_new), y
+
+    Cm0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, y = jax.lax.scan(body, (Cm0, n0, m0), xs)
+    y = y.swapaxes(0, 1).reshape(B, S, H * hd)
+
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm"].astype(jnp.float32)
+    return y.astype(x.dtype) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    ks = jax.random.split(key, 9)
+    p = {"norm": jnp.ones((d,), dtype), "wo": dense_init(ks[8], d, d, dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[i], d, d, dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (H, hd, hd)) / jnp.sqrt(hd)).astype(dtype)
+        p[f"b{g}"] = jnp.zeros((d,), jnp.float32)
+    p["bf"] = jnp.full((d,), 3.0, jnp.float32)
+    return p
+
+
+def _slstm_scan(p, zx, ix, fx, ox, H, hd, h0, c0, n0, m0):
+    """Shared time scan for train (full seq) and decode (1 step)."""
+
+    def rmul(h, r):  # block-diagonal recurrence: (B,H,hd) x (H,hd,hd)
+        return jnp.einsum("bhd,hde->bhe", h, r.astype(jnp.float32))
+
+    def step(carry, inp):
+        h, c, n, m = carry                           # (B,H,hd) fp32, m (B,H,hd)
+        zt, it, ft, ot = inp                         # (B,H,hd)
+        z = jnp.tanh(zt + rmul(h, p["rz"]).reshape(zt.shape))
+        logi = it + rmul(h, p["ri"]).reshape(it.shape)
+        logf = jax.nn.log_sigmoid(ft + rmul(h, p["rf"]).reshape(ft.shape))
+        o = jax.nn.sigmoid(ot + rmul(h, p["ro"]).reshape(ot.shape))
+        m_new = jnp.maximum(logf + m, logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = jnp.maximum(f_s * n + i_s, jnp.exp(-m_new))
+        h_new = o * c_new / n_new
+        return (h_new, c_new, n_new, m_new), h_new
+
+    return jax.lax.scan(step, (h0, c0, n0, m0), (zx, ix, fx, ox))
+
+
+def _slstm_preact(p, x, H, hd):
+    B, S, d = x.shape
+    out = []
+    for g in ("z", "i", "f", "o"):
+        t = (x @ p[f"w{g}"]).astype(jnp.float32) + p[f"b{g}"]
+        out.append(t.reshape(B, S, H, hd).swapaxes(0, 1))  # (S,B,H,hd)
+    return out
+
+
+def slstm_forward(p, x, cfg):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    zx, ix, fx, ox = _slstm_preact(p, x, H, hd)
+    init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, H, hd), -1e30, jnp.float32),
+    )
+    _, h = _slstm_scan(p, zx, ix, fx, ox, H, hd, *init)
+    y = h.swapaxes(0, 1).reshape(B, S, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm"].astype(jnp.float32)
+    return y.astype(x.dtype) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# decode states
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLSTMState:
+    C: jax.Array  # (B,H,hd,hd)
+    n: jax.Array  # (B,H,hd)
+    m: jax.Array  # (B,H)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SLSTMState:
+    h: jax.Array
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array  # each (B,H,hd)
+
+
+def init_mlstm_state(cfg, batch):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def init_slstm_state(cfg, batch):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(h=z(), c=z(), n=z(), m=jnp.full((batch, H, hd), -1e30, jnp.float32))
+
+
+def mlstm_decode(p, x, cfg, st: MLSTMState):
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    q = (x @ p["wq"]).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    logi, logf = _mlstm_gates(p, x, H)
+    logi, logf = logi[:, 0], logf[:, 0]                      # (B,H)
+
+    m_new = jnp.maximum(logf + st.m, logi)
+    i_s = jnp.exp(logi - m_new)[..., None]
+    f_s = jnp.exp(logf + st.m - m_new)[..., None]
+    C = st.C * f_s[..., None] + i_s[..., None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = st.n * f_s + i_s * k
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    y = jnp.einsum("bhd,bhde->bhe", q, C) / den[..., None]
+    y = y.reshape(B, 1, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm"].astype(jnp.float32)
+    return y.astype(x.dtype) @ p["wo"], MLSTMState(C=C, n=n, m=m_new)
+
+
+def slstm_decode(p, x, cfg, st: SLSTMState):
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    zx, ix, fx, ox = _slstm_preact(p, x, H, hd)          # each (1,B,H,hd)
+    (h, c, n, m), hseq = _slstm_scan(p, zx, ix, fx, ox, H, hd,
+                                     st.h, st.c, st.n, st.m)
+    y = hseq[0].reshape(B, 1, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)) * p["norm"].astype(jnp.float32)
+    return y.astype(x.dtype) @ p["wo"], SLSTMState(h=h, c=c, n=n, m=m)

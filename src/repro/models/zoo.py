@@ -1,0 +1,131 @@
+"""Public model API: build a model from a ModelConfig.
+
+Returned ``Model`` exposes pure functions (init / forward / loss_fn /
+cache_init / decode_step) suitable for jit, pjit sharding and eval_shape-based
+abstract initialisation (the dry-run never materialises parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import embed_init, rms_norm, dense_init
+from repro.models.config import ModelConfig
+from repro.models.transformer import cache_init, stack_apply, stack_decode, stack_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]          # (params, batch) -> (logits, aux)
+    loss_fn: Callable[..., Any]          # (params, batch) -> (loss, metrics)
+    cache_init: Callable[..., Any]       # (batch, s_max, dtype) -> cache
+    decode_step: Callable[..., Any]      # (params, cache, batch, pos) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig, param_dtype=jnp.float32,
+                unroll_layers: bool = False) -> Model:
+    D, V = cfg.d_model, cfg.vocab_size
+
+    def init(key):
+        k_emb, k_stack, k_head, k_mtp = jax.random.split(key, 4)
+        params = {
+            "embed": embed_init(k_emb, V, D, param_dtype),
+            "stacks": stack_init(k_stack, cfg, param_dtype),
+            "ln_f": jnp.ones((D,), param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, D, V, param_dtype)
+        if cfg.mtp_depth:
+            params["mtp_proj"] = dense_init(k_mtp, D, D, param_dtype)
+        return params
+
+    def _embed(params, batch):
+        if cfg.embed_inputs:
+            x = params["embed"][batch["tokens"]]
+        else:
+            x = batch["embeddings"].astype(params["embed"].dtype)
+        return x
+
+    def _logits(params, x):
+        from repro.models.common import bf16_grad
+
+        x = bf16_grad(rms_norm(params["ln_f"], x, cfg.norm_eps))
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return x @ w
+
+    def forward(params, batch):
+        x = _embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        memory = batch.get("vision_embeddings") if cfg.n_vision_tokens else None
+        x, aux = stack_apply(params["stacks"], x, cfg, positions, memory,
+                             unroll=unroll_layers)
+        return x, aux
+
+    def _xent(logits, targets):
+        """Cross-entropy via one-hot einsum: partition-friendly under SPMD
+        (take_along_axis on a vocab-sharded tensor triggers GSPMD's scatter
+        fallback, replicating the batch — measured, see EXPERIMENTS.md)."""
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+        true_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        return lse - true_logit
+
+    def loss_fn(params, batch):
+        x, aux = forward(params, batch)
+        logits = _logits(params, x)
+        targets = batch["targets"]
+        nll = _xent(logits, targets)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(nll)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+        metrics = {"nll": loss, "aux": aux}
+        if cfg.n_experts and not cfg.router_aux_free:
+            loss = loss + 0.01 * aux
+        if cfg.mtp_depth:
+            # lightweight multi-token-prediction head: predict t+2 from a
+            # projected hidden state (DESIGN.md records the simplification)
+            h2 = x @ params["mtp_proj"]
+            logits2 = _logits(params, h2)
+            t2 = jnp.roll(targets, -1, axis=-1)
+            nll2 = _xent(logits2, t2)
+            m2 = mask * (jnp.arange(targets.shape[-1]) < targets.shape[-1] - 1)
+            mtp = jnp.sum(nll2 * m2) / jnp.maximum(jnp.sum(m2), 1.0)
+            loss = loss + 0.3 * mtp
+            metrics["mtp"] = mtp
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def cache_init_fn(batch: int, s_max: int, dtype=jnp.bfloat16):
+        return cache_init(cfg, batch, s_max, dtype)
+
+    def decode_step(params, cache, batch, pos):
+        """One decode step.  batch: {"tokens": (B,)} or {"embeddings": (B,1,D)}
+        (+ "vision_embeddings" for vlm).  Returns (logits (B,V), new cache)."""
+        if cfg.embed_inputs:
+            x = params["embed"][batch["tokens"]][:, None, :]
+        else:
+            x = batch["embeddings"].astype(params["embed"].dtype)
+        memory = batch.get("vision_embeddings") if cfg.n_vision_tokens else None
+        x, new_cache = stack_decode(params["stacks"], cache, x, cfg, pos, memory,
+                                    unroll=unroll_layers)
+        logits = _logits(params, x)[:, 0]
+        return logits, new_cache
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        forward=forward,
+        loss_fn=loss_fn,
+        cache_init=cache_init_fn,
+        decode_step=decode_step,
+    )

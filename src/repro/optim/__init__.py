@@ -1,0 +1,2 @@
+from repro.optim.api import Optimizer, make_optimizer  # noqa: F401
+from repro.optim.schedules import cosine_schedule, wsd_schedule  # noqa: F401

@@ -1,0 +1,184 @@
+"""Optimizers: AdamW (configurable moment dtype, incl. 8-bit) and Adafactor.
+
+Large-scale memory knobs (per-param-bytes, used by the deepseek-v3 cells):
+  adamw fp32 moments:            4 (master) + 4 + 4       = 12 B/param + param
+  adamw bf16 moments:            4 + 2 + 2                =  8
+  adamw int8 moments:            4 + 1 + 1                =  6  (per-tensor scale)
+  adafactor (factored v, no m):  ~param + O(rows+cols)    ≈  4 + ε
+State sharding follows param sharding leaf-wise (see sharding/rules.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---- int8 moment quantisation (per-tensor absmax scale) --------------------
+
+def _q8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return (x / scale).round().astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_optimizer(
+    name: str = "adamw",
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    moment_dtype: str = "f32",   # f32 | bf16 | int8 (adamw only)
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    if name == "adamw":
+        return _adamw(lr_fn, b1, b2, eps, weight_decay, grad_clip, moment_dtype)
+    if name == "adafactor":
+        return _adafactor(lr_fn, b2, eps, weight_decay, grad_clip)
+    if name == "sgd":
+        return _sgd(lr_fn, grad_clip)
+    raise ValueError(name)
+
+
+def _adamw(lr_fn, b1, b2, eps, wd, grad_clip, moment_dtype):
+    def init(params):
+        def one(p):
+            if moment_dtype == "int8":
+                return {
+                    "m": jnp.zeros(p.shape, jnp.int8), "ms": jnp.float32(1e-12),
+                    "v": jnp.zeros(p.shape, jnp.int8), "vs": jnp.float32(1e-12),
+                }
+            dt = jnp.bfloat16 if moment_dtype == "bf16" else jnp.float32
+            return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+        return {"mu": jax.tree.map(one, params), "count": jnp.int32(0)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def one(g, p, mu):
+            g = g.astype(jnp.float32)
+            if moment_dtype == "int8":
+                m = b1 * _dq8(mu["m"], mu["ms"]) + (1 - b1) * g
+                v = b2 * _dq8(mu["v"], mu["vs"]) + (1 - b2) * jnp.square(g)
+                qm, ms = _q8(m)
+                qv, vs = _q8(v)
+                new_mu = {"m": qm, "ms": ms, "v": qv, "vs": vs}
+            else:
+                m = b1 * mu["m"].astype(jnp.float32) + (1 - b1) * g
+                v = b2 * mu["v"].astype(jnp.float32) + (1 - b2) * jnp.square(g)
+                new_mu = {"m": m.astype(mu["m"].dtype), "v": v.astype(mu["v"].dtype)}
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            decay = wd * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (upd + decay)
+            return new_p.astype(p.dtype), new_mu
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        out = [one(g, p, mu) for g, p, mu in zip(flat_g, flat_p, flat_mu)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_params, {"mu": new_mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def _adafactor(lr_fn, b2, eps, wd, grad_clip):
+    """Factored second moment (Shazeer & Stern 2018), no first moment."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"mu": jax.tree.map(one, params), "count": jnp.int32(0)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        lr = lr_fn(step)
+        beta = 1 - count.astype(jnp.float32) ** -0.8  # time-dependent decay
+
+        def one(g, p, mu):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if p.ndim >= 2:
+                vr = beta * mu["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * mu["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+                )
+                upd = g / jnp.maximum(denom, eps)
+                new_mu = {"vr": vr, "vc": vc}
+            else:
+                v = beta * mu["v"] + (1 - beta) * g2
+                upd = g / jnp.maximum(jnp.sqrt(v), eps)
+                new_mu = {"v": v}
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            decay = wd * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (upd + decay)
+            return new_p.astype(p.dtype), new_mu
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        out = [one(g, p, mu) for g, p, mu in zip(flat_g, flat_p, flat_mu)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_params, {"mu": new_mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def _sgd(lr_fn, grad_clip):
+    def init(params):
+        return {"count": jnp.int32(0)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new_params, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)

@@ -1,0 +1,32 @@
+"""LR schedules: cosine and WSD (warmup–stable–decay, MiniCPM arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+                 final_frac: float = 0.01):
+    """Warmup → stable plateau → sharp decay over the last decay_frac steps."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        dec = peak_lr * (final_frac ** prog)  # exponential decay to final_frac
+        out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, peak_lr, dec))
+        return out
+
+    return lr

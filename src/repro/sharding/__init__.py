@@ -1,0 +1,5 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_spec,
+    make_opt_specs,
+    make_param_specs,
+)

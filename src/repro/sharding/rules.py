@@ -1,0 +1,215 @@
+"""Parameter / activation sharding rules (DP + FSDP + TP + EP + pod axis).
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod (launch/mesh.py).
+
+Policy (GSPMD partitioning; jit inserts the collectives):
+  * batch        → ("pod", "data")                        (DP)
+  * TP dim       → "model" (attention heads / FFN hidden / expert dim),
+                   only when the head count or expert count divides the axis —
+                   otherwise that tensor falls back to FSDP-only (recorded
+                   per-arch in EXPERIMENTS.md; e.g. minicpm's 36 heads)
+  * FSDP dim     → "data" (+ "pod" when cfg_zero_over_pod, used by
+                   deepseek-v3-671b so optimizer state fits; trades cross-pod
+                   all-gathers for memory)
+  * stacked layer axis (leading repeat dim from transformer.segments) → None
+
+Optimizer state follows the parameter spec leaf-wise (adafactor's factored
+moments drop the corresponding dims).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def _fsdp_axes(mesh, zero_over_pod: bool):
+    if zero_over_pod and "pod" in mesh.shape:
+        return ("pod", "data")
+    return "data"
+
+
+def batch_spec(mesh) -> P:
+    """(B, ...) activation/batch sharding."""
+    if "pod" in mesh.shape:
+        return P(("pod", "data"))
+    return P("data")
+
+
+def _matrix_spec(mesh, d_in, d_out, tp_out: bool, tp_ok: bool, fsdp):
+    """2-D weight: TP one dim over 'model' (if aligned), FSDP the other."""
+    model = _axis_size(mesh, "model")
+    fsdp_size = np.prod([_axis_size(mesh, a) for a in (fsdp if isinstance(fsdp, tuple) else (fsdp,))])
+    if tp_out:
+        tp = "model" if (tp_ok and _div(d_out, model)) else None
+        fs = fsdp if _div(d_in, int(fsdp_size)) else None
+        return P(fs, tp)
+    tp = "model" if (tp_ok and _div(d_in, model)) else None
+    fs = fsdp if _div(d_out, int(fsdp_size)) else None
+    return P(tp, fs)
+
+
+def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh,
+               zero_over_pod: bool = False, tp_enable: bool = True) -> P:
+    """Sharding spec for one parameter leaf identified by its tree path.
+
+    ``tp_enable=False`` is the §Perf "FSDP-only" variant: no tensor
+    parallelism — the model axis joins the FSDP group instead, eliminating
+    per-layer activation all-reduces (right call for ≤3B dense models)."""
+    model = _axis_size(mesh, "model")
+    fsdp = _fsdp_axes(mesh, zero_over_pod)
+    if not tp_enable:
+        fsdp = (("pod", "data", "model") if ("pod" in mesh.shape and zero_over_pod)
+                else ("data", "model"))
+    name = path.split("/")[-1]
+    ndim = len(shape)
+
+    # stacked segment params carry a leading repeat axis
+    stacked = path.startswith("stacks/")
+    core_shape = shape[1:] if stacked else shape
+
+    def done(spec_tuple):
+        if stacked:
+            spec_tuple = (None,) + tuple(spec_tuple)
+        # pad to ndim
+        spec_tuple = tuple(spec_tuple) + (None,) * (ndim - len(spec_tuple))
+        return P(*spec_tuple)
+
+    if len(core_shape) <= 1:
+        return done((None,) * len(core_shape))
+
+    heads_ok = _div(cfg.n_heads, model) and tp_enable
+    kv_ok = _div(cfg.n_kv_heads, model) and tp_enable
+
+    # ---- MoE expert-stacked weights: EP over 'model' on the expert dim ----
+    if name in ("w_gate", "w_up", "w_down") and len(core_shape) == 3:
+        e_ok = _div(cfg.n_experts, model) and tp_enable
+        ep = "model" if e_ok else None
+        if name == "w_down":  # (E, de, d)
+            return done((ep, None, fsdp if _div(core_shape[2], _fs_size(mesh, fsdp)) else None))
+        return done((ep, fsdp if _div(core_shape[1], _fs_size(mesh, fsdp)) else None, None))
+    if name == "router":
+        return done((fsdp if _div(core_shape[0], _fs_size(mesh, fsdp)) else None, None))
+
+    # ---- embeddings / head -------------------------------------------------
+    if name == "embed":  # (V, D) — vocab-parallel ONLY: sharding D over the
+        # batch axis makes the token-gather output conflict with batch
+        # sharding and GSPMD replicates the batch (measured 39 GB all-gathers)
+        v_ok = _div(core_shape[0], model) and tp_enable
+        return done(("model" if v_ok else None, None))
+    if name in ("head", "mtp_proj"):  # (D, V) / (D, D)
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=tp_enable, fsdp=fsdp))
+
+    # ---- attention ----------------------------------------------------------
+    if name == "wq":
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=heads_ok, fsdp=fsdp))
+    if name in ("wk", "wv"):
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=kv_ok, fsdp=fsdp))
+    if name == "wo":
+        return done(_matrix_spec(mesh, *core_shape, tp_out=False, tp_ok=heads_ok, fsdp=fsdp))
+    # MLA projections
+    if name in ("wq_down", "wkv_down", "wk_rope"):
+        return done(_matrix_spec(mesh, *core_shape, tp_out=False, tp_ok=False, fsdp=fsdp))
+    if name in ("wq_up", "wkv_up"):
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=heads_ok, fsdp=fsdp))
+
+    # ---- MLPs ----------------------------------------------------------------
+    if name in ("gate", "up"):
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=tp_enable, fsdp=fsdp))
+    if name == "down":
+        return done(_matrix_spec(mesh, *core_shape, tp_out=False, tp_ok=tp_enable, fsdp=fsdp))
+
+    # ---- SSM / xLSTM ----------------------------------------------------------
+    if name == "w_in":   # (D, mixed-boundary output) → FSDP only
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=False, fsdp=fsdp))
+    if name == "w_out":  # (d_in, D): d_in = expand·D, head-aligned
+        d_in = core_shape[0]
+        nh = d_in // max(cfg.ssm_head_dim, 1)
+        return done(_matrix_spec(mesh, *core_shape, tp_out=False,
+                                 tp_ok=_div(nh, model) and tp_enable, fsdp=fsdp))
+    if name in ("rz", "ri", "rf", "ro"):  # (H, hd, hd) block-diagonal recurrence
+        return done(("model" if heads_ok else None, None, None))
+
+    # default: 2-D → FSDP first dim; others replicated
+    if len(core_shape) == 2:
+        return done(_matrix_spec(mesh, *core_shape, tp_out=True, tp_ok=False, fsdp=fsdp))
+    return done((None,) * len(core_shape))
+
+
+def _fs_size(mesh, fsdp) -> int:
+    axes = fsdp if isinstance(fsdp, tuple) else (fsdp,)
+    return int(np.prod([_axis_size(mesh, a) for a in axes]))
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(f"#{p.idx}")
+            else:
+                parts.append(str(p))
+        keys.append("/".join(parts))
+    return flat, treedef, keys
+
+
+def make_param_specs(cfg: ModelConfig, abstract_params, mesh,
+                     zero_over_pod: bool = False, tp_enable: bool = True):
+    """Pytree of PartitionSpec matching abstract_params."""
+    flat, treedef, keys = _paths(abstract_params)
+    specs = [
+        param_spec(k, tuple(leaf.shape), cfg, mesh, zero_over_pod, tp_enable)
+        for k, (_, leaf) in zip(keys, flat)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_opt_specs(param_specs, abstract_opt_state):
+    """Derive optimizer-state specs from parameter specs by shape shadowing.
+
+    mu subtrees: m/v → param spec; scales → replicated; adafactor vr → spec
+    minus last dim; vc → spec minus second-to-last dim."""
+    flat_p, pdef = jax.tree_util.tree_flatten(param_specs,
+                                              is_leaf=lambda x: isinstance(x, P))
+    mu = abstract_opt_state["mu"]
+    mu_subtrees = pdef.flatten_up_to(mu)
+
+    def spec_for(sub, spec: P):
+        def leaf_spec(kp, leaf):
+            name = str(kp[-1].key) if hasattr(kp[-1], "key") else ""
+            t = tuple(spec)
+            if name in ("m", "v"):
+                return P(*t) if len(leaf.shape) == len(t) else P(*t[: len(leaf.shape)])
+            if name in ("ms", "vs"):
+                return P()
+            if name == "vr":
+                return P(*t[:-1])
+            if name == "vc":
+                return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P()
+            return P()
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, sub)
+
+    mu_specs = [spec_for(sub, spec) for sub, spec in zip(mu_subtrees, flat_p)]
+    return {
+        "mu": jax.tree_util.tree_unflatten(pdef, mu_specs),
+        "count": P(),
+    }

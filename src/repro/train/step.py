@@ -1,0 +1,125 @@
+"""train_step / serve_step builders.
+
+``build_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (a lax.scan over microbatches
+— the standard memory/efficiency trade) and the DeepSeek-V3 aux-free router
+bias update applied outside the gradient.
+
+The function is jit/pjit-agnostic: the launcher decides shardings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.moe import update_router_bias
+from repro.models.zoo import Model
+from repro.optim.api import Optimizer
+
+
+def build_train_step(model: Model, optimizer: Optimizer, microbatch: int = 1):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatch > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                msum = jax.tree.map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:]),
+                batch,
+            )
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (_, m0), _ = jax.eval_shape(
+                lambda p, b: grad_fn(p, b), params,
+                jax.tree.map(lambda x: x[0], mbs),
+            )
+            zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), m0)
+            (grads, metrics), _ = jax.lax.scan(micro, (zero_g, zero_m), mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m / microbatch, metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+
+        # aux-loss-free MoE balancing: adjust router bias against load
+        if cfg.n_experts and cfg.router_aux_free:
+            new_params = _apply_router_bias_update(new_params, batch, model)
+
+        metrics = dict(metrics)
+        metrics["grad_norm"] = _gnorm(grads)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def _gnorm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _apply_router_bias_update(params, batch, model: Model):
+    """Recompute expert loads cheaply from the router alone and nudge biases.
+
+    Cost: one (T, d)×(d, E) matmul per MoE segment — negligible vs the step.
+    """
+    cfg = model.cfg
+    if cfg.embed_inputs:
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeddings"].astype(params["embed"].dtype)
+    x2d = x.reshape(-1, cfg.d_model)
+
+    def upd(stack_params):
+        def leaf_update(p):
+            if not (isinstance(p, dict) and "router" in p and "router_bias" in p):
+                return p
+            stacked = p["router"].ndim == 3
+            router = jnp.mean(p["router"], axis=0) if stacked else p["router"]
+            bias = jnp.mean(p["router_bias"], axis=0) if stacked else p["router_bias"]
+            sel = x2d.astype(jnp.float32) @ router + bias
+            _, idx = jax.lax.top_k(sel, cfg.experts_per_token)
+            load = jnp.bincount(idx.reshape(-1), length=cfg.n_experts).astype(jnp.float32)
+            p = dict(p)
+            p["router_bias"] = update_router_bias(p["router_bias"], load)
+            return p
+
+        return leaf_update(stack_params)
+
+    def walk(t):
+        if isinstance(t, dict):
+            if "router" in t and "router_bias" in t:
+                return upd(t)
+            return {k: walk(v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            return type(t)(walk(v) for v in t)
+        return t
+
+    return walk(params)
+
+
+def build_serve_step(model: Model):
+    """(params, cache, batch, pos) -> (next_token, logits, cache) greedy."""
+
+    def serve_step(params, cache, batch, pos):
+        logits, new_cache = model.decode_step(params, cache, batch, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,120 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and exercised by tests/examples):
+  * checkpoint every N steps (atomic commit, keep-K, optional async);
+  * resume-from-latest on construction — a killed/restarted process
+    continues from the last committed step with the identical data stream
+    (stateless step-indexed pipeline);
+  * NaN/Inf guard: a bad step is *skipped* (params/opt not committed) and
+    counted; after `max_bad_steps` consecutive bad steps the trainer restores
+    the last checkpoint (gradient-spike recovery);
+  * elastic restore: restore_resharded() places the checkpoint on whatever
+    mesh the relaunched job has (tests/test_checkpoint.py);
+  * straggler mitigation: host input pipeline is prefetched on a background
+    thread (data/pipeline.py); the BSP step itself is synchronous — on real
+    multi-host deployments the launcher pairs this with XLA's collective
+    timeouts + job-level restart, which this trainer's resume path supplies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data.pipeline import Prefetcher
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_steps: int = 200
+    max_bad_steps: int = 3
+    async_ckpt: bool = False
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, train_step: Callable, params, opt_state, dataset,
+                 tcfg: TrainerConfig, jit: bool = True):
+        self.tcfg = tcfg
+        # no buffer donation: the NaN guard needs the pre-step state alive to
+        # skip a poisoned update (at scale you would donate and lean on the
+        # checkpoint-restore path instead; both paths exist here)
+        self.train_step = jax.jit(train_step) if jit else train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.dataset = dataset
+        self.step = 0
+        self.bad_streak = 0
+        self.history: list[dict] = []
+
+        # ---- resume from latest committed checkpoint ----------------------
+        last = latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            state, _ = restore(tcfg.ckpt_dir, {"params": self.params,
+                                               "opt": self.opt_state})
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = last
+            print(f"[trainer] resumed from step {last}")
+
+    # ------------------------------------------------------------------
+    def _checkpoint(self):
+        save(self.tcfg.ckpt_dir, self.step,
+             {"params": self.params, "opt": self.opt_state},
+             keep=self.tcfg.keep, async_=self.tcfg.async_ckpt)
+
+    def _restore_last(self):
+        state, step = restore(self.tcfg.ckpt_dir,
+                              {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        print(f"[trainer] NaN guard: restored step {step}")
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: Optional[int] = None) -> list[dict]:
+        n_steps = n_steps or self.tcfg.max_steps
+        end = self.step + n_steps
+        pf = Prefetcher(self.dataset, start_step=self.step)
+        try:
+            while self.step < end:
+                step_idx, batch = pf.next()
+                batch = jax.tree.map(jnp.asarray, batch)
+                t0 = time.perf_counter()
+                new_params, new_opt, metrics = self.train_step(
+                    self.params, self.opt_state, batch, jnp.int32(step_idx)
+                )
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+
+                if not np.isfinite(loss):
+                    self.bad_streak += 1
+                    print(f"[trainer] step {step_idx}: non-finite loss, skipped "
+                          f"({self.bad_streak}/{self.tcfg.max_bad_steps})")
+                    if self.bad_streak >= self.tcfg.max_bad_steps:
+                        self._restore_last()
+                        self.bad_streak = 0
+                    else:
+                        self.step = step_idx + 1  # skip: keep pre-step state
+                    continue
+
+                self.bad_streak = 0
+                self.params, self.opt_state = new_params, new_opt
+                self.step = step_idx + 1
+                rec = {"step": step_idx, "loss": loss, "sec": dt}
+                self.history.append(rec)
+                if step_idx % self.tcfg.log_every == 0:
+                    print(f"[trainer] step {step_idx} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self._checkpoint()
+        finally:
+            pf.stop()
+        self._checkpoint()
+        return self.history

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see the real single CPU device — only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

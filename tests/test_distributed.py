@@ -1,0 +1,87 @@
+"""Distributed partitioner: shard_map equivalence vs single-device, run in a
+subprocess with 8 forced host devices (only the dry-run uses 512; tests keep
+the main process at 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.graphs import rmat, grid2d
+from repro.core import jet_round, edge_cut, l_max, total_overload
+from repro.distributed import shard_graph, dpartition
+from repro.distributed.dgraph import labels_to_sharded, labels_from_sharded, owned_mask
+from repro.distributed.djet import make_djet_round, make_drebalance
+
+out = {}
+g = rmat(scale=9, edge_factor=6, seed=2)
+k = 8
+labels = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, k, dtype=jnp.int32)
+
+# 1. jet round equivalence (deterministic moves)
+ref = jet_round(g, labels, jnp.zeros(g.n, bool), k, 0.5)
+mesh = jax.make_mesh((8,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+sg = shard_graph(g, 8)
+fn = make_djet_round(mesh, k, sg.n_local)
+lab_sh = labels_to_sharded(sg, labels)
+owned = owned_mask(sg)
+locked = jnp.zeros((8, sg.n_local), bool)
+new_sh, _ = fn(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, locked, jnp.float32(0.5))
+new = labels_from_sharded(sg, new_sh)
+out["jet_equal"] = bool(np.array_equal(np.asarray(ref.labels), np.asarray(new)))
+
+# 2. distributed rebalance restores balance
+skew = jnp.zeros(g.n, dtype=jnp.int32)  # all in block 0
+lmax = l_max(g, k, 0.03)
+reb = make_drebalance(mesh, k, sg.n_local)
+lab_sh2 = labels_to_sharded(sg, skew)
+new_sh2, ov = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh2,
+                  jax.random.PRNGKey(0), lmax)
+out["rebalance_ov"] = float(ov)
+
+# 3. full distributed multilevel quality ~ single-device quality
+gg = grid2d(48, 48)
+r = dpartition(gg, k=4, P=8, seed=0, refiner='d4xjet', max_inner=12)
+out["dist_cut"] = float(r.cut); out["dist_imb"] = float(r.imbalance)
+from repro.core import partition
+r2 = partition(gg, k=4, seed=0, refiner='d4xjet', max_inner=12)
+out["single_cut"] = float(r2.cut)
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
+
+
+def test_djet_round_matches_single_device(dist_results):
+    assert dist_results["jet_equal"] is True
+
+
+def test_drebalance_restores_balance(dist_results):
+    assert dist_results["rebalance_ov"] == 0.0
+
+
+def test_dpartition_quality(dist_results):
+    # same algorithm, same seed path → same neighbourhood of quality
+    assert dist_results["dist_imb"] <= 0.031
+    assert dist_results["dist_cut"] <= 1.25 * dist_results["single_cut"] + 8

@@ -1,0 +1,98 @@
+"""Halo (interface-only) exchange: bit-identical Jet moves vs baseline, with
+strictly fewer exchanged values."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.graphs import grid2d, rmat
+from repro.core import jet_round
+from repro.distributed.halo import (
+    shard_graph_halo, halo_labels_to_sharded, halo_labels_from_sharded,
+    make_halo_jet_round)
+
+out = {}
+for name, g in (("grid", grid2d(40, 40)), ("rmat", rmat(scale=9, edge_factor=5, seed=2))):
+    k = 8
+    labels = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, k, dtype=jnp.int32)
+    ref = jet_round(g, labels, jnp.zeros(g.n, bool), k, 0.5)
+
+    mesh = jax.make_mesh((8,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+    sg, perm = shard_graph_halo(g, 8)
+    fn = make_halo_jet_round(mesh, sg, k)
+    lab_sh = halo_labels_to_sharded(sg, perm, labels)
+    locked = jnp.zeros((8, sg.n_local), bool)
+    new_sh, _ = fn(sg, lab_sh, locked, jnp.float32(0.5))
+    new = halo_labels_from_sharded(sg, perm, new_sh)
+    out[name] = {
+        "equal": bool(np.array_equal(np.asarray(ref.labels), np.asarray(new))),
+        "h_local": sg.h_local, "n_local": sg.n_local,
+    }
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def halo_results():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(proc.stdout[-2000:])
+
+
+def test_halo_jet_equals_baseline(halo_results):
+    assert halo_results["grid"]["equal"]
+    assert halo_results["rmat"]["equal"]
+
+
+def test_halo_actually_shrinks_exchange(halo_results):
+    # meshy graph: interface ≪ interior
+    g = halo_results["grid"]
+    assert g["h_local"] < 0.6 * g["n_local"], g
+
+
+SCRIPT_E2E = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+from repro.graphs import grid2d
+from repro.distributed import dpartition
+
+g = grid2d(40, 40)
+r_halo = dpartition(g, k=4, P=8, seed=0, refiner="d4xjet", max_inner=10, halo=True)
+r_base = dpartition(g, k=4, P=8, seed=0, refiner="d4xjet", max_inner=10)
+print("RESULT::" + json.dumps({
+    "halo_cut": r_halo.cut, "halo_imb": r_halo.imbalance,
+    "base_cut": r_base.cut,
+}))
+"""
+
+
+def test_halo_end_to_end_partition():
+    """Full multilevel d4xJet with the halo fast path: balanced and within
+    the quality neighbourhood of the baseline protocol."""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT_E2E], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    res = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            res = json.loads(line[len("RESULT::"):])
+    assert res, proc.stdout[-2000:]
+    assert res["halo_imb"] <= 0.031
+    assert res["halo_cut"] <= 1.3 * res["base_cut"] + 10

@@ -1,0 +1,64 @@
+"""Expert-parallel all-to-all MoE ≡ single-device moe_ffn (8 host devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import configs
+from repro.models.moe import moe_init, moe_ffn
+from repro.models.moe_ep import moe_ep_local
+import dataclasses
+
+cfg = configs.get_smoke('deepseek_moe_16b')
+# E must divide the 8-way axis
+cfg = dataclasses.replace(cfg, n_experts=16, experts_per_token=2)
+p = moe_init(jax.random.PRNGKey(0), cfg)
+T, d = 64, cfg.d_model
+x = jax.random.normal(jax.random.PRNGKey(1), (2, T // 2, d)) * 0.5
+
+ref, (aux, load) = moe_ffn(p, x, cfg)
+ref2d = np.asarray(ref.reshape(T, d))
+
+mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+E_local = cfg.n_experts // 8
+
+def per_shard(router, wg, wu, wd, shared, x_loc):
+    p_local = {"router": router, "w_gate": wg, "w_up": wu,
+               "w_down": wd, "shared": shared}
+    # dropless: capacity ≥ all routes landing on one shard
+    return moe_ep_local(p_local, x_loc, cfg, capacity_factor=16.0)
+
+sh_e = P('model', None, None)
+f = jax.jit(jax.shard_map(per_shard, mesh=mesh, check_vma=False,
+    in_specs=(P(), sh_e, sh_e, sh_e, P(), P('model', None)),
+    out_specs=P('model', None)))
+
+x2d = x.reshape(T, d)           # tokens sharded over the axis: 8 per shard
+got = f(p["router"], p["w_gate"], p["w_up"], p["w_down"], p["shared"], x2d)
+err = float(jnp.max(jnp.abs(jnp.asarray(got) - ref2d)))
+print("RESULT::" + json.dumps({"err": err}))
+"""
+
+
+def test_moe_ep_matches_reference():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            res = json.loads(line[len("RESULT::"):])
+            assert res["err"] < 1e-3, res
+            return
+    raise AssertionError(proc.stdout[-2000:])

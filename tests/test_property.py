@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) for the partitioner's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    block_weights,
+    edge_cut,
+    jet_round,
+    l_max,
+    probabilistic_pass,
+    rebalance,
+    total_overload,
+)
+from repro.core.coarsen import contract
+from repro.core.graph import from_coo, validate
+from repro.core.rebalance import _bucket_index, _relative_gain
+
+
+@st.composite
+def random_graph(draw, max_n=24, max_m=80):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(n, max_m))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.integers(1, 5, m).astype(np.float32)
+    keep = u != v
+    if keep.sum() == 0:
+        u, v, w = np.array([0]), np.array([1]), np.array([1.0], np.float32)
+        keep = np.array([True])
+    nw = rng.integers(1, 4, n).astype(np.float32)
+    return from_coo(n, u[keep], v[keep], w[keep], nw=nw)
+
+
+@given(random_graph(), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_graph_valid_and_cut_bounds(g, k, seed):
+    validate(g)
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (g.n,), 0, k, dtype=jnp.int32)
+    cut = float(edge_cut(g, labels))
+    total = float(g.total_edge_weight) / 2
+    assert 0.0 <= cut <= total + 1e-4
+    bw = np.asarray(block_weights(g, labels, k))
+    assert bw.sum() == float(g.total_node_weight)
+
+
+@given(random_graph(), st.integers(2, 5), st.integers(0, 10_000),
+       st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_jet_round_never_increases_cut(g, k, seed, tau):
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (g.n,), 0, k, dtype=jnp.int32)
+    cut0 = float(edge_cut(g, labels))
+    res = jet_round(g, labels, jnp.zeros(g.n, bool), k, tau)
+    cut1 = float(edge_cut(g, res.labels))
+    assert cut1 <= cut0 + 1e-3
+
+
+@given(random_graph(), st.integers(2, 5), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_probabilistic_pass_move_invariants(g, k, seed):
+    """Alg. 1 per-realisation invariants: vertices only leave overloaded
+    blocks, never move INTO an overloaded block, and every mover had room in
+    its target at decision time.  (Balance of targets holds in expectation —
+    the paper's guarantee — not per-realisation, so that is not asserted.)"""
+    key = jax.random.PRNGKey(seed)
+    labels = jax.random.randint(key, (g.n,), 0, k, dtype=jnp.int32)
+    lmax = float(l_max(g, k, 0.03))
+    bw0 = np.asarray(block_weights(g, labels, k))
+    new = probabilistic_pass(g, labels, k, lmax, jax.random.fold_in(key, 1))
+    lab0, lab1 = np.asarray(labels), np.asarray(new)
+    moved = lab0 != lab1
+    if moved.any():
+        # sources were overloaded
+        assert np.all(bw0[lab0[moved]] > lmax)
+        # targets were non-overloaded at decision time
+        assert np.all(bw0[lab1[moved]] <= lmax)
+    # overloaded blocks only shrink
+    bw1 = np.asarray(block_weights(g, new, k))
+    over = bw0 > lmax
+    assert np.all(bw1[over] <= bw0[over] + 1e-4)
+
+
+@given(random_graph(), st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_rebalance_makes_progress_or_balanced(g, k, seed):
+    labels = jnp.zeros(g.n, dtype=jnp.int32)  # everything in block 0
+    lmax = l_max(g, k, 0.03)
+    res = rebalance(g, labels, k, lmax, jax.random.PRNGKey(seed))
+    ov0 = float(total_overload(g, labels, k, lmax))
+    assert float(res.overload) <= ov0
+    # block weights conserved
+    assert float(block_weights(g, res.labels, k).sum()) == float(g.total_node_weight)
+
+
+@given(random_graph(), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_contraction_preserves_weight_and_cut(g, seed):
+    rng = np.random.default_rng(seed)
+    ncl = max(2, g.n // 3)
+    clusters = jnp.asarray(rng.integers(0, ncl, g.n), dtype=jnp.int32)
+    coarse, mapping = contract(g, clusters)
+    # total vertex weight preserved
+    assert float(coarse.total_node_weight) == float(g.total_node_weight)
+    # cut of any coarse labelling equals cut of its projection
+    k = 3
+    clab = jnp.asarray(rng.integers(0, k, coarse.n), dtype=jnp.int32)
+    flab = clab[mapping]
+    assert float(edge_cut(coarse, clab)) == float(edge_cut(g, flab))
+
+
+@given(st.floats(-1e6, 1e6, allow_nan=False), st.floats(0.5, 10.0))
+@settings(max_examples=100, deadline=None)
+def test_bucket_index_monotone(r, cv):
+    """Worse relative gain ⇒ same-or-higher bucket index."""
+    b1 = int(_bucket_index(jnp.float32(r)))
+    b2 = int(_bucket_index(jnp.float32(r - abs(r) * 0.5 - 1.0)))
+    assert 0 <= b1 < 96 and 0 <= b2 < 96
+    assert b2 >= b1
+
+
+@given(st.floats(-100.0, 100.0), st.floats(0.5, 8.0))
+@settings(max_examples=100, deadline=None)
+def test_relative_gain_sign(g_, c):
+    r = float(_relative_gain(jnp.float32(g_), jnp.float32(c)))
+    # sign preserved up to fp32 underflow of tiny g/c ratios
+    assert np.sign(r) == np.sign(g_) or abs(g_) < 1e-5 or r == 0.0

@@ -1,0 +1,78 @@
+"""Ring decode attention ≡ dense decode attention (8 forced host devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.models.ring_decode import ring_decode_attention_local, ring_cache_update
+
+B, S, Hq, Hkv, hd = 2, 64, 8, 2, 16
+groups = Hq // Hkv
+ks = jax.random.split(jax.random.PRNGKey(0), 4)
+q = jax.random.normal(ks[0], (B, Hq, hd))
+k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+pos = 37  # only positions ≤ pos attend
+
+# dense reference
+kx = jnp.repeat(k, groups, axis=2); vx = jnp.repeat(v, groups, axis=2)
+s = jnp.einsum('bhd,bshd->bhs', q, kx) / np.sqrt(hd)
+s = jnp.where((jnp.arange(S) <= pos)[None, None, :], s, -1e30)
+a = jax.nn.softmax(s, axis=-1)
+ref = jnp.einsum('bhs,bshd->bhd', a, vx)
+
+mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+def per_shard(q, k_loc, v_loc):
+    return ring_decode_attention_local(q, k_loc, v_loc, pos, groups)
+f = jax.jit(jax.shard_map(per_shard, mesh=mesh, check_vma=False,
+    in_specs=(P(), P(None, 'model', None, None), P(None, 'model', None, None)),
+    out_specs=P()))
+got = f(q, k, v)
+err = float(jnp.max(jnp.abs(got - ref)))
+
+# cache update: write at pos+1 then attend including it
+def upd(k_loc, v_loc, kn, vn):
+    return ring_cache_update(k_loc, v_loc, kn, vn, pos + 1)
+fu = jax.jit(jax.shard_map(upd, mesh=mesh, check_vma=False,
+    in_specs=(P(None, 'model', None, None), P(None, 'model', None, None), P(), P()),
+    out_specs=(P(None, 'model', None, None), P(None, 'model', None, None))))
+kn = jax.random.normal(ks[3], (B, 1, Hkv, hd))
+vn = jnp.ones((B, 1, Hkv, hd))
+k2, v2 = fu(k, v, kn, vn)
+ok_write = bool(jnp.allclose(k2[:, pos+1], kn[:, 0], atol=1e-6))
+untouched = bool(jnp.allclose(jnp.delete(np.asarray(k2), pos+1, axis=1),
+                              jnp.delete(np.asarray(k), pos+1, axis=1)))
+print("RESULT::" + json.dumps({"err": err, "ok_write": ok_write,
+                               "untouched": untouched}))
+"""
+
+
+@pytest.fixture(scope="module")
+def ring_results():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(proc.stdout[-2000:])
+
+
+def test_ring_attention_matches_dense(ring_results):
+    assert ring_results["err"] < 1e-4, ring_results
+
+
+def test_ring_cache_update(ring_results):
+    assert ring_results["ok_write"] and ring_results["untouched"]
