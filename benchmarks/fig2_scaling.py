@@ -9,6 +9,10 @@ measures instead (and what transfers to real fabric):
     per-PE compute, O(n) gather volume).
   * strong scaling of the round count / cut invariance (Table 1 companion:
     quality must not degrade with P; see table1_cut_vs_p).
+  * the coarsening phase (dcoarsen.py): wall time of the sharded
+    LP-clustering + all_to_all contraction hierarchy at each P.  The
+    hierarchy is built level-by-level on device — no per-level host gather
+    of the fine graph (only 3 scalars per level cross the boundary).
 
 Bytes come from the compiled per-PE program of the shard_map'd Jet round,
 via the same HLO collective parser the roofline uses — executed in a
@@ -30,13 +34,15 @@ from repro.graphs import grid2d
 from repro.distributed import shard_graph
 from repro.distributed.dgraph import labels_to_sharded, owned_mask
 from repro.distributed.djet import make_djet_round
+from repro.distributed.dcoarsen import dcoarsen_hierarchy
+from repro.distributed.dmultilevel import make_pe_mesh
 from repro.roofline.analysis import parse_collective_bytes
 
 P = %(P)d
 side = int((4096 * P) ** 0.5)   # weak scaling: ~4096 vertices per PE
 g = grid2d(side, side)
 k = 16
-mesh = jax.make_mesh((P,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh, _ = make_pe_mesh(P)
 sg = shard_graph(g, P)
 fn = make_djet_round(mesh, k, sg.n_local)
 labels = jnp.asarray(np.random.default_rng(0).integers(0, k, g.n), jnp.int32)
@@ -55,8 +61,19 @@ for _ in range(3):
     out = fn(*args)
 out[0].block_until_ready()
 dt = (time.perf_counter() - t0) / 3
+
+# coarsening phase: full sharded hierarchy (clustering + all_to_all
+# contraction), timed after a warm-up build of the same shapes
+key = jax.random.PRNGKey(0)
+dcoarsen_hierarchy(mesh, sg, k, key)          # warm-up / compile
+t0 = time.perf_counter()
+levels, coarsest = dcoarsen_hierarchy(mesh, sg, k, key)
+jax.block_until_ready(coarsest.nw)
+coarsen_s = time.perf_counter() - t0
 print("RESULT::" + json.dumps({"P": P, "n": g.n, "n_local": sg.n_local,
-      "coll_bytes": sum(coll.values()), "coll": coll, "sec_per_round": dt}))
+      "coll_bytes": sum(coll.values()), "coll": coll, "sec_per_round": dt,
+      "coarsen_s": coarsen_s, "coarsen_levels": len(levels),
+      "coarsest_n": coarsest.n_real}))
 """
 
 
@@ -78,6 +95,13 @@ def main(emit):
     for r in rows:
         emit(f"fig2.weak.P{r['P']}.coll_bytes_per_pe", r["sec_per_round"] * 1e6,
              r["coll_bytes"])
-    if len(rows) >= 2 and rows[0]["coll_bytes"] > 0:
+        emit(f"fig2.weak.P{r['P']}.coarsen_us", r["coarsen_s"] * 1e6,
+             r["coarsen_levels"])
+    by_p = {r["P"]: r for r in rows}
+    if 1 in by_p and 8 in by_p and by_p[1]["coll_bytes"] > 0:
         emit("fig2.weak.coll_growth_P8_over_P1", 0,
-             rows[-1]["coll_bytes"] / rows[0]["coll_bytes"])
+             by_p[8]["coll_bytes"] / by_p[1]["coll_bytes"])
+    if 1 in by_p and 8 in by_p and by_p[1]["coarsen_s"] > 0:
+        # weak scaling of the coarsening phase (ideal: ~flat)
+        emit("fig2.weak.coarsen_growth_P8_over_P1", 0,
+             by_p[8]["coarsen_s"] / by_p[1]["coarsen_s"])

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite plus a 4-device smoke of the distributed
+# V-cycle (sharded coarsening end-to-end under shard_map).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+echo "== 4-device distributed V-cycle smoke =="
+JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+python - <<'PY'
+from repro.graphs import grid2d
+from repro.distributed import dpartition
+
+r = dpartition(grid2d(32, 32), k=4, P=4, seed=0, refiner="d4xjet",
+               max_inner=8, coarsen_until=64, coarsen="sharded")
+assert r.P == 4 and r.levels >= 2, r
+assert r.imbalance <= 0.031, r
+print(f"ok: cut={r.cut} imbalance={r.imbalance:.4f} levels={r.levels}")
+PY
+echo "check.sh: all green"

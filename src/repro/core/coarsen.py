@@ -22,18 +22,20 @@ import numpy as np
 from repro.core.graph import Graph, from_coo
 
 
-@partial(jax.jit, static_argnames=())
-def _best_neighbor_cluster(g: Graph, cluster: jax.Array):
-    """For each vertex: (best_cluster, best_conn) over neighbouring clusters.
+def grouped_best_cluster(src, cl_dst, w, *, n: int, m: int):
+    """Array-level core of the LP scoring: per tail vertex, the strongest
+    neighbouring cluster over (src, cluster[dst]) groups.
 
-    Grouped reduction over lexsorted (src, cluster[dst]) pairs.
+    Grouped reduction over lexsorted pairs; ties broken by smallest cluster
+    id (determinism).  Shared bit-for-bit by the host path below and the
+    per-PE sharded path (distributed/dcoarsen.py) — the sharded==host
+    equivalence tests depend on both calling exactly this.
+
+    Returns (best_cl, has, best_conn); ``best_cl`` is int32::max where a
+    vertex has no live group (caller substitutes its current cluster).
     """
-    cl_dst = cluster[g.safe_col()]
-    w = jnp.where(g.edge_mask, g.ew, 0.0)
-    # exclude self-cluster edges from "join" scoring? No: conn to own cluster
-    # competes fairly (a vertex stays if its own cluster is strongest).
-    order = jnp.lexsort((cl_dst, g.src))
-    src_s = g.src[order]
+    order = jnp.lexsort((cl_dst, src))
+    src_s = src[order]
     cl_s = cl_dst[order]
     w_s = w[order]
 
@@ -42,19 +44,30 @@ def _best_neighbor_cluster(g: Graph, cluster: jax.Array):
     )
     gid = jnp.cumsum(first) - 1  # group id per sorted edge, groups ≤ m
 
-    gsum = jax.ops.segment_sum(w_s, gid, num_segments=g.m)
-    gsrc = jax.ops.segment_max(jnp.where(first, src_s, -1), gid, num_segments=g.m)
-    gcl = jax.ops.segment_max(jnp.where(first, cl_s, -1), gid, num_segments=g.m)
+    gsum = jax.ops.segment_sum(w_s, gid, num_segments=m)
+    gsrc = jax.ops.segment_max(jnp.where(first, src_s, -1), gid, num_segments=m)
+    gcl = jax.ops.segment_max(jnp.where(first, cl_s, -1), gid, num_segments=m)
     gsrc_safe = jnp.maximum(gsrc, 0)
 
-    vmax = jax.ops.segment_max(gsum, gsrc_safe, num_segments=g.n)
+    vmax = jax.ops.segment_max(gsum, gsrc_safe, num_segments=n)
     vmax = jnp.where(jnp.isfinite(vmax), vmax, 0.0)
 
     # among groups achieving the max, pick the smallest cluster id (determinism)
     is_best = (gsum >= vmax[gsrc_safe]) & (gsrc >= 0)
     cand_cl = jnp.where(is_best, gcl, jnp.iinfo(jnp.int32).max)
-    best_cl = jax.ops.segment_min(cand_cl, gsrc_safe, num_segments=g.n)
+    best_cl = jax.ops.segment_min(cand_cl, gsrc_safe, num_segments=n)
     has = best_cl != jnp.iinfo(jnp.int32).max
+    return best_cl, has, vmax
+
+
+@partial(jax.jit, static_argnames=())
+def _best_neighbor_cluster(g: Graph, cluster: jax.Array):
+    """For each vertex: (best_cluster, best_conn) over neighbouring clusters."""
+    cl_dst = cluster[g.safe_col()]
+    w = jnp.where(g.edge_mask, g.ew, 0.0)
+    # exclude self-cluster edges from "join" scoring? No: conn to own cluster
+    # competes fairly (a vertex stays if its own cluster is strongest).
+    best_cl, has, vmax = grouped_best_cluster(g.src, cl_dst, w, n=g.n, m=g.m)
     best_cl = jnp.where(has, best_cl, cluster)
     return best_cl.astype(jnp.int32), vmax
 
@@ -99,25 +112,45 @@ def cluster(
     return cl
 
 
-def contract(g: Graph, cluster) -> tuple[Graph, jax.Array]:
-    """Contract clusters into a coarse graph.  Host-side numpy.
+def contract_arrays(cluster, nw, src, col, ew):
+    """Pure contraction arithmetic (host/numpy), shared by :func:`contract`
+    and the sharded path's reference/reconstruction helpers (distributed/
+    dcoarsen.py — the device implementation computes the same quantities
+    under shard_map and is tested for bit-equality against this).
 
-    Returns (coarse_graph, mapping) with ``mapping[v] = coarse id of v`` so
-    label projection during uncoarsening is ``labels_fine = labels_coarse[mapping]``.
+    ``src``/``col``/``ew`` are the *live* directed edges.  Returns
+    ``(nc, mapping, nw_c, cu, cv, w)`` where mapping relabels vertices to
+    coarse ids (= rank of their cluster leader) and (cu, cv, w) are the
+    surviving inter-cluster directed edges, **not** yet coalesced.
     """
     cl = np.asarray(cluster, dtype=np.int64)
     uniq, mapping = np.unique(cl, return_inverse=True)
     nc = int(len(uniq))
 
     nw_c = np.zeros(nc, dtype=np.float32)
-    np.add.at(nw_c, mapping, np.asarray(g.nw))
+    np.add.at(nw_c, mapping, np.asarray(nw))
 
-    live = np.asarray(g.edge_mask)
-    cu = mapping[np.asarray(g.src)[live]]
-    cv = mapping[np.asarray(g.safe_col())[live]]
-    w = np.asarray(g.ew)[live]
+    cu = mapping[np.asarray(src)]
+    cv = mapping[np.asarray(col)]
+    w = np.asarray(ew)
     keep = cu != cv  # intra-cluster edges vanish
-    cu, cv, w = cu[keep], cv[keep], w[keep]
+    return nc, mapping, nw_c, cu[keep], cv[keep], w[keep]
+
+
+def contract(g: Graph, cluster) -> tuple[Graph, jax.Array]:
+    """Contract clusters into a coarse graph.  Host-side numpy.
+
+    Returns (coarse_graph, mapping) with ``mapping[v] = coarse id of v`` so
+    label projection during uncoarsening is ``labels_fine = labels_coarse[mapping]``.
+    """
+    live = np.asarray(g.edge_mask)
+    nc, mapping, nw_c, cu, cv, w = contract_arrays(
+        cluster,
+        g.nw,
+        np.asarray(g.src)[live],
+        np.asarray(g.safe_col())[live],
+        np.asarray(g.ew)[live],
+    )
 
     # coalesce parallel edges; from_coo would double them if we symmetrised,
     # but (cu, cv) already contains both directions — keep as directed COO.

@@ -1,3 +1,4 @@
-from repro.distributed.dgraph import ShardedGraph, shard_graph  # noqa: F401
+from repro.distributed.dcoarsen import dcoarsen_hierarchy  # noqa: F401
+from repro.distributed.dgraph import ShardedGraph, shard_graph, sharded_to_graph  # noqa: F401
 from repro.distributed.djet import make_djet_round, make_drebalance, make_dlp_round  # noqa: F401
 from repro.distributed.dmultilevel import dpartition  # noqa: F401

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import PAD, Graph
+from repro.core.graph import PAD, Graph, from_coo
 
 
 @jax.tree_util.register_dataclass
@@ -137,6 +137,48 @@ def labels_from_sharded(sg: ShardedGraph, lab_sh: jax.Array) -> jax.Array:
         v1 = starts[p + 1] if p + 1 < sg.P else sg.n_real
         out[v0:v1] = lab[p, : v1 - v0]
     return jnp.asarray(out)
+
+
+def sharded_to_graph(sg: ShardedGraph) -> Graph:
+    """Host-side inverse of :func:`shard_graph`: gather a (small) sharded
+    graph back into a :class:`Graph`.
+
+    Only used where dKaMinPar also centralises — the coarsest graph handed to
+    initial partitioning, and test reconstruction.  Produces the bit-same
+    Graph as building the level on the host (``from_coo`` canonicalises edge
+    order), which is what makes the sharded and host coarsening paths
+    interchangeable mid-V-cycle.
+    """
+    starts = np.asarray(sg.vtx_start, dtype=np.int64)
+    ends = np.concatenate([starts[1:], [sg.n_real]])
+    src_sh = np.asarray(sg.src)
+    dst_sh = np.asarray(sg.dst)
+    ew_sh = np.asarray(sg.ew)
+    nw_sh = np.asarray(sg.nw)
+
+    nw = np.zeros(sg.n_real, dtype=np.float32)
+    us, vs, ws = [], [], []
+    for p in range(sg.P):
+        width = int(ends[p] - starts[p])
+        nw[starts[p]:ends[p]] = nw_sh[p, :width]
+        live = dst_sh[p] != int(PAD)
+        if not live.any():
+            continue
+        d = dst_sh[p][live].astype(np.int64)
+        owner = d // sg.n_local
+        heads = starts[owner] + (d - owner * sg.n_local)
+        us.append(starts[p] + src_sh[p][live].astype(np.int64))
+        vs.append(heads)
+        ws.append(ew_sh[p][live])
+    if us:
+        u = np.concatenate(us)
+        v = np.concatenate(vs)
+        w = np.concatenate(ws)
+    else:
+        u = np.zeros(0, np.int64)
+        v = np.zeros(0, np.int64)
+        w = np.zeros(0, np.float32)
+    return from_coo(sg.n_real, u, v, w, nw=nw, symmetrize=False)
 
 
 def owned_mask(sg: ShardedGraph) -> jax.Array:

@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.graph import PAD
 from repro.core.rebalance import ALPHA, N_BUCKETS, _bucket_index, _relative_gain
+from repro.sharding.compat import shard_map
 
 NEG = -jnp.inf
 
@@ -56,6 +57,33 @@ def _best(conn, labels_loc, nw_loc, capacity, k: int):
 
 def _gather(x):
     return jax.lax.all_gather(x, "pe", tiled=True)
+
+
+def _global_uniform_full(key, n_real: int, tail: int):
+    """The (n_real,) global-vertex-space uniform draw plus a zero tail for
+    padding slots.  The draw shape must be exactly (n_real,) — threefry is
+    not prefix-stable across shapes — so this module's sliced draw and the
+    host path's ``uniform(key, (n,))`` see the same per-vertex stream.
+    (halo.py deliberately uses a different, fold-in-per-gid stream to stay
+    O(n_local) per PE.)
+    """
+    return jnp.concatenate(
+        [jax.random.uniform(key, (n_real,)), jnp.zeros((tail,), jnp.float32)]
+    )
+
+
+def _global_uniform(key, gstart, *, n_local: int, n_real: int):
+    """Per-slot uniforms drawn in *global* vertex space.
+
+    The same key yields the same value for a given vertex regardless of P or
+    of how vertices are split over PEs — so randomized passes take identical
+    decisions on 1 device and on P devices (the determinism contract of this
+    module), and match the host path's ``uniform(key, (n,))`` draw exactly.
+    The ``n_local`` zero-tail covers the last PE's padding slots, whose draws
+    are never used (acceptance is masked by ``owned``).
+    """
+    u = _global_uniform_full(key, n_real, n_local)
+    return jax.lax.dynamic_slice(u, (gstart,), (n_local,))
 
 
 def _block_weights(nw_loc, labels_loc, k: int):
@@ -116,8 +144,8 @@ def djet_round_local(src, dst, ew, nw, owned, labels_loc, locked, tau,
 # Distributed rebalancing (Alg. 1 + greedy finisher)
 # --------------------------------------------------------------------------
 
-def dprob_pass_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
-                     *, k: int, n_local: int):
+def dprob_pass_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
+                     *, k: int, n_local: int, n_real: int):
     labels_full = _gather(labels_loc)
     bw = _block_weights(nw, labels_loc, k)
     overloaded = bw > lmax
@@ -150,9 +178,8 @@ def dprob_pass_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
     room = jnp.maximum(lmax - bw, 0.0)
     p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
 
-    pe = jax.lax.axis_index("pe")
-    sub = jax.random.fold_in(key, pe)
-    accept = move_cand & (jax.random.uniform(sub, (n_local,)) < p[target])
+    u = _global_uniform(key, gstart, n_local=n_local, n_real=n_real)
+    accept = move_cand & (u < p[target])
     return jnp.where(accept, target, labels_loc)
 
 
@@ -201,8 +228,8 @@ def dgreedy_epoch_local(src, dst, ew, nw, owned, labels_loc, lmax,
     return jax.lax.dynamic_slice(lab_full, (pe * n_local,), (n_local,))
 
 
-def drebalance_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
-                     *, k: int, n_local: int, max_epochs: int = 32):
+def drebalance_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
+                     *, k: int, n_local: int, n_real: int, max_epochs: int = 32):
     def overload_of(lbl):
         bw = _block_weights(nw, lbl, k)
         return jnp.sum(jnp.maximum(bw - lmax, 0.0))
@@ -220,8 +247,8 @@ def drebalance_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
         key, sub = jax.random.split(key)
         labels = jax.lax.cond(
             slow,
-            lambda l: dprob_pass_local(src, dst, ew, nw, owned, l, sub, lmax,
-                                       k=k, n_local=n_local),
+            lambda l: dprob_pass_local(src, dst, ew, nw, owned, l, gstart, sub,
+                                       lmax, k=k, n_local=n_local, n_real=n_real),
             lambda l: l,
             labels,
         )
@@ -237,8 +264,9 @@ def drebalance_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
 # Distributed d4xJet refinement at one level (whole loop inside shard_map)
 # --------------------------------------------------------------------------
 
-def djet_refine_local(src, dst, ew, nw, owned, labels_loc, key, tau, lmax,
-                      *, k: int, n_local: int, patience: int, max_inner: int):
+def djet_refine_local(src, dst, ew, nw, owned, labels_loc, gstart, key, tau,
+                      lmax, *, k: int, n_local: int, n_real: int,
+                      patience: int, max_inner: int):
     def cond(s):
         (_, _, _, best_cut, since, it, _) = s
         return (since < patience) & (it < max_inner)
@@ -248,8 +276,9 @@ def djet_refine_local(src, dst, ew, nw, owned, labels_loc, key, tau, lmax,
         key, k_reb = jax.random.split(key)
         labels, moved = djet_round_local(src, dst, ew, nw, owned, labels, locked,
                                          tau, k=k, n_local=n_local)
-        labels, ov = drebalance_local(src, dst, ew, nw, owned, labels, k_reb, lmax,
-                                      k=k, n_local=n_local)
+        labels, ov = drebalance_local(src, dst, ew, nw, owned, labels, gstart,
+                                      k_reb, lmax, k=k, n_local=n_local,
+                                      n_real=n_real)
         labels_full = _gather(labels)
         cut = _cut(src, dst, ew, labels, labels_full)
         balanced = ov <= 0
@@ -278,8 +307,8 @@ def djet_refine_local(src, dst, ew, nw, owned, labels_loc, key, tau, lmax,
     return jnp.where(jnp.isfinite(best_cut), best_labels, labels)
 
 
-def dlp_round_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
-                    *, k: int, n_local: int):
+def dlp_round_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
+                    *, k: int, n_local: int, n_real: int):
     """Distributed size-constrained LP round (the dLP baseline)."""
     labels_full = _gather(labels_loc)
     bw = _block_weights(nw, labels_loc, k)
@@ -292,9 +321,8 @@ def dlp_round_local(src, dst, ew, nw, owned, labels_loc, key, lmax,
         jax.ops.segment_sum(jnp.where(want, nw, 0.0), target, num_segments=k), "pe"
     )
     p = jnp.where(w_in > 0, jnp.clip(capacity / jnp.maximum(w_in, 1e-9), 0.0, 1.0), 1.0)
-    pe = jax.lax.axis_index("pe")
-    sub = jax.random.fold_in(key, pe)
-    accept = want & (jax.random.uniform(sub, (n_local,)) < p[target])
+    u = _global_uniform(key, gstart, n_local=n_local, n_real=n_real)
+    accept = want & (u < p[target])
     return jnp.where(accept, target, labels_loc)
 
 
@@ -317,65 +345,62 @@ def make_djet_round(mesh, k: int, n_local: int):
         return new_labels[None], move[None]
 
     sh = P("pe", None)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         per_pe,
         mesh=mesh,
-        check_vma=False,
         in_specs=(sh, sh, sh, sh, sh, sh, sh, P()),
         out_specs=(sh, sh),
     ))
 
 
-def make_drebalance(mesh, k: int, n_local: int):
-    def per_pe(src, dst, ew, nw, owned, labels, key, lmax):
+def make_drebalance(mesh, k: int, n_local: int, n_real: int):
+    def per_pe(src, dst, ew, nw, owned, labels, gstart, key, lmax):
         new_labels, ov = drebalance_local(
-            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], key, lmax,
-            k=k, n_local=n_local,
+            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], gstart[0], key,
+            lmax, k=k, n_local=n_local, n_real=n_real,
         )
         return new_labels[None], ov
 
     sh = P("pe", None)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         per_pe,
         mesh=mesh,
-        check_vma=False,
-        in_specs=(sh, sh, sh, sh, sh, sh, P(), P()),
+        in_specs=(sh, sh, sh, sh, sh, sh, P("pe"), P(), P()),
         out_specs=(sh, P()),
     ))
 
 
-def make_dlp_round(mesh, k: int, n_local: int):
-    def per_pe(src, dst, ew, nw, owned, labels, key, lmax):
+def make_dlp_round(mesh, k: int, n_local: int, n_real: int):
+    def per_pe(src, dst, ew, nw, owned, labels, gstart, key, lmax):
         out = dlp_round_local(
-            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], key, lmax,
-            k=k, n_local=n_local,
+            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], gstart[0], key,
+            lmax, k=k, n_local=n_local, n_real=n_real,
         )
         return out[None]
 
     sh = P("pe", None)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         per_pe,
         mesh=mesh,
-        check_vma=False,
-        in_specs=(sh, sh, sh, sh, sh, sh, P(), P()),
+        in_specs=(sh, sh, sh, sh, sh, sh, P("pe"), P(), P()),
         out_specs=sh,
     ))
 
 
-def make_djet_refine(mesh, k: int, n_local: int, patience: int = 12,
-                     max_inner: int = 64):
-    def per_pe(src, dst, ew, nw, owned, labels, key, tau, lmax):
+def make_djet_refine(mesh, k: int, n_local: int, n_real: int,
+                     patience: int = 12, max_inner: int = 64):
+    def per_pe(src, dst, ew, nw, owned, labels, gstart, key, tau, lmax):
         out = djet_refine_local(
-            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], key, tau, lmax,
-            k=k, n_local=n_local, patience=patience, max_inner=max_inner,
+            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], gstart[0], key,
+            tau, lmax, k=k, n_local=n_local, n_real=n_real,
+            patience=patience, max_inner=max_inner,
         )
         return out[None]
 
     sh = P("pe", None)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         per_pe,
         mesh=mesh,
-        check_vma=False,
-        in_specs=(sh, sh, sh, sh, sh, sh, P(), P(), P()),
+        in_specs=(sh, sh, sh, sh, sh, sh, P("pe"), P(), P(), P()),
         out_specs=sh,
     ))

@@ -1,12 +1,22 @@
 """Distributed multilevel driver.
 
-Refinement — the paper's contribution — is fully distributed (shard_map over
-the "pe" axis; see djet.py for the per-round communication pattern).
-Coarsening and initial partitioning run centralised on the host at this
-demo scale: level sizes are data-dependent, and dKaMinPar itself
-synchronises globally per level.  The production design (bucketed all_to_all
-edge reshuffle after contraction) is described in DESIGN.md and exercised
-shape-wise by the dry-run.
+The full V-cycle now stays on device (paper §2 + DESIGN.md):
+
+  coarsen ↓   dcoarsen.py — sharded LP clustering + contraction under
+              shard_map, with a bucketed all_to_all edge reshuffle; each
+              coarse level is born sharded, the fine graph is never gathered
+  initial     the (small, ≤ max(512, 16k)-vertex) coarsest graph is
+              centralised — exactly where dKaMinPar also replicates — and
+              seeded with the multi-restart greedy + refine of core.initial
+  uncoarsen ↑ one all_gather of coarse labels per level (duncoarsen), then
+              djet refinement on the already-sharded level
+
+``coarsen="host"`` keeps the original centralised coarsening as a debugging
+fallback (level graphs are built on the host and re-sharded per level); both
+paths produce bit-identical partitions from the same seed on integer-weight
+graphs, which is how the sharded path is tested.  The halo (interface-only
+exchange) refinement variant implies the host path — it shards per level
+with its own interface-first permutation.
 """
 
 from __future__ import annotations
@@ -22,14 +32,17 @@ from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance, l_max
 from repro.core.refine import temperature_schedule
+from repro.distributed.dcoarsen import dcoarsen_hierarchy, duncoarsen
 from repro.distributed.dgraph import (
     ShardedGraph,
     labels_from_sharded,
     labels_to_sharded,
     owned_mask,
     shard_graph,
+    sharded_to_graph,
 )
 from repro.distributed.djet import make_djet_refine, make_dlp_round, make_drebalance
+from repro.sharding.compat import make_mesh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,14 +57,46 @@ class DPartitionResult:
 def make_pe_mesh(P: int | None = None):
     if P is None:
         P = jax.device_count()
-    mesh = jax.make_mesh(
-        (P,), ("pe",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((P,), ("pe",))
     return mesh, P
+
+
+def _dl_max(sg: ShardedGraph, k: int, eps: float):
+    """L_max from the sharded level — same value as l_max(g, k, eps) (total
+    node weight is invariant under contraction)."""
+    return (1.0 + eps) * jnp.ceil(jnp.sum(sg.nw) / k)
+
+
+def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key, refiner,
+                     patience, max_inner):
+    """Refine one already-sharded level in place (labels stay sharded)."""
+    owned = owned_mask(sg)
+    gstart = sg.vtx_start
+
+    if refiner == "dlp":
+        lp = make_dlp_round(mesh, k, sg.n_local, sg.n_real)
+        reb = make_drebalance(mesh, k, sg.n_local, sg.n_real)
+        for _ in range(8):
+            key, sub = jax.random.split(key)
+            lab_sh = lp(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, gstart,
+                        sub, lmax)
+        key, sub = jax.random.split(key)
+        lab_sh, _ = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, gstart,
+                        sub, lmax)
+    else:
+        rounds = 1 if refiner == "djet" else 4
+        refine = make_djet_refine(mesh, k, sg.n_local, sg.n_real,
+                                  patience=patience, max_inner=max_inner)
+        for tau in temperature_schedule(rounds):
+            key, sub = jax.random.split(key)
+            lab_sh = refine(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh,
+                            gstart, sub, jnp.float32(tau), lmax)
+    return lab_sh
 
 
 def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
                    max_inner, halo: bool = False):
+    """Host-path level refinement: shard the level graph, refine, gather."""
     P_ = mesh.devices.size
     lmax = l_max(g, k, eps)
 
@@ -76,46 +121,17 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
         return halo_labels_from_sharded(hsg, perm, lab_sh)
 
     sg = shard_graph(g, P_)
-    owned = owned_mask(sg)
     lab_sh = labels_to_sharded(sg, labels)
-
-    if refiner == "dlp":
-        lp = make_dlp_round(mesh, k, sg.n_local)
-        reb = make_drebalance(mesh, k, sg.n_local)
-        for _ in range(8):
-            key, sub = jax.random.split(key)
-            lab_sh = lp(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub, lmax)
-        key, sub = jax.random.split(key)
-        lab_sh, _ = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub, lmax)
-    else:
-        rounds = 1 if refiner == "djet" else 4
-        refine = make_djet_refine(mesh, k, sg.n_local, patience=patience,
-                                  max_inner=max_inner)
-        for tau in temperature_schedule(rounds):
-            key, sub = jax.random.split(key)
-            lab_sh = refine(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, sub,
-                            jnp.float32(tau), lmax)
-
+    lab_sh = _drefine_sharded(mesh, sg, lab_sh, k, lmax, key, refiner,
+                              patience, max_inner)
     return labels_from_sharded(sg, lab_sh)
 
 
-def dpartition(
-    g: Graph,
-    k: int,
-    P: int | None = None,
-    eps: float = 0.03,
-    seed: int = 0,
-    refiner: str = "d4xjet",
-    coarsen_until: int | None = None,
-    patience: int = 12,
-    max_inner: int = 64,
-    halo: bool = False,
-) -> DPartitionResult:
-    mesh, P_ = make_pe_mesh(P)
-    key = jax.random.PRNGKey(seed)
-    k_coarse, k_init, key = jax.random.split(key, 3)
-
-    levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse, coarsen_until=coarsen_until)
+def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
+                             coarsen_until, patience, max_inner, halo):
+    """Fallback: centralised coarsening, per-level re-sharded refinement."""
+    levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
+                                           coarsen_until=coarsen_until)
     labels = initial_partition(coarsest, k, eps, k_init)
 
     key, sub = jax.random.split(key)
@@ -127,11 +143,77 @@ def dpartition(
         key, sub = jax.random.split(key)
         labels = _drefine_level(mesh, fine, labels, k, eps, sub, refiner,
                                 patience, max_inner, halo=halo)
+    return labels, len(levels) + 1
+
+
+def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
+                                refiner, coarsen_until, patience, max_inner):
+    """On-device V-cycle: graph is sharded once; every level stays sharded."""
+    P_ = mesh.devices.size
+    sg0 = shard_graph(g, P_)
+    levels, coarsest = dcoarsen_hierarchy(mesh, sg0, k, k_coarse,
+                                          coarsen_until=coarsen_until)
+
+    # initial partitioning on the (small) centralised coarsest graph
+    gc = sharded_to_graph(coarsest)
+    labels = initial_partition(gc, k, eps, k_init)
+    lab_sh = labels_to_sharded(coarsest, labels)
+
+    key, sub = jax.random.split(key)
+    lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
+                              _dl_max(coarsest, k, eps), sub, refiner,
+                              patience, max_inner)
+
+    for fine_sg, map_sh, coarse_sg in reversed(levels):
+        lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
+        key, sub = jax.random.split(key)
+        lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
+                                  _dl_max(fine_sg, k, eps), sub, refiner,
+                                  patience, max_inner)
+
+    return labels_from_sharded(sg0, lab_sh), len(levels) + 1
+
+
+def dpartition(
+    g: Graph,
+    k: int,
+    P: int | None = None,
+    eps: float = 0.03,
+    seed: int = 0,
+    refiner: str = "d4xjet",
+    coarsen: str | None = None,
+    coarsen_until: int | None = None,
+    patience: int = 12,
+    max_inner: int = 64,
+    halo: bool = False,
+) -> DPartitionResult:
+    if coarsen is None:
+        coarsen = "host" if halo else "sharded"
+    if coarsen not in ("sharded", "host"):
+        raise ValueError(f"coarsen must be 'sharded' or 'host', got {coarsen!r}")
+    if halo and coarsen == "sharded":
+        raise ValueError(
+            "halo=True implies host coarsening (the interface-first "
+            "permutation is built per level from the centralised level "
+            "graph); drop coarsen='sharded' or use the baseline protocol"
+        )
+    mesh, P_ = make_pe_mesh(P)
+    key = jax.random.PRNGKey(seed)
+    k_coarse, k_init, key = jax.random.split(key, 3)
+
+    if coarsen == "host":
+        labels, n_levels = _dpartition_host_coarsen(
+            mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
+            patience, max_inner, halo)
+    else:
+        labels, n_levels = _dpartition_sharded_coarsen(
+            mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
+            patience, max_inner)
 
     return DPartitionResult(
         labels=labels,
         cut=float(edge_cut(g, labels)),
         imbalance=float(imbalance(g, labels, k)),
-        levels=len(levels) + 1,
+        levels=n_levels,
         P=P_,
     )

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.graph import PAD, Graph
 from repro.core.rebalance import N_BUCKETS, _bucket_index, _relative_gain
+from repro.sharding.compat import shard_map
 
 
 @jax.tree_util.register_dataclass
@@ -236,7 +237,7 @@ def halo_prob_pass_local(sg: HaloShardedGraph, labels_loc, key, lmax, *, k: int)
     H = sg.P * h_local
     src, dst_code, head_gid, ew = (x[0] for x in (sg.src, sg.dst_code,
                                                   sg.head_gid, sg.ew))
-    nw, owned = sg.nw[0], sg.owned[0]
+    nw, owned, my_gid = sg.nw[0], sg.owned[0], sg.my_gid[0]
 
     bw = jax.lax.psum(jax.ops.segment_sum(nw, labels_loc, num_segments=k), "pe")
     overloaded = bw > lmax
@@ -267,8 +268,13 @@ def halo_prob_pass_local(sg: HaloShardedGraph, labels_loc, key, lmax, *, k: int)
                                          num_segments=k), "pe")
     room = jnp.maximum(lmax - bw, 0.0)
     p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
-    sub = jax.random.fold_in(key, jax.lax.axis_index("pe"))
-    accept = move_cand & (jax.random.uniform(sub, (n_local,)) < p[target])
+    # uniforms seeded per *global* vertex id: P-invariant (and independent of
+    # the interface-first permutation) like the block-sharded path's draw,
+    # but O(n_local) per PE — materialising the (n_real,) stream here would
+    # reintroduce exactly the O(n) per-PE cost this module exists to avoid
+    gid = jnp.where(owned, my_gid, 0)
+    u = jax.vmap(lambda v: jax.random.uniform(jax.random.fold_in(key, v)))(gid)
+    accept = move_cand & (u < p[target])
     return jnp.where(accept, target, labels_loc)
 
 
@@ -285,8 +291,8 @@ def make_halo_jet_round(mesh, sg: HaloShardedGraph, k: int):
         n_real=sg.n_real, P=sg.P, n_local=sg.n_local, m_local=sg.m_local,
         h_local=sg.h_local,
     )
-    return jax.jit(jax.shard_map(
-        per_pe, mesh=mesh, check_vma=False,
+    return jax.jit(shard_map(
+        per_pe, mesh=mesh,
         in_specs=(sg_specs, sh, sh, P()),
         out_specs=(sh, sh),
     ))
@@ -374,8 +380,8 @@ def make_halo_refine(mesh, sg: HaloShardedGraph, k: int, patience: int = 12,
         n_real=sg.n_real, P=sg.P, n_local=sg.n_local, m_local=sg.m_local,
         h_local=sg.h_local,
     )
-    return jax.jit(jax.shard_map(
-        per_pe, mesh=mesh, check_vma=False,
+    return jax.jit(shard_map(
+        per_pe, mesh=mesh,
         in_specs=(sg_specs, sh, P(), P(), P()),
         out_specs=sh,
     ))

@@ -30,6 +30,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.sharding.compat import shard_map as compat_shard_map
+
 from repro import configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import make_cell
@@ -252,10 +254,11 @@ def run_partitioner_cell(multi_pod: bool, n_local: int = 1 << 18,
     (meshy surface/volume regime)."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.sharding.compat import make_mesh_from_devices
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     devs = mesh.devices.reshape(-1)
-    pe_mesh = jax.sharding.Mesh(devs, ("pe",),
-                                axis_types=(jax.sharding.AxisType.Auto,))
+    pe_mesh = make_mesh_from_devices(devs, ("pe",))
     Pn = devs.size
     m_local = n_local * deg
 
@@ -283,8 +286,8 @@ def run_partitioner_cell(multi_pod: bool, n_local: int = 1 << 18,
             owned=sh, n_real=Pn * n_local, P=Pn, n_local=n_local,
             m_local=m_local, h_local=h_local,
         )
-        f = jax.jit(jax.shard_map(
-            per_pe, mesh=pe_mesh, check_vma=False,
+        f = jax.jit(compat_shard_map(
+            per_pe, mesh=pe_mesh,
             in_specs=(sg_specs, sh, sh, P(), P()),
             out_specs=sh,
         ))
@@ -300,25 +303,29 @@ def run_partitioner_cell(multi_pod: bool, n_local: int = 1 << 18,
     else:
         from repro.distributed.djet import djet_round_local, dprob_pass_local
 
-        def per_pe(src, dst, ew, nw, owned, labels, locked, key, lmax):
+        n_real = Pn * n_local
+
+        def per_pe(src, dst, ew, nw, owned, labels, locked, gstart, key, lmax):
             lab, moved = djet_round_local(src[0], dst[0], ew[0], nw[0], owned[0],
                                           labels[0], locked[0], jnp.float32(0.5),
                                           k=k, n_local=n_local)
             lab = dprob_pass_local(src[0], dst[0], ew[0], nw[0], owned[0],
-                                   lab, key, lmax, k=k, n_local=n_local)
+                                   lab, gstart[0], key, lmax,
+                                   k=k, n_local=n_local, n_real=n_real)
             return lab[None]
 
         sh = P("pe", None)
-        f = jax.jit(jax.shard_map(
-            per_pe, mesh=pe_mesh, check_vma=False,
-            in_specs=(sh, sh, sh, sh, sh, sh, sh, P(), P()),
+        f = jax.jit(compat_shard_map(
+            per_pe, mesh=pe_mesh,
+            in_specs=(sh, sh, sh, sh, sh, sh, sh, P("pe"), P(), P()),
             out_specs=sh,
         ))
         args = (
             s((Pn, m_local), jnp.int32), s((Pn, m_local), jnp.int32),
             s((Pn, m_local), jnp.float32), s((Pn, n_local), jnp.float32),
             s((Pn, n_local), jnp.bool_), s((Pn, n_local), jnp.int32),
-            s((Pn, n_local), jnp.bool_), s((2,), jnp.uint32), s((), jnp.float32),
+            s((Pn, n_local), jnp.bool_), s((Pn,), jnp.int32),
+            s((2,), jnp.uint32), s((), jnp.float32),
         )
 
     t0 = time.time()
@@ -362,8 +369,8 @@ def run_ring_decode_cell(multi_pod: bool = False):
 
     bspec = ("pod", "data") if "pod" in mesh.shape else ("data",)
     cache_spec = P(bspec, "model", None, None)
-    f = jax.jit(jax.shard_map(
-        per_shard, mesh=mesh, check_vma=False,
+    f = jax.jit(compat_shard_map(
+        per_shard, mesh=mesh,
         in_specs=(P(bspec), cache_spec, cache_spec, P(bspec), P(bspec), P()),
         out_specs=(P(bspec), cache_spec, cache_spec),
     ))
@@ -419,8 +426,8 @@ def run_moe_ep_cell(multi_pod: bool = False, capacity_factor: float = 1.25):
         return moe_ep_local(p_local, x_loc, cfg, capacity_factor=capacity_factor)
 
     bspec = ("pod", "data") if "pod" in mesh.shape else ("data",)
-    f = jax.jit(jax.shard_map(
-        per_shard, mesh=mesh, check_vma=False,
+    f = jax.jit(compat_shard_map(
+        per_shard, mesh=mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), P((*bspec, "model"), None)),
         out_specs=P((*bspec, "model"), None),

@@ -26,19 +26,17 @@ def make_production_mesh(*, multi_pod: bool = False):
         )
     import numpy as np
 
+    from repro.sharding.compat import make_mesh_from_devices
+
     dev_array = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(
-        dev_array, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_from_devices(dev_array, axes)
 
 
 def make_cpu_mesh():
     """1-device mesh with the production axis names (smoke tests)."""
     import numpy as np
 
+    from repro.sharding.compat import make_mesh_from_devices
+
     dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
-    return jax.sharding.Mesh(
-        dev, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_from_devices(dev, ("data", "model"))

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import act_fn
+from repro.sharding.compat import axis_size
 
 
 def _a2a(x, axis):
@@ -39,7 +40,7 @@ def moe_ep_local(p_local, x, cfg, *, axis: str = "model",
       (E_local, f, d), optional shared expert params replicated.
     x: (T_loc, d) local tokens.  Returns (T_loc, d).
     """
-    P = jax.lax.axis_size(axis)
+    P = axis_size(axis)
     T, d = x.shape
     E = cfg.n_experts
     topk = cfg.experts_per_token

@@ -29,7 +29,8 @@ labels = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, k, dtype=jnp.int32
 
 # 1. jet round equivalence (deterministic moves)
 ref = jet_round(g, labels, jnp.zeros(g.n, bool), k, 0.5)
-mesh = jax.make_mesh((8,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.sharding.compat import make_mesh
+mesh = make_mesh((8,), ('pe',))
 sg = shard_graph(g, 8)
 fn = make_djet_round(mesh, k, sg.n_local)
 lab_sh = labels_to_sharded(sg, labels)
@@ -42,9 +43,9 @@ out["jet_equal"] = bool(np.array_equal(np.asarray(ref.labels), np.asarray(new)))
 # 2. distributed rebalance restores balance
 skew = jnp.zeros(g.n, dtype=jnp.int32)  # all in block 0
 lmax = l_max(g, k, 0.03)
-reb = make_drebalance(mesh, k, sg.n_local)
+reb = make_drebalance(mesh, k, sg.n_local, g.n)
 lab_sh2 = labels_to_sharded(sg, skew)
-new_sh2, ov = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh2,
+new_sh2, ov = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh2, sg.vtx_start,
                   jax.random.PRNGKey(0), lmax)
 out["rebalance_ov"] = float(ov)
 

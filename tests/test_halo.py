@@ -27,7 +27,8 @@ for name, g in (("grid", grid2d(40, 40)), ("rmat", rmat(scale=9, edge_factor=5, 
     labels = jax.random.randint(jax.random.PRNGKey(1), (g.n,), 0, k, dtype=jnp.int32)
     ref = jet_round(g, labels, jnp.zeros(g.n, bool), k, 0.5)
 
-    mesh = jax.make_mesh((8,), ('pe',), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.sharding.compat import make_mesh
+    mesh = make_mesh((8,), ('pe',))
     sg, perm = shard_graph_halo(g, 8)
     fn = make_halo_jet_round(mesh, sg, k)
     lab_sh = halo_labels_to_sharded(sg, perm, labels)

@@ -30,7 +30,8 @@ x = jax.random.normal(jax.random.PRNGKey(1), (2, T // 2, d)) * 0.5
 ref, (aux, load) = moe_ffn(p, x, cfg)
 ref2d = np.asarray(ref.reshape(T, d))
 
-mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.sharding.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ('model',))
 E_local = cfg.n_experts // 8
 
 def per_shard(router, wg, wu, wd, shared, x_loc):
@@ -40,7 +41,7 @@ def per_shard(router, wg, wu, wd, shared, x_loc):
     return moe_ep_local(p_local, x_loc, cfg, capacity_factor=16.0)
 
 sh_e = P('model', None, None)
-f = jax.jit(jax.shard_map(per_shard, mesh=mesh, check_vma=False,
+f = jax.jit(shard_map(per_shard, mesh=mesh,
     in_specs=(P(), sh_e, sh_e, sh_e, P(), P('model', None)),
     out_specs=P('model', None)))
 

@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -104,6 +107,9 @@ def test_contraction_preserves_weight_and_cut(g, seed):
     coarse, mapping = contract(g, clusters)
     # total vertex weight preserved
     assert float(coarse.total_node_weight) == float(g.total_node_weight)
+    # total edge weight preserved up to the dropped intra-cluster edges:
+    # the surviving (directed) weight is exactly twice the mapping's cut
+    assert float(coarse.total_edge_weight) == 2.0 * float(edge_cut(g, mapping))
     # cut of any coarse labelling equals cut of its projection
     k = 3
     clab = jnp.asarray(rng.integers(0, k, coarse.n), dtype=jnp.int32)

@@ -32,10 +32,11 @@ s = jnp.where((jnp.arange(S) <= pos)[None, None, :], s, -1e30)
 a = jax.nn.softmax(s, axis=-1)
 ref = jnp.einsum('bhs,bshd->bhd', a, vx)
 
-mesh = jax.make_mesh((8,), ('model',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.sharding.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ('model',))
 def per_shard(q, k_loc, v_loc):
     return ring_decode_attention_local(q, k_loc, v_loc, pos, groups)
-f = jax.jit(jax.shard_map(per_shard, mesh=mesh, check_vma=False,
+f = jax.jit(shard_map(per_shard, mesh=mesh,
     in_specs=(P(), P(None, 'model', None, None), P(None, 'model', None, None)),
     out_specs=P()))
 got = f(q, k, v)
@@ -44,7 +45,7 @@ err = float(jnp.max(jnp.abs(got - ref)))
 # cache update: write at pos+1 then attend including it
 def upd(k_loc, v_loc, kn, vn):
     return ring_cache_update(k_loc, v_loc, kn, vn, pos + 1)
-fu = jax.jit(jax.shard_map(upd, mesh=mesh, check_vma=False,
+fu = jax.jit(shard_map(upd, mesh=mesh,
     in_specs=(P(None, 'model', None, None), P(None, 'model', None, None), P(), P()),
     out_specs=(P(None, 'model', None, None), P(None, 'model', None, None))))
 kn = jax.random.normal(ks[3], (B, 1, Hkv, hd))
