@@ -13,6 +13,12 @@ measures instead (and what transfers to real fabric):
     LP-clustering + all_to_all contraction hierarchy at each P.  The
     hierarchy is built level-by-level on device — no per-level host gather
     of the fine graph (only 3 scalars per level cross the boundary).
+  * the refinement phase (refine/drivers.py): wall time of ONE fused
+    d4xJet level program — all temperature rounds and inner (Jet →
+    rebalance → patience) iterations device-resident.  The engine's
+    host-dispatch count for the level rides along as the derived value;
+    the actual no-per-round-dispatch contract (dispatches == levels over
+    a whole V-cycle) is asserted in tests/test_refine_matrix.py.
 
 Bytes come from the compiled per-PE program of the shard_map'd Jet round,
 via the same HLO collective parser the roofline uses — executed in a
@@ -70,10 +76,30 @@ t0 = time.perf_counter()
 levels, coarsest = dcoarsen_hierarchy(mesh, sg, k, key)
 jax.block_until_ready(coarsest.nw)
 coarsen_s = time.perf_counter() - t0
+
+# refinement phase: one fused d4xJet level program (unified engine) — all
+# rounds device-resident.  (The fused-loop contract itself is asserted in
+# tests/test_refine_matrix.py; here the dispatch count is just reported.)
+from repro.core.refine import temperature_schedule
+from repro.refine import drivers
+from repro.refine.drivers import make_refine_level_sharded
+
+lmax = jnp.float32((1.0 + 0.03) * np.ceil(g.n / k))
+refine = make_refine_level_sharded(mesh, sg, k,
+                                   rounds_taus=temperature_schedule(4),
+                                   max_inner=4)
+refine(lab_sh, jax.random.PRNGKey(1), lmax).block_until_ready()  # warm-up
+drivers.reset_counters()
+t0 = time.perf_counter()
+refine(lab_sh, jax.random.PRNGKey(1), lmax).block_until_ready()
+refine_s = time.perf_counter() - t0
+refine_dispatches = drivers.DISPATCHES.get("sharded", 0)
+
 print("RESULT::" + json.dumps({"P": P, "n": g.n, "n_local": sg.n_local,
       "coll_bytes": sum(coll.values()), "coll": coll, "sec_per_round": dt,
       "coarsen_s": coarsen_s, "coarsen_levels": len(levels),
-      "coarsest_n": coarsest.n_real}))
+      "coarsest_n": coarsest.n_real, "refine_s": refine_s,
+      "refine_dispatches": refine_dispatches}))
 """
 
 
@@ -97,6 +123,10 @@ def main(emit):
              r["coll_bytes"])
         emit(f"fig2.weak.P{r['P']}.coarsen_us", r["coarsen_s"] * 1e6,
              r["coarsen_levels"])
+        # refinement phase: fused whole-level program; derived value is the
+        # engine host-dispatch count observed for the level
+        emit(f"fig2.weak.P{r['P']}.refine_us", r["refine_s"] * 1e6,
+             r["refine_dispatches"])
     by_p = {r["P"]: r for r in rows}
     if 1 in by_p and 8 in by_p and by_p[1]["coll_bytes"] > 0:
         emit("fig2.weak.coll_growth_P8_over_P1", 0,
@@ -105,3 +135,7 @@ def main(emit):
         # weak scaling of the coarsening phase (ideal: ~flat)
         emit("fig2.weak.coarsen_growth_P8_over_P1", 0,
              by_p[8]["coarsen_s"] / by_p[1]["coarsen_s"])
+    if 1 in by_p and 8 in by_p and by_p[1]["refine_s"] > 0:
+        # weak scaling of the fused refinement level (ideal: ~flat)
+        emit("fig2.weak.refine_growth_P8_over_P1", 0,
+             by_p[8]["refine_s"] / by_p[1]["refine_s"])

@@ -11,8 +11,12 @@ One Jet round, vectorized for XLA:
    the cut;
 3. survivors move and are locked for the next round.
 
-In the distributed setting step 2's neighbour gains arrive via the ghost
-exchange (``distributed/djet.py``); the compute here is identical.
+The arithmetic lives in the unified engine (``repro.refine.engine``); this
+module is the single-device adapter over the no-op
+:class:`~repro.refine.comm.SingleComm` backend with the jnp segment-sum
+gain backend.  The Pallas scoreboard backend is selected one level up —
+``jet_refine(..., gain="pallas")`` / ``partition(..., gain=...)`` — where
+the per-level padded adjacency is amortised over all rounds.
 """
 
 from __future__ import annotations
@@ -24,7 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import Graph
-from repro.core.partition import best_moves
+from repro.refine import engine
+from repro.refine.comm import SingleComm, edge_view_from_graph
+from repro.refine.gain import make_gain
 
 
 class JetRoundResult(NamedTuple):
@@ -41,33 +47,10 @@ def jet_round(
     k: int,
     tau: jax.Array | float,
 ) -> JetRoundResult:
-    own, gain, target = best_moves(g, labels, k)  # unconstrained: no capacity
-
-    # -- 1. candidate set M (negative-gain moves admitted up to τ·conn_own) --
-    threshold = -jnp.floor(tau * own)
-    cand = (gain >= threshold) & (~locked) & (target != labels)
-    cand &= jnp.isfinite(gain)
-
-    # -- 2. afterburner ------------------------------------------------------
-    # Edge (v, u): u is assumed to have moved to target[u] iff u ∈ M and u
-    # precedes v in the virtual order (g desc, id asc).
-    src = g.src
-    col = g.safe_col()
-    gu, gv = gain[col], gain[src]
-    precede = cand[col] & ((gu > gv) | ((gu == gv) & (col < src)))
-    assumed = jnp.where(precede, target[col], labels[col])
-
-    w = jnp.where(g.edge_mask, g.ew, 0.0)
-    tv = target[src]
-    lv = labels[src]
-    delta_e = w * ((assumed == tv).astype(w.dtype) - (assumed == lv).astype(w.dtype))
-    delta = jax.ops.segment_sum(delta_e, src, num_segments=g.n)
-
-    # "removing all vertices v that would increase the partition cut"
-    move = cand & (delta >= 0.0)
-
-    # -- 3. apply + lock -----------------------------------------------------
-    new_labels = jnp.where(move, target, labels)
+    ev = edge_view_from_graph(g)
+    cm = SingleComm(g.n)
+    gb = make_gain("jnp", ev, k)
+    new_labels, move = engine.jet_move(cm, gb, ev, labels, locked, tau, k)
     return JetRoundResult(new_labels, move, jnp.sum(move).astype(jnp.int32))
 
 

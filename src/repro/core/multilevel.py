@@ -31,12 +31,13 @@ class PartitionResult:
     levels: int
 
 
-def _refine(g: Graph, labels, k, eps, key, refiner: Refiner, patience: int, max_inner: int):
+def _refine(g: Graph, labels, k, eps, key, refiner: Refiner, patience: int,
+            max_inner: int, gain: str = "jnp"):
     if refiner == "dlp":
         return lp_refine_balanced(g, labels, k, eps, key)
     rounds = 1 if refiner == "djet" else 4
     return jet_refine(g, labels, k, eps, key, rounds=rounds,
-                      patience=patience, max_inner=max_inner)
+                      patience=patience, max_inner=max_inner, gain=gain)
 
 
 def partition(
@@ -48,8 +49,13 @@ def partition(
     coarsen_until: int | None = None,
     patience: int = 12,
     max_inner: int = 64,
+    gain: str = "jnp",
 ) -> PartitionResult:
-    """Full multilevel partition of ``g`` into ``k`` blocks."""
+    """Full multilevel partition of ``g`` into ``k`` blocks.
+
+    ``gain`` selects the refinement gain backend ("jnp", "pallas" or
+    "auto") — see ``repro.refine``; partitions are bit-identical across
+    backends on integer-weight graphs."""
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
 
@@ -58,12 +64,14 @@ def partition(
     labels = initial_partition(coarsest, k, eps, k_init)
 
     key, sub = jax.random.split(key)
-    labels = _refine(coarsest, labels, k, eps, sub, refiner, patience, max_inner)
+    labels = _refine(coarsest, labels, k, eps, sub, refiner, patience,
+                     max_inner, gain)
 
     for fine, mapping in reversed(levels):
         labels = labels[mapping]  # project coarse labels to the finer level
         key, sub = jax.random.split(key)
-        labels = _refine(fine, labels, k, eps, sub, refiner, patience, max_inner)
+        labels = _refine(fine, labels, k, eps, sub, refiner, patience,
+                         max_inner, gain)
 
     return PartitionResult(
         labels=labels,

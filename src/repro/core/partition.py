@@ -81,16 +81,12 @@ def best_moves(
 
     best_gain = max_eligible_j conn(v,V_j) − conn(v,V_own); if no block is
     eligible, best_gain = −inf and best_target = own block.
+
+    Move selection (the argmax + tie-break + no-eligible-block rule) is the
+    shared :func:`repro.refine.gain.masked_best` — the same rule every gain
+    backend of the unified refinement engine applies.
     """
+    from repro.refine.gain import masked_best
+
     conn = conn_dense(g, labels, k)
-    own = jnp.take_along_axis(conn, labels[:, None], axis=1)[:, 0]
-    blk = jnp.arange(k, dtype=jnp.int32)
-    eligible = blk[None, :] != labels[:, None]
-    if capacity is not None:
-        eligible &= capacity[None, :] >= g.nw[:, None]
-    masked = jnp.where(eligible, conn, -jnp.inf)
-    best_target = jnp.argmax(masked, axis=1).astype(jnp.int32)
-    best_conn = jnp.max(masked, axis=1)
-    best_gain = best_conn - own
-    best_target = jnp.where(jnp.isfinite(best_conn), best_target, labels)
-    return own, best_gain, best_target
+    return masked_best(conn, labels, g.nw, capacity, k)

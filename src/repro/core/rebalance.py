@@ -18,6 +18,10 @@ v.  Buckets are exponentially spaced with α = 1.1:
 Note: Alg. 1 line 14 reads ``argmin RelGain``; the accompanying definition of
 r_v via a maximisation makes clear this is a typo for argmax (move to the
 *best* eligible block), which is what we implement.
+
+The arithmetic — and the constants below — live once in the unified engine
+(``repro.refine.engine``); this module is the single-device adapter and the
+back-compat home of the public names.
 """
 
 from __future__ import annotations
@@ -29,23 +33,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import Graph
-from repro.core.partition import best_moves, block_weights
+from repro.refine import engine
+from repro.refine.comm import SingleComm, edge_view_from_graph
+from repro.refine.gain import make_gain
 
-ALPHA = 1.1          # paper §2: "we use α = 1.1"
-N_BUCKETS = 96       # static bucket count; r_v ≈ −1e4 lands in bucket ~97 → clip
-GREEDY_NCAND = 128   # "a few vertices per overloaded block in every epoch"
+# single source of truth: repro.refine.engine (re-exported for back-compat)
+from repro.refine.engine import (  # noqa: F401
+    ALPHA,
+    GREEDY_NCAND,
+    N_BUCKETS,
+    _bucket_index,
+    _relative_gain,
+)
 
 
-def _relative_gain(gain: jax.Array, cv: jax.Array) -> jax.Array:
-    cv = jnp.maximum(cv, 1e-9)
-    return jnp.where(gain > 0, gain * cv, gain / cv)
-
-
-def _bucket_index(r: jax.Array) -> jax.Array:
-    """Exponentially spaced bucket index (paper Alg. 1 line 5)."""
-    neg = 1.0 + jnp.ceil(jnp.log1p(jnp.maximum(-r, 0.0)) / jnp.log(ALPHA))
-    j = jnp.where(r >= 0, 0.0, neg)
-    return jnp.clip(j, 0, N_BUCKETS - 1).astype(jnp.int32)
+def _single(g: Graph, k: int):
+    ev = edge_view_from_graph(g)
+    return SingleComm(g.n), make_gain("jnp", ev, k), ev
 
 
 class RebalanceStats(NamedTuple):
@@ -55,10 +59,6 @@ class RebalanceStats(NamedTuple):
     prob_passes: jax.Array
 
 
-# --------------------------------------------------------------------------
-# Alg. 1 — probabilistic bucket rebalancing
-# --------------------------------------------------------------------------
-
 @partial(jax.jit, static_argnames=("k",))
 def probabilistic_pass(
     g: Graph,
@@ -67,49 +67,10 @@ def probabilistic_pass(
     lmax: jax.Array,
     key: jax.Array,
 ) -> jax.Array:
-    bw = block_weights(g, labels, k)
-    overloaded = bw > lmax
+    """Alg. 1 — one probabilistic bucket-rebalancing pass."""
+    cm, gb, ev = _single(g, k)
+    return engine.prob_pass(cm, gb, ev, labels, key, lmax, k)
 
-    # g_v over eligible targets: non-overloaded blocks with room for v
-    capacity = jnp.where(~overloaded, lmax - bw, -jnp.inf)
-    _, gain, target = best_moves(g, labels, k, capacity=capacity)
-
-    mover = overloaded[labels] & jnp.isfinite(gain) & (g.nw > 0)
-    r = _relative_gain(gain, g.nw)
-    bucket = _bucket_index(r)
-
-    # global per-(overloaded block, bucket) weights  c(B_o^i)  — one
-    # segment_sum here; one psum in the distributed version (Alg. 1 line 8)
-    bkey = labels * N_BUCKETS + bucket
-    w = jnp.where(mover, g.nw, 0.0)
-    B = jax.ops.segment_sum(w, bkey, num_segments=k * N_BUCKETS)
-    B = B.reshape(k, N_BUCKETS)
-
-    # cut-off bucket  B̂_o = min{ j | Σ_{i<j} c(B_o^i) ≥ c(V_o) − L_max }
-    prefix = jnp.cumsum(B, axis=1)                       # Σ_{i≤j}
-    excess = jnp.maximum(bw - lmax, 0.0)
-    covered = prefix >= excess[:, None]                  # at j ⇒ cutoff = j+1
-    cutoff = jnp.where(
-        jnp.any(covered, axis=1),
-        jnp.argmax(covered, axis=1) + 1,
-        N_BUCKETS,
-    )
-    cutoff = jnp.where(excess > 0, cutoff, 0)            # balanced ⇒ move none
-
-    move_cand = mover & (bucket < cutoff[labels])
-
-    # W_u and acceptance probability p_u = (L_max − c(V_u)) / W_u
-    W = jax.ops.segment_sum(jnp.where(move_cand, g.nw, 0.0), target, num_segments=k)
-    room = jnp.maximum(lmax - bw, 0.0)
-    p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
-
-    accept = move_cand & (jax.random.uniform(key, (g.n,)) < p[target])
-    return jnp.where(accept, target, labels)
-
-
-# --------------------------------------------------------------------------
-# Greedy rebalancer (dKaMinPar, Ref. [9]) — centrally coordinated epochs
-# --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("k", "ncand"))
 def greedy_epoch(
@@ -122,40 +83,9 @@ def greedy_epoch(
     """One epoch: pick the globally best ≤ ncand movers (by r_v) and apply
     them *sequentially* with live weight accounting — the controlled but
     serial algorithm whose bottleneck motivates Alg. 1."""
-    bw = block_weights(g, labels, k)
-    overloaded = bw > lmax
-    capacity = jnp.where(~overloaded, lmax - bw, -jnp.inf)
-    _, gain, target = best_moves(g, labels, k, capacity=capacity)
+    cm, gb, ev = _single(g, k)
+    return engine.greedy_epoch(cm, gb, ev, labels, lmax, k, ncand)
 
-    mover = overloaded[labels] & jnp.isfinite(gain)
-    r = _relative_gain(gain, g.nw)
-    score = jnp.where(mover, r, -jnp.inf)
-    ncand = min(ncand, g.n)
-    _, idx = jax.lax.top_k(score, ncand)
-
-    def body(i, carry):
-        labels, bw = carry
-        v = idx[i]
-        lv = labels[v]
-        tv = target[v]
-        ok = (
-            jnp.isfinite(score[idx[i]])
-            & (bw[lv] > lmax)
-            & (bw[tv] + g.nw[v] <= lmax)
-            & (tv != lv)
-        )
-        labels = labels.at[v].set(jnp.where(ok, tv, lv))
-        dw = jnp.where(ok, g.nw[v], 0.0)
-        bw = bw.at[lv].add(-dw).at[tv].add(dw)
-        return labels, bw
-
-    labels, _ = jax.lax.fori_loop(0, ncand, body, (labels, bw))
-    return labels
-
-
-# --------------------------------------------------------------------------
-# Driver
-# --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("k", "max_epochs"))
 def rebalance(
@@ -167,34 +97,7 @@ def rebalance(
     max_epochs: int = 32,
 ) -> RebalanceStats:
     """Greedy epochs with probabilistic escalation (<10 % progress rule)."""
-
-    def overload_of(lbl):
-        bw = block_weights(g, lbl, k)
-        return jnp.sum(jnp.maximum(bw - lmax, 0.0))
-
-    def cond(state):
-        labels, key, ov, ep, pp = state
-        return (ov > 0) & (ep < max_epochs)
-
-    def body(state):
-        labels, key, ov, ep, pp = state
-        labels = greedy_epoch(g, labels, k, lmax)
-        new_ov = overload_of(labels)
-
-        # "whenever a single round reduces the total partition overload by
-        #  less than 10%" → escalate to the probabilistic algorithm
-        slow = new_ov > 0.9 * ov
-        key, sub = jax.random.split(key)
-
-        def escalate(lbl):
-            return probabilistic_pass(g, lbl, k, lmax, sub)
-
-        labels = jax.lax.cond(slow, escalate, lambda l: l, labels)
-        new_ov = jax.lax.cond(slow, overload_of, lambda *_: new_ov, labels)
-        return (labels, key, new_ov, ep + 1, pp + slow.astype(jnp.int32))
-
-    ov0 = overload_of(labels)
-    labels, _, ov, ep, pp = jax.lax.while_loop(
-        cond, body, (labels, key, ov0, jnp.int32(0), jnp.int32(0))
-    )
+    cm, gb, ev = _single(g, k)
+    labels, ov, ep, pp = engine.rebalance_loop(cm, gb, ev, labels, key, lmax,
+                                               k, max_epochs)
     return RebalanceStats(labels, ov, ep, pp)

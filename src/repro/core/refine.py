@@ -6,20 +6,21 @@ repeats until ``patience`` = 12 consecutive repetitions fail to improve the
 best *balanced* partition seen; that best partition is kept (Jet is allowed
 to wander through worse/imbalanced states in between — that is the point of
 unconstrained search).
+
+The whole level — every temperature round and every inner iteration — runs
+as ONE compiled device-resident program (``repro.refine.drivers``): the
+temperature loop is a ``fori_loop`` over the τ vector and the inner loop a
+``while_loop``, so a level costs O(1) dispatches instead of O(rounds·inner).
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
 
 from repro.core.graph import Graph
-from repro.core.jet import jet_round
-from repro.core.partition import edge_cut, l_max, total_overload
+from repro.core.partition import l_max
 from repro.core.rebalance import rebalance
+from repro.refine.drivers import refine_single
 
 TAU0 = 0.75
 TAU1 = 0.25
@@ -38,64 +39,6 @@ def temperature_schedule(rounds: int, tau0: float = TAU0, tau1: float = TAU1):
     return [tau0 + (i / (rounds - 1)) * (tau1 - tau0) for i in range(rounds)]
 
 
-class JetInnerState(NamedTuple):
-    labels: jax.Array
-    locked: jax.Array
-    best_labels: jax.Array
-    best_cut: jax.Array
-    since_improve: jax.Array
-    it: jax.Array
-    key: jax.Array
-
-
-@partial(jax.jit, static_argnames=("k", "patience", "max_inner"))
-def jet_inner(
-    g: Graph,
-    labels: jax.Array,
-    k: int,
-    tau: jax.Array | float,
-    lmax: jax.Array,
-    key: jax.Array,
-    patience: int = 12,
-    max_inner: int = 64,
-) -> jax.Array:
-    """One temperature round: repeat (jet_round → rebalance) until `patience`
-    consecutive non-improvements (paper: 12) or `max_inner` iterations."""
-
-    def cond(s: JetInnerState):
-        return (s.since_improve < patience) & (s.it < max_inner)
-
-    def body(s: JetInnerState):
-        key, k_reb = jax.random.split(s.key)
-        jr = jet_round(g, s.labels, s.locked, k, tau)
-        reb = rebalance(g, jr.labels, k, lmax, k_reb)
-        cut = edge_cut(g, reb.labels)
-        balanced = reb.overload <= 0
-        improved = balanced & (cut < s.best_cut)
-        best_labels = jnp.where(improved, reb.labels, s.best_labels)
-        best_cut = jnp.where(improved, cut, s.best_cut)
-        since = jnp.where(improved, 0, s.since_improve + 1)
-        return JetInnerState(
-            reb.labels, jr.locked, best_labels, best_cut, since, s.it + 1, key
-        )
-
-    cut0 = edge_cut(g, labels)
-    ov0 = total_overload(g, labels, k, lmax)
-    best_cut0 = jnp.where(ov0 <= 0, cut0, jnp.inf)
-    init = JetInnerState(
-        labels=labels,
-        locked=jnp.zeros(g.n, dtype=bool),
-        best_labels=labels,
-        best_cut=best_cut0,
-        since_improve=jnp.int32(0),
-        it=jnp.int32(0),
-        key=key,
-    )
-    final = jax.lax.while_loop(cond, body, init)
-    # if no balanced state was ever seen, fall back to the last labels
-    return jnp.where(jnp.isfinite(final.best_cut), final.best_labels, final.labels)
-
-
 def jet_refine(
     g: Graph,
     labels: jax.Array,
@@ -105,13 +48,17 @@ def jet_refine(
     rounds: int = 4,
     patience: int = 12,
     max_inner: int = 64,
+    gain: str = "jnp",
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """d4xJet (rounds=4) / dJet (rounds=1) refinement at one level."""
+    """d4xJet (rounds=4) / dJet (rounds=1) refinement at one level — one
+    fused dispatch.  ``gain`` selects the gain backend ("jnp", "pallas" or
+    "auto"; the DESIGN.md §5 fallback applies automatically)."""
     lmax = l_max(g, k, eps)
-    for tau in temperature_schedule(rounds):
-        key, sub = jax.random.split(key)
-        labels = jet_inner(g, labels, k, tau, lmax, sub, patience, max_inner)
-    return labels
+    return refine_single(
+        g, labels, k, key, lmax, temperature_schedule(rounds),
+        patience=patience, max_inner=max_inner, gain=gain,
+        interpret=interpret)
 
 
 def lp_refine_balanced(

@@ -198,7 +198,7 @@ def _specs(n: int):
     return tuple([P("pe", None)] * n)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=128)
 def _cluster_round_fn(mesh, P_: int, n_local: int, m_local: int, n_real: int):
     from repro.sharding.compat import shard_map
 
@@ -216,7 +216,7 @@ def _cluster_round_fn(mesh, P_: int, n_local: int, m_local: int, n_real: int):
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=128)
 def _compress_fn(mesh, n_local: int):
     from repro.sharding.compat import shard_map
 
@@ -228,7 +228,7 @@ def _compress_fn(mesh, n_local: int):
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=128)
 def _contract_fn(mesh, P_: int, n_local: int, m_local: int, blk: int):
     from repro.sharding.compat import shard_map
 
@@ -246,7 +246,7 @@ def _contract_fn(mesh, P_: int, n_local: int, m_local: int, blk: int):
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=128)
 def _uncoarsen_fn(mesh, n_local_f: int, blk: int):
     from repro.sharding.compat import shard_map
 
@@ -260,7 +260,7 @@ def _uncoarsen_fn(mesh, n_local_f: int, blk: int):
     ))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=128)
 def _count_fn(n_pad: int):
     def count(cl_sh, owned_sh):
         present = jnp.zeros((n_pad,), jnp.int32).at[cl_sh.reshape(-1)].max(

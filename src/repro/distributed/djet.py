@@ -1,339 +1,107 @@
 """Distributed Jet refinement + rebalancing under ``shard_map`` (paper §2).
 
 Every function in this module is the *per-PE* body of a ``shard_map`` over
-mesh axis ``"pe"``.  Communication pattern per Jet iteration (matches the
-paper's ghost protocol, in BSP form):
+mesh axis ``"pe"``, rendering the paper's ghost protocol in BSP form:
 
   1 all_gather of owned labels            (ghost block-id update)
   1 all_gather of owned (gain, target, ∈M) (interface g(v) exchange)
   psum of scalars (cut, overload)         (convergence tracking)
 
 and per rebalance pass: one psum of the (k, N_BUCKETS) bucket-weight matrix
-(Alg. 1 line 8's all-reduce), one psum of per-target candidate weight W_u.
+(Alg. 1 line 8's all-reduce), one psum of per-target candidate weight W_u,
+and one small all_gather of per-PE greedy candidate records.
 
-The numerical core (conn / gains / afterburner) is the same arithmetic as
-``core.jet``; a distributed run and a single-device run starting from the
-same labels take identical deterministic Jet moves (tested).
+The numerical core (conn / gains / afterburner / rebalance) lives ONCE in
+the unified engine (``repro.refine.engine``); this module adapts it to the
+block-sharded layout via :class:`~repro.refine.comm.AllGatherComm`.  A
+distributed run and a single-device run starting from the same labels take
+identical deterministic moves (tested in tests/test_refine_matrix.py).
 """
 
 from __future__ import annotations
-
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.graph import PAD
-from repro.core.rebalance import ALPHA, N_BUCKETS, _bucket_index, _relative_gain
+from repro.refine import engine
+from repro.refine.comm import AllGatherComm
+from repro.refine.drivers import _sharded_edge_view
+from repro.refine.engine import ALPHA, N_BUCKETS, _bucket_index, _relative_gain  # noqa: F401  (back-compat re-exports)
+from repro.refine.gain import make_gain
 from repro.sharding.compat import shard_map
 
 NEG = -jnp.inf
-
-
-def _local_conn(src, dst, ew, labels_loc, labels_full, k: int, n_local: int):
-    """(n_local, k) conn for owned vertices from local edge slots."""
-    live = dst != PAD
-    lv = labels_full[jnp.where(live, dst, 0)]
-    w = jnp.where(live, ew, 0.0)
-    key = src * k + lv
-    return jax.ops.segment_sum(w, key, num_segments=n_local * k).reshape(n_local, k)
-
-
-def _best(conn, labels_loc, nw_loc, capacity, k: int):
-    own = jnp.take_along_axis(conn, labels_loc[:, None], axis=1)[:, 0]
-    blk = jnp.arange(k, dtype=jnp.int32)
-    eligible = blk[None, :] != labels_loc[:, None]
-    if capacity is not None:
-        eligible &= capacity[None, :] >= nw_loc[:, None]
-    masked = jnp.where(eligible, conn, NEG)
-    tgt = jnp.argmax(masked, axis=1).astype(jnp.int32)
-    best = jnp.max(masked, axis=1)
-    gain = jnp.where(jnp.isfinite(best), best - own, NEG)
-    tgt = jnp.where(jnp.isfinite(best), tgt, labels_loc)
-    return own, gain, tgt
 
 
 def _gather(x):
     return jax.lax.all_gather(x, "pe", tiled=True)
 
 
-def _global_uniform_full(key, n_real: int, tail: int):
-    """The (n_real,) global-vertex-space uniform draw plus a zero tail for
-    padding slots.  The draw shape must be exactly (n_real,) — threefry is
-    not prefix-stable across shapes — so this module's sliced draw and the
-    host path's ``uniform(key, (n,))`` see the same per-vertex stream.
-    (halo.py deliberately uses a different, fold-in-per-gid stream to stay
-    O(n_local) per PE.)
-    """
-    return jnp.concatenate(
-        [jax.random.uniform(key, (n_real,)), jnp.zeros((tail,), jnp.float32)]
-    )
-
-
 def _global_uniform(key, gstart, *, n_local: int, n_real: int):
-    """Per-slot uniforms drawn in *global* vertex space.
+    """Per-slot uniforms drawn in *global* vertex space: the same key yields
+    the same value for a given vertex regardless of P or of the vertex
+    split — the determinism contract of the distributed modules.  The single
+    copy of the stream recipe lives in ``repro.refine.comm`` (the engine's
+    comm backends carry the same stream); ``dcoarsen`` imports it from
+    here."""
+    from repro.refine.comm import global_uniform_slice
 
-    The same key yields the same value for a given vertex regardless of P or
-    of how vertices are split over PEs — so randomized passes take identical
-    decisions on 1 device and on P devices (the determinism contract of this
-    module), and match the host path's ``uniform(key, (n,))`` draw exactly.
-    The ``n_local`` zero-tail covers the last PE's padding slots, whose draws
-    are never used (acceptance is masked by ``owned``).
-    """
-    u = _global_uniform_full(key, n_real, n_local)
-    return jax.lax.dynamic_slice(u, (gstart,), (n_local,))
+    return global_uniform_slice(key, gstart, n_local=n_local, n_real=n_real)
 
 
-def _block_weights(nw_loc, labels_loc, k: int):
-    return jax.lax.psum(
-        jax.ops.segment_sum(nw_loc, labels_loc, num_segments=k), "pe"
-    )
-
-
-def _cut(src, dst, ew, labels_loc, labels_full):
-    live = dst != PAD
-    lu = labels_loc[src]
-    lv = labels_full[jnp.where(live, dst, 0)]
-    w = jnp.where(live & (lu != lv), ew, 0.0)
-    return jax.lax.psum(jnp.sum(w), "pe") * 0.5
+def _backends(src, dst, ew, nw, owned, gstart, *, k: int, n_local: int,
+              n_real: int):
+    ev = _sharded_edge_view(src, dst, ew, nw, owned, n_local)
+    cm = AllGatherComm(gstart, n_local, n_real)
+    return ev, cm, make_gain("jnp", ev, k)
 
 
 # --------------------------------------------------------------------------
-# Distributed Jet round
+# per-PE adapters (shard_map bodies; also used by launch/dryrun.py)
 # --------------------------------------------------------------------------
 
 def djet_round_local(src, dst, ew, nw, owned, labels_loc, locked, tau,
                      *, k: int, n_local: int):
-    labels_full = _gather(labels_loc)
-    conn = _local_conn(src, dst, ew, labels_loc, labels_full, k, n_local)
-    own, gain, target = _best(conn, labels_loc, nw, None, k)
+    ev, cm, gb = _backends(src, dst, ew, nw, owned, jnp.int32(0),
+                           k=k, n_local=n_local, n_real=n_local)
+    return engine.jet_move(cm, gb, ev, labels_loc, locked, tau, k)
 
-    threshold = -jnp.floor(tau * own)
-    cand = (gain >= threshold) & (~locked) & (target != labels_loc)
-    cand &= jnp.isfinite(gain) & owned
-
-    # ghost exchange of (g(v), target, ∈M) for the afterburner
-    gain_full = _gather(jnp.where(cand, gain, NEG))
-    target_full = _gather(target)
-    cand_full = _gather(cand)
-
-    pe = jax.lax.axis_index("pe")
-    my_gid = pe * n_local + jnp.arange(n_local, dtype=jnp.int32)
-
-    live = dst != PAD
-    dsafe = jnp.where(live, dst, 0)
-    gu = gain_full[dsafe]
-    gv = gain[src]
-    precede = cand_full[dsafe] & ((gu > gv) | ((gu == gv) & (dsafe < my_gid[src])))
-    assumed = jnp.where(precede, target_full[dsafe], labels_full[dsafe])
-
-    w = jnp.where(live, ew, 0.0)
-    tv = target[src]
-    lown = labels_loc[src]
-    delta_e = w * ((assumed == tv).astype(w.dtype) - (assumed == lown).astype(w.dtype))
-    delta = jax.ops.segment_sum(delta_e, src, num_segments=n_local)
-
-    move = cand & (delta >= 0.0)
-    new_labels = jnp.where(move, target, labels_loc)
-    return new_labels, move
-
-
-# --------------------------------------------------------------------------
-# Distributed rebalancing (Alg. 1 + greedy finisher)
-# --------------------------------------------------------------------------
 
 def dprob_pass_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
                      *, k: int, n_local: int, n_real: int):
-    labels_full = _gather(labels_loc)
-    bw = _block_weights(nw, labels_loc, k)
-    overloaded = bw > lmax
-    capacity = jnp.where(~overloaded, lmax - bw, NEG)
-
-    conn = _local_conn(src, dst, ew, labels_loc, labels_full, k, n_local)
-    _, gain, target = _best(conn, labels_loc, nw, capacity, k)
-
-    mover = overloaded[labels_loc] & jnp.isfinite(gain) & owned & (nw > 0)
-    r = _relative_gain(gain, nw)
-    bucket = _bucket_index(r)
-
-    bkey = labels_loc * N_BUCKETS + bucket
-    w = jnp.where(mover, nw, 0.0)
-    B = jax.lax.psum(
-        jax.ops.segment_sum(w, bkey, num_segments=k * N_BUCKETS), "pe"
-    ).reshape(k, N_BUCKETS)                      # Alg. 1 line 8 all-reduce
-
-    prefix = jnp.cumsum(B, axis=1)
-    excess = jnp.maximum(bw - lmax, 0.0)
-    covered = prefix >= excess[:, None]
-    cutoff = jnp.where(jnp.any(covered, axis=1), jnp.argmax(covered, axis=1) + 1, N_BUCKETS)
-    cutoff = jnp.where(excess > 0, cutoff, 0)
-
-    move_cand = mover & (bucket < cutoff[labels_loc])
-    W = jax.lax.psum(
-        jax.ops.segment_sum(jnp.where(move_cand, nw, 0.0), target, num_segments=k),
-        "pe",
-    )
-    room = jnp.maximum(lmax - bw, 0.0)
-    p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
-
-    u = _global_uniform(key, gstart, n_local=n_local, n_real=n_real)
-    accept = move_cand & (u < p[target])
-    return jnp.where(accept, target, labels_loc)
+    ev, cm, gb = _backends(src, dst, ew, nw, owned, gstart,
+                           k=k, n_local=n_local, n_real=n_real)
+    return engine.prob_pass(cm, gb, ev, labels_loc, key, lmax, k)
 
 
 def dgreedy_epoch_local(src, dst, ew, nw, owned, labels_loc, lmax,
                         *, k: int, n_local: int, ncand: int = 128):
-    """Centrally coordinated greedy epoch: every PE redundantly evaluates the
-    same global top-ncand move sequence (deterministic), then keeps its local
-    slice — the BSP rendering of Ref. [9]'s sequential bottleneck."""
-    labels_full = _gather(labels_loc)
-    bw = _block_weights(nw, labels_loc, k)
-    overloaded = bw > lmax
-    capacity = jnp.where(~overloaded, lmax - bw, NEG)
-
-    conn = _local_conn(src, dst, ew, labels_loc, labels_full, k, n_local)
-    _, gain, target = _best(conn, labels_loc, nw, capacity, k)
-
-    mover = overloaded[labels_loc] & jnp.isfinite(gain) & owned
-    r = jnp.where(mover, _relative_gain(gain, nw), NEG)
-
-    # gather global candidate info; every PE replays the same move sequence
-    r_full = _gather(r)
-    tgt_full = _gather(target)
-    nw_full = _gather(nw)
-    n_pad = r_full.shape[0]
-    nc = min(ncand, n_pad)
-    _, idx = jax.lax.top_k(r_full, nc)
-
-    def body(i, carry):
-        lab_full, bw = carry
-        v = idx[i]
-        lv = lab_full[v]
-        tv = tgt_full[v]
-        ok = (
-            jnp.isfinite(r_full[v])
-            & (bw[lv] > lmax)
-            & (bw[tv] + nw_full[v] <= lmax)
-            & (tv != lv)
-        )
-        lab_full = lab_full.at[v].set(jnp.where(ok, tv, lv))
-        dw = jnp.where(ok, nw_full[v], 0.0)
-        bw = bw.at[lv].add(-dw).at[tv].add(dw)
-        return lab_full, bw
-
-    lab_full, _ = jax.lax.fori_loop(0, nc, body, (labels_full, bw))
-    pe = jax.lax.axis_index("pe")
-    return jax.lax.dynamic_slice(lab_full, (pe * n_local,), (n_local,))
+    ev, cm, gb = _backends(src, dst, ew, nw, owned, jnp.int32(0),
+                           k=k, n_local=n_local, n_real=n_local)
+    return engine.greedy_epoch(cm, gb, ev, labels_loc, lmax, k, ncand)
 
 
 def drebalance_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
                      *, k: int, n_local: int, n_real: int, max_epochs: int = 32):
-    def overload_of(lbl):
-        bw = _block_weights(nw, lbl, k)
-        return jnp.sum(jnp.maximum(bw - lmax, 0.0))
-
-    def cond(state):
-        _, _, ov, ep = state
-        return (ov > 0) & (ep < max_epochs)
-
-    def body(state):
-        labels, key, ov, ep = state
-        labels = dgreedy_epoch_local(src, dst, ew, nw, owned, labels, lmax,
-                                     k=k, n_local=n_local)
-        new_ov = overload_of(labels)
-        slow = new_ov > 0.9 * ov  # the paper's <10 % progress escalation rule
-        key, sub = jax.random.split(key)
-        labels = jax.lax.cond(
-            slow,
-            lambda l: dprob_pass_local(src, dst, ew, nw, owned, l, gstart, sub,
-                                       lmax, k=k, n_local=n_local, n_real=n_real),
-            lambda l: l,
-            labels,
-        )
-        new_ov = jax.lax.cond(slow, overload_of, lambda *_: new_ov, labels)
-        return labels, key, new_ov, ep + 1
-
-    ov0 = overload_of(labels_loc)
-    labels, _, ov, _ = jax.lax.while_loop(cond, body, (labels_loc, key, ov0, jnp.int32(0)))
+    ev, cm, gb = _backends(src, dst, ew, nw, owned, gstart,
+                           k=k, n_local=n_local, n_real=n_real)
+    labels, ov, _, _ = engine.rebalance_loop(cm, gb, ev, labels_loc, key,
+                                             lmax, k, max_epochs)
     return labels, ov
-
-
-# --------------------------------------------------------------------------
-# Distributed d4xJet refinement at one level (whole loop inside shard_map)
-# --------------------------------------------------------------------------
-
-def djet_refine_local(src, dst, ew, nw, owned, labels_loc, gstart, key, tau,
-                      lmax, *, k: int, n_local: int, n_real: int,
-                      patience: int, max_inner: int):
-    def cond(s):
-        (_, _, _, best_cut, since, it, _) = s
-        return (since < patience) & (it < max_inner)
-
-    def body(s):
-        labels, locked, best_labels, best_cut, since, it, key = s
-        key, k_reb = jax.random.split(key)
-        labels, moved = djet_round_local(src, dst, ew, nw, owned, labels, locked,
-                                         tau, k=k, n_local=n_local)
-        labels, ov = drebalance_local(src, dst, ew, nw, owned, labels, gstart,
-                                      k_reb, lmax, k=k, n_local=n_local,
-                                      n_real=n_real)
-        labels_full = _gather(labels)
-        cut = _cut(src, dst, ew, labels, labels_full)
-        balanced = ov <= 0
-        improved = balanced & (cut < best_cut)
-        best_labels = jnp.where(improved, labels, best_labels)
-        best_cut = jnp.where(improved, cut, best_cut)
-        since = jnp.where(improved, 0, since + 1)
-        return labels, moved, best_labels, best_cut, since, it + 1, key
-
-    labels_full0 = _gather(labels_loc)
-    cut0 = _cut(src, dst, ew, labels_loc, labels_full0)
-    bw0 = _block_weights(nw, labels_loc, k)
-    ov0 = jnp.sum(jnp.maximum(bw0 - lmax, 0.0))
-    best_cut0 = jnp.where(ov0 <= 0, cut0, jnp.inf)
-
-    init = (
-        labels_loc,
-        jnp.zeros(n_local, dtype=bool),
-        labels_loc,
-        best_cut0,
-        jnp.int32(0),
-        jnp.int32(0),
-        key,
-    )
-    labels, _, best_labels, best_cut, _, _, _ = jax.lax.while_loop(cond, body, init)
-    return jnp.where(jnp.isfinite(best_cut), best_labels, labels)
 
 
 def dlp_round_local(src, dst, ew, nw, owned, labels_loc, gstart, key, lmax,
                     *, k: int, n_local: int, n_real: int):
     """Distributed size-constrained LP round (the dLP baseline)."""
-    labels_full = _gather(labels_loc)
-    bw = _block_weights(nw, labels_loc, k)
-    capacity = lmax - bw
-    conn = _local_conn(src, dst, ew, labels_loc, labels_full, k, n_local)
-    _, gain, target = _best(conn, labels_loc, nw, capacity, k)
-    want = (gain > 0) & jnp.isfinite(gain) & owned
-
-    w_in = jax.lax.psum(
-        jax.ops.segment_sum(jnp.where(want, nw, 0.0), target, num_segments=k), "pe"
-    )
-    p = jnp.where(w_in > 0, jnp.clip(capacity / jnp.maximum(w_in, 1e-9), 0.0, 1.0), 1.0)
-    u = _global_uniform(key, gstart, n_local=n_local, n_real=n_real)
-    accept = want & (u < p[target])
-    return jnp.where(accept, target, labels_loc)
+    ev, cm, gb = _backends(src, dst, ew, nw, owned, gstart,
+                           k=k, n_local=n_local, n_real=n_real)
+    return engine.lp_round(cm, gb, ev, labels_loc, key, lmax, k)
 
 
 # --------------------------------------------------------------------------
 # shard_map factories (public API)
 # --------------------------------------------------------------------------
-
-def _specs():
-    sharded = P("pe", None)
-    return sharded
-
 
 def make_djet_round(mesh, k: int, n_local: int):
     """Returns f(src,dst,ew,nw,owned,labels,locked,tau) over (P, ·) arrays."""
@@ -383,24 +151,5 @@ def make_dlp_round(mesh, k: int, n_local: int, n_real: int):
         per_pe,
         mesh=mesh,
         in_specs=(sh, sh, sh, sh, sh, sh, P("pe"), P(), P()),
-        out_specs=sh,
-    ))
-
-
-def make_djet_refine(mesh, k: int, n_local: int, n_real: int,
-                     patience: int = 12, max_inner: int = 64):
-    def per_pe(src, dst, ew, nw, owned, labels, gstart, key, tau, lmax):
-        out = djet_refine_local(
-            src[0], dst[0], ew[0], nw[0], owned[0], labels[0], gstart[0], key,
-            tau, lmax, k=k, n_local=n_local, n_real=n_real,
-            patience=patience, max_inner=max_inner,
-        )
-        return out[None]
-
-    sh = P("pe", None)
-    return jax.jit(shard_map(
-        per_pe,
-        mesh=mesh,
-        in_specs=(sh, sh, sh, sh, sh, sh, P("pe"), P(), P(), P()),
         out_specs=sh,
     ))

@@ -41,7 +41,11 @@ from repro.distributed.dgraph import (
     shard_graph,
     sharded_to_graph,
 )
-from repro.distributed.djet import make_djet_refine, make_dlp_round, make_drebalance
+from repro.refine.drivers import (
+    make_lp_level_sharded,
+    make_refine_level_halo,
+    make_refine_level_sharded,
+)
 from repro.sharding.compat import make_mesh
 
 
@@ -68,67 +72,55 @@ def _dl_max(sg: ShardedGraph, k: int, eps: float):
 
 
 def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key, refiner,
-                     patience, max_inner):
-    """Refine one already-sharded level in place (labels stay sharded)."""
-    owned = owned_mask(sg)
-    gstart = sg.vtx_start
+                     patience, max_inner, gain="jnp"):
+    """Refine one already-sharded level in place (labels stay sharded).
 
+    The whole level is ONE fused dispatch (``repro.refine.drivers``): the
+    temperature loop and the inner (Jet → rebalance → patience) loop run
+    device-resident, instead of one dispatch per round."""
     if refiner == "dlp":
-        lp = make_dlp_round(mesh, k, sg.n_local, sg.n_real)
-        reb = make_drebalance(mesh, k, sg.n_local, sg.n_real)
-        for _ in range(8):
-            key, sub = jax.random.split(key)
-            lab_sh = lp(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, gstart,
-                        sub, lmax)
-        key, sub = jax.random.split(key)
-        lab_sh, _ = reb(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh, gstart,
-                        sub, lmax)
+        run = make_lp_level_sharded(mesh, sg, k, gain=gain)
     else:
         rounds = 1 if refiner == "djet" else 4
-        refine = make_djet_refine(mesh, k, sg.n_local, sg.n_real,
-                                  patience=patience, max_inner=max_inner)
-        for tau in temperature_schedule(rounds):
-            key, sub = jax.random.split(key)
-            lab_sh = refine(sg.src, sg.dst, sg.ew, sg.nw, owned, lab_sh,
-                            gstart, sub, jnp.float32(tau), lmax)
-    return lab_sh
+        run = make_refine_level_sharded(
+            mesh, sg, k, rounds_taus=temperature_schedule(rounds),
+            patience=patience, max_inner=max_inner, gain=gain)
+    return run(lab_sh, key, lmax)
 
 
 def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
-                   max_inner, halo: bool = False):
+                   max_inner, halo: bool = False, gain="jnp"):
     """Host-path level refinement: shard the level graph, refine, gather."""
     P_ = mesh.devices.size
     lmax = l_max(g, k, eps)
 
     if halo and refiner != "dlp":
         # interface-only exchange fast path (§Perf cell 1, paper's ghost
-        # protocol); rebalancing via probabilistic passes only
+        # protocol), same fused engine over the HaloComm backend
         from repro.distributed.halo import (
             halo_labels_from_sharded,
             halo_labels_to_sharded,
-            make_halo_refine,
             shard_graph_halo,
         )
 
         hsg, perm = shard_graph_halo(g, P_)
         lab_sh = halo_labels_to_sharded(hsg, perm, labels)
         rounds = 1 if refiner == "djet" else 4
-        refine = make_halo_refine(mesh, hsg, k, patience=patience,
-                                  max_inner=max_inner)
-        for tau in temperature_schedule(rounds):
-            key, sub = jax.random.split(key)
-            lab_sh = refine(hsg, lab_sh, sub, jnp.float32(tau), lmax)
+        run = make_refine_level_halo(
+            mesh, hsg, k, rounds_taus=temperature_schedule(rounds),
+            patience=patience, max_inner=max_inner, gain=gain)
+        lab_sh = run(lab_sh, key, lmax)
         return halo_labels_from_sharded(hsg, perm, lab_sh)
 
     sg = shard_graph(g, P_)
     lab_sh = labels_to_sharded(sg, labels)
     lab_sh = _drefine_sharded(mesh, sg, lab_sh, k, lmax, key, refiner,
-                              patience, max_inner)
+                              patience, max_inner, gain=gain)
     return labels_from_sharded(sg, lab_sh)
 
 
 def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
-                             coarsen_until, patience, max_inner, halo):
+                             coarsen_until, patience, max_inner, halo, gain):
     """Fallback: centralised coarsening, per-level re-sharded refinement."""
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                            coarsen_until=coarsen_until)
@@ -136,18 +128,19 @@ def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
 
     key, sub = jax.random.split(key)
     labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, refiner,
-                            patience, max_inner, halo=halo)
+                            patience, max_inner, halo=halo, gain=gain)
 
     for fine, mapping in reversed(levels):
         labels = labels[mapping]
         key, sub = jax.random.split(key)
         labels = _drefine_level(mesh, fine, labels, k, eps, sub, refiner,
-                                patience, max_inner, halo=halo)
+                                patience, max_inner, halo=halo, gain=gain)
     return labels, len(levels) + 1
 
 
 def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
-                                refiner, coarsen_until, patience, max_inner):
+                                refiner, coarsen_until, patience, max_inner,
+                                gain):
     """On-device V-cycle: graph is sharded once; every level stays sharded."""
     P_ = mesh.devices.size
     sg0 = shard_graph(g, P_)
@@ -162,14 +155,14 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
     key, sub = jax.random.split(key)
     lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
                               _dl_max(coarsest, k, eps), sub, refiner,
-                              patience, max_inner)
+                              patience, max_inner, gain=gain)
 
     for fine_sg, map_sh, coarse_sg in reversed(levels):
         lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
         key, sub = jax.random.split(key)
         lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
                                   _dl_max(fine_sg, k, eps), sub, refiner,
-                                  patience, max_inner)
+                                  patience, max_inner, gain=gain)
 
     return labels_from_sharded(sg0, lab_sh), len(levels) + 1
 
@@ -186,6 +179,7 @@ def dpartition(
     patience: int = 12,
     max_inner: int = 64,
     halo: bool = False,
+    gain: str = "jnp",
 ) -> DPartitionResult:
     if coarsen is None:
         coarsen = "host" if halo else "sharded"
@@ -204,11 +198,11 @@ def dpartition(
     if coarsen == "host":
         labels, n_levels = _dpartition_host_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner, halo)
+            patience, max_inner, halo, gain)
     else:
         labels, n_levels = _dpartition_sharded_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner)
+            patience, max_inner, gain)
 
     return DPartitionResult(
         labels=labels,

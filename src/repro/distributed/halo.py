@@ -20,6 +20,12 @@ once per level):
 Vertex ids for the afterburner tie-break are carried explicitly
 (``head_gid``/``my_gid``), so move decisions are bit-identical to the
 baseline round (tested in tests/test_halo.py).
+
+This module owns the halo *layout* (sharding, label conversion, halo
+codes); the refinement arithmetic lives once in the unified engine
+(``repro.refine.engine``), adapted here via
+:class:`~repro.refine.comm.HaloComm`.  The fused whole-level halo program
+is ``repro.refine.drivers.make_refine_level_halo``.
 """
 
 from __future__ import annotations
@@ -31,7 +37,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import PAD, Graph
-from repro.core.rebalance import N_BUCKETS, _bucket_index, _relative_gain
 from repro.sharding.compat import shard_map
 
 
@@ -155,127 +160,44 @@ def halo_labels_from_sharded(sg: HaloShardedGraph, perm: np.ndarray, lab_sh):
 
 
 # --------------------------------------------------------------------------
-# per-PE rounds with halo exchange (shard_map bodies)
+# per-PE adapters over the unified engine (shard_map bodies)
 # --------------------------------------------------------------------------
 
-def _halo_gather(x_loc, h_local: int):
-    """all_gather only the interface slice: (n_local,) → (P·h_local,)."""
-    return jax.lax.all_gather(x_loc[:h_local], "pe", tiled=True)
+def _halo_backends(sg: HaloShardedGraph, *, k: int, uniform_mode: str):
+    """EdgeView + comm/gain backends for one PE of a halo-sharded level.
 
+    ``sg`` arrays still carry the leading PE axis; per-PE slices are taken
+    here so callers can pass the pytree straight through ``shard_map``.
+    """
+    from repro.refine.comm import HaloComm, halo_edge_view
+    from repro.refine.gain import make_gain
 
-def _lookup(code, halo_vals, local_vals, H: int):
-    remote = code < H
-    r = halo_vals[jnp.where(remote, code, 0)]
-    l = local_vals[jnp.where(remote, 0, code - H)]
-    return jnp.where(remote, r, l)
-
-
-def _halo_conn(sg_arrays, labels_loc, labels_halo, k: int, n_local: int, H: int):
-    src, dst_code, head_gid, ew = sg_arrays
-    live = head_gid != PAD
-    lv = _lookup(dst_code, labels_halo, labels_loc, H)
-    w = jnp.where(live, ew, 0.0)
-    key = src * k + jnp.where(live, lv, 0)
-    return jax.ops.segment_sum(w, key, num_segments=n_local * k).reshape(n_local, k), lv, w
-
-
-def _best(conn, labels_loc, nw_loc, capacity, k: int):
-    own = jnp.take_along_axis(conn, labels_loc[:, None], axis=1)[:, 0]
-    blk = jnp.arange(k, dtype=jnp.int32)
-    eligible = blk[None, :] != labels_loc[:, None]
-    if capacity is not None:
-        eligible &= capacity[None, :] >= nw_loc[:, None]
-    masked = jnp.where(eligible, conn, -jnp.inf)
-    tgt = jnp.argmax(masked, axis=1).astype(jnp.int32)
-    best = jnp.max(masked, axis=1)
-    gain = jnp.where(jnp.isfinite(best), best - own, -jnp.inf)
-    tgt = jnp.where(jnp.isfinite(best), tgt, labels_loc)
-    return own, gain, tgt
+    ev = halo_edge_view(sg.src[0], sg.dst_code[0], sg.head_gid[0], sg.ew[0],
+                        sg.nw[0], sg.my_gid[0], sg.owned[0])
+    cm = HaloComm(sg.P, sg.h_local, sg.n_local, sg.n_real,
+                  uniform_mode=uniform_mode)
+    return ev, cm, make_gain("jnp", ev, k)
 
 
 def halo_jet_round_local(sg: HaloShardedGraph, labels_loc, locked, tau,
                          *, k: int):
-    n_local, h_local = sg.n_local, sg.h_local
-    H = sg.P * h_local
-    src, dst_code, head_gid, ew = (x[0] for x in (sg.src, sg.dst_code,
-                                                  sg.head_gid, sg.ew))
-    nw, owned, my_gid = sg.nw[0], sg.owned[0], sg.my_gid[0]
+    from repro.refine import engine
 
-    labels_halo = _halo_gather(labels_loc, h_local)
-    conn, lv, w = _halo_conn((src, dst_code, head_gid, ew), labels_loc,
-                             labels_halo, k, n_local, H)
-    own, gain, target = _best(conn, labels_loc, nw, None, k)
-
-    threshold = -jnp.floor(tau * own)
-    cand = (gain >= threshold) & (~locked) & (target != labels_loc)
-    cand &= jnp.isfinite(gain) & owned
-
-    # halo exchange of (gain, target, ∈M) — interface slices only
-    gain_halo = _halo_gather(jnp.where(cand, gain, -jnp.inf), h_local)
-    target_halo = _halo_gather(target, h_local)
-    cand_halo = _halo_gather(cand, h_local)
-
-    gu = _lookup(dst_code, gain_halo, jnp.where(cand, gain, -jnp.inf), H)
-    tu = _lookup(dst_code, target_halo, target, H)
-    cu = _lookup(dst_code, cand_halo, cand, H)
-
-    gv = gain[src]
-    precede = cu & ((gu > gv) | ((gu == gv) & (head_gid < my_gid[src])))
-    assumed = jnp.where(precede, tu, lv)
-
-    tv = target[src]
-    lown = labels_loc[src]
-    delta_e = w * ((assumed == tv).astype(w.dtype) - (assumed == lown).astype(w.dtype))
-    delta = jax.ops.segment_sum(delta_e, src, num_segments=n_local)
-
-    move = cand & (delta >= 0.0)
-    return jnp.where(move, target, labels_loc), move
+    ev, cm, gb = _halo_backends(sg, k=k, uniform_mode="global")
+    return engine.jet_move(cm, gb, ev, labels_loc, locked, tau, k)
 
 
-def halo_prob_pass_local(sg: HaloShardedGraph, labels_loc, key, lmax, *, k: int):
-    n_local, h_local = sg.n_local, sg.h_local
-    H = sg.P * h_local
-    src, dst_code, head_gid, ew = (x[0] for x in (sg.src, sg.dst_code,
-                                                  sg.head_gid, sg.ew))
-    nw, owned, my_gid = sg.nw[0], sg.owned[0], sg.my_gid[0]
+def halo_prob_pass_local(sg: HaloShardedGraph, labels_loc, key, lmax,
+                         *, k: int, uniform_mode: str = "fold"):
+    """Alg. 1 pass under the halo protocol.  Defaults to the O(n_local)
+    fold-in-per-gid uniform stream (the scale setting used by the launch
+    dry-run); the fused level driver (``repro.refine.drivers``) uses the
+    global-vertex-space stream for the cross-backend determinism contract.
+    """
+    from repro.refine import engine
 
-    bw = jax.lax.psum(jax.ops.segment_sum(nw, labels_loc, num_segments=k), "pe")
-    overloaded = bw > lmax
-    capacity = jnp.where(~overloaded, lmax - bw, -jnp.inf)
-
-    labels_halo = _halo_gather(labels_loc, h_local)
-    conn, _, _ = _halo_conn((src, dst_code, head_gid, ew), labels_loc,
-                            labels_halo, k, n_local, H)
-    _, gain, target = _best(conn, labels_loc, nw, capacity, k)
-
-    mover = overloaded[labels_loc] & jnp.isfinite(gain) & owned & (nw > 0)
-    bucket = _bucket_index(_relative_gain(gain, nw))
-
-    B = jax.lax.psum(
-        jax.ops.segment_sum(jnp.where(mover, nw, 0.0),
-                            labels_loc * N_BUCKETS + bucket,
-                            num_segments=k * N_BUCKETS), "pe"
-    ).reshape(k, N_BUCKETS)
-    prefix = jnp.cumsum(B, axis=1)
-    excess = jnp.maximum(bw - lmax, 0.0)
-    covered = prefix >= excess[:, None]
-    cutoff = jnp.where(jnp.any(covered, axis=1), jnp.argmax(covered, axis=1) + 1,
-                       N_BUCKETS)
-    cutoff = jnp.where(excess > 0, cutoff, 0)
-
-    move_cand = mover & (bucket < cutoff[labels_loc])
-    W = jax.lax.psum(jax.ops.segment_sum(jnp.where(move_cand, nw, 0.0), target,
-                                         num_segments=k), "pe")
-    room = jnp.maximum(lmax - bw, 0.0)
-    p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
-    # uniforms seeded per *global* vertex id: P-invariant (and independent of
-    # the interface-first permutation) like the block-sharded path's draw,
-    # but O(n_local) per PE — materialising the (n_real,) stream here would
-    # reintroduce exactly the O(n) per-PE cost this module exists to avoid
-    gid = jnp.where(owned, my_gid, 0)
-    u = jax.vmap(lambda v: jax.random.uniform(jax.random.fold_in(key, v)))(gid)
-    accept = move_cand & (u < p[target])
-    return jnp.where(accept, target, labels_loc)
+    ev, cm, gb = _halo_backends(sg, k=k, uniform_mode=uniform_mode)
+    return engine.prob_pass(cm, gb, ev, labels_loc, key, lmax, k)
 
 
 def make_halo_jet_round(mesh, sg: HaloShardedGraph, k: int):
@@ -295,93 +217,4 @@ def make_halo_jet_round(mesh, sg: HaloShardedGraph, k: int):
         per_pe, mesh=mesh,
         in_specs=(sg_specs, sh, sh, P()),
         out_specs=(sh, sh),
-    ))
-
-
-# --------------------------------------------------------------------------
-# full halo refinement driver (jet rounds + probabilistic rebalance only —
-# the paper's scalable fast path; no centrally-coordinated greedy epochs)
-# --------------------------------------------------------------------------
-
-def halo_refine_local(sg: HaloShardedGraph, labels_loc, key, tau, lmax,
-                      *, k: int, patience: int = 12, max_inner: int = 64,
-                      reb_passes: int = 8):
-    """One temperature round under the halo protocol.  Rebalancing uses
-    repeated probabilistic passes (Alg. 1) — the fully parallel path."""
-    src, dst_code, head_gid, ew = (x[0] for x in (sg.src, sg.dst_code,
-                                                  sg.head_gid, sg.ew))
-    nw = sg.nw[0]
-    n_local, h_local = sg.n_local, sg.h_local
-    H = sg.P * h_local
-
-    def block_weights(lbl):
-        return jax.lax.psum(
-            jax.ops.segment_sum(nw, lbl, num_segments=k), "pe")
-
-    def cut_of(lbl):
-        labels_halo = _halo_gather(lbl, h_local)
-        live = head_gid != PAD
-        lu = lbl[src]
-        lv = _lookup(dst_code, labels_halo, lbl, H)
-        w = jnp.where(live & (lu != lv), ew, 0.0)
-        return jax.lax.psum(jnp.sum(w), "pe") * 0.5
-
-    def rebalance(lbl, key):
-        def body(i, carry):
-            lbl, key = carry
-            key, sub = jax.random.split(key)
-            bw = block_weights(lbl)
-            ov = jnp.sum(jnp.maximum(bw - lmax, 0.0))
-            new = halo_prob_pass_local(sg, lbl, sub, lmax, k=k)
-            lbl = jnp.where(ov > 0, new, lbl)
-            return lbl, key
-
-        lbl, _ = jax.lax.fori_loop(0, reb_passes, body, (lbl, key))
-        bw = block_weights(lbl)
-        return lbl, jnp.sum(jnp.maximum(bw - lmax, 0.0))
-
-    def cond(s):
-        _, _, _, _, since, it, _ = s
-        return (since < patience) & (it < max_inner)
-
-    def body(s):
-        lbl, locked, best_lbl, best_cut, since, it, key = s
-        key, k_reb = jax.random.split(key)
-        lbl, moved = halo_jet_round_local(sg, lbl, locked, tau, k=k)
-        lbl, ov = rebalance(lbl, k_reb)
-        cut = cut_of(lbl)
-        improved = (ov <= 0) & (cut < best_cut)
-        best_lbl = jnp.where(improved, lbl, best_lbl)
-        best_cut = jnp.where(improved, cut, best_cut)
-        since = jnp.where(improved, 0, since + 1)
-        return lbl, moved, best_lbl, best_cut, since, it + 1, key
-
-    bw0 = block_weights(labels_loc)
-    ov0 = jnp.sum(jnp.maximum(bw0 - lmax, 0.0))
-    best_cut0 = jnp.where(ov0 <= 0, cut_of(labels_loc), jnp.inf)
-    init = (labels_loc, jnp.zeros(n_local, bool), labels_loc, best_cut0,
-            jnp.int32(0), jnp.int32(0), key)
-    lbl, _, best_lbl, best_cut, _, _, _ = jax.lax.while_loop(cond, body, init)
-    return jnp.where(jnp.isfinite(best_cut), best_lbl, lbl)
-
-
-def make_halo_refine(mesh, sg: HaloShardedGraph, k: int, patience: int = 12,
-                     max_inner: int = 64):
-    from jax.sharding import PartitionSpec as P
-
-    def per_pe(sg_, labels, key, tau, lmax):
-        out = halo_refine_local(sg_, labels[0], key, tau, lmax, k=k,
-                                patience=patience, max_inner=max_inner)
-        return out[None]
-
-    sh = P("pe", None)
-    sg_specs = HaloShardedGraph(
-        src=sh, dst_code=sh, head_gid=sh, ew=sh, nw=sh, my_gid=sh, owned=sh,
-        n_real=sg.n_real, P=sg.P, n_local=sg.n_local, m_local=sg.m_local,
-        h_local=sg.h_local,
-    )
-    return jax.jit(shard_map(
-        per_pe, mesh=mesh,
-        in_specs=(sg_specs, sh, P(), P(), P()),
-        out_specs=sh,
     ))

@@ -34,6 +34,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -3.0e38  # sentinel "-inf" that survives fp32 arithmetic
+LANE = 128     # TPU lane width: K is padded to a multiple of this
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
 
 
 def _gain_kernel(

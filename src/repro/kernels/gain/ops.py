@@ -4,6 +4,12 @@ On TPU this lowers to the Pallas kernel; on CPU (this container) the kernel
 body executes in interpret mode — same code path, Python-evaluated — so the
 BlockSpec tiling is validated for correctness here and for performance via
 the dry-run's lowered HLO.
+
+This is the *standalone* wrapper (whole-graph padded adjacency, labels
+gathered here) used by the kernel tests and benchmarks; the production hot
+path feeds the kernel through ``repro.refine.gain.PallasGain``, which
+builds a per-level edge-slot adjacency once and reuses it every round
+under any comm backend.
 """
 
 from __future__ import annotations
@@ -14,13 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import PAD, Graph, to_padded_fast
-from repro.kernels.gain.kernel import gain_scoreboard_pallas
+from repro.kernels.gain.kernel import LANE, gain_scoreboard_pallas, round_up
 
-LANE = 128
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+_round_up = round_up  # single definition lives with the kernel
 
 
 def pad_for_kernel(g: Graph, max_deg: int, tile_n: int = 256, deg_chunk: int = 16):

@@ -1,0 +1,26 @@
+"""Unified refinement engine: one Jet core over pluggable gain and comm
+backends (see DESIGN.md §2/§5 for the backend matrix)."""
+
+from repro.refine.comm import (  # noqa: F401
+    AllGatherComm,
+    EdgeView,
+    HaloComm,
+    SingleComm,
+    edge_view_from_graph,
+)
+from repro.refine.drivers import (  # noqa: F401
+    make_lp_level_sharded,
+    make_refine_level_halo,
+    make_refine_level_sharded,
+    refine_single,
+    reset_counters,
+)
+from repro.refine.gain import (  # noqa: F401
+    PALLAS_MAX_DEG,
+    PALLAS_MAX_K,
+    JnpGain,
+    PallasGain,
+    make_gain,
+    masked_best,
+    resolve_gain,
+)

@@ -1,0 +1,224 @@
+"""Comm backends of the unified refinement engine (DESIGN.md §2).
+
+Every phase of refinement — Jet move generation, the afterburner, the
+probabilistic and greedy rebalancers, LP — needs exactly four communication
+primitives, regardless of how the graph is laid out:
+
+  * ``exchange``  — publish a per-owned-vertex field so edge heads can read
+    it (the paper's ghost update; labels, gains, targets, ∈M flags);
+  * ``lookup``    — read the exchanged field at every edge head;
+  * ``psum``      — all-reduce a replicated reduction (block weights, bucket
+    matrix, candidate inflow, cut/overload scalars);
+  * ``gather``    — concatenate a small per-PE vector on every PE (the
+    greedy rebalancer's candidate records).
+
+plus two layout-aware helpers: ``uniform`` (per-vertex randomness drawn in
+*global* vertex space so decisions are P-invariant) and ``apply_moves``
+(scatter the greedy rebalancer's replayed global move list back onto owned
+slots).  Three backends implement the protocol:
+
+  * :class:`SingleComm`    — single device; every primitive is the identity.
+  * :class:`AllGatherComm` — the baseline BSP protocol: ``exchange`` is one
+    ``all_gather`` of the full owned slice in gathered layout
+    (``dgraph.ShardedGraph``).
+  * :class:`HaloComm`      — interface-only exchange: ``exchange`` gathers
+    ``x[:h_local]`` (``halo.HaloShardedGraph``); heads carry halo codes.
+
+The engine arithmetic (``engine.py``) is written once against this protocol;
+a gain backend × comm backend × P choice never changes the move sequence
+(the determinism contract, tested in tests/test_refine_matrix.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PAD
+
+
+class EdgeView(NamedTuple):
+    """Per-PE static view of one refinement level.
+
+    ``head`` is the per-edge head id in the *backend coordinate system*
+    (local vertex id / gathered-layout id / halo code); ``head_tid`` and
+    ``my_tid`` are tie-break ids, order-isomorphic to global vertex ids in
+    every backend, so deterministic tie-breaks agree across backends.
+    """
+
+    src: jax.Array       # (m,) local row id of the tail
+    head: jax.Array      # (m,) head id in backend coordinates
+    live: jax.Array      # (m,) bool — non-padding edge slots
+    ew: jax.Array        # (m,) edge weights (0 on padding)
+    head_tid: jax.Array  # (m,) tie-break id of the head
+    my_tid: jax.Array    # (n_local,) tie-break id of each owned slot
+    nw: jax.Array        # (n_local,) vertex weights (0 on padding)
+    owned: jax.Array     # (n_local,) bool — real owned vertices
+
+    @property
+    def n_local(self) -> int:
+        return self.nw.shape[0]
+
+
+def global_uniform_full(key, n_real: int, tail: int):
+    """The (n_real,) global-vertex-space uniform draw plus a zero tail for
+    padding slots.  The draw shape must be exactly (n_real,) — threefry is
+    not prefix-stable across shapes — so every consumer (the comm backends
+    here, ``dcoarsen``'s clustering, the host path's ``uniform(key, (n,))``)
+    sees the same per-vertex stream.  This is the ONLY copy of the recipe;
+    ``distributed.djet`` re-exports it."""
+    return jnp.concatenate(
+        [jax.random.uniform(key, (n_real,)), jnp.zeros((tail,), jnp.float32)]
+    )
+
+
+def global_uniform_slice(key, gstart, *, n_local: int, n_real: int):
+    """Owned-range slice of the global draw; the zero tail covers the last
+    PE's padding slots (never accepted: masked by ``owned``)."""
+    u = global_uniform_full(key, n_real, n_local)
+    return jax.lax.dynamic_slice(u, (gstart,), (n_local,))
+
+
+class SingleComm:
+    """Single-device backend: the no-op rendering of the protocol."""
+
+    kind = "single"
+
+    def __init__(self, n_real: int):
+        self.n_real = n_real
+
+    def exchange(self, x):
+        return x
+
+    def lookup(self, ev: EdgeView, view, x_loc):
+        return view[jnp.where(ev.live, ev.head, 0)]
+
+    def psum(self, x):
+        return x
+
+    def gather(self, x):
+        return x
+
+    def uniform(self, key, ev: EdgeView):
+        return jax.random.uniform(key, (self.n_real,))
+
+    def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
+        idx = jnp.where(moved, tids, labels.shape[0])
+        return labels.at[idx].set(tgts, mode="drop")
+
+
+class AllGatherComm:
+    """Baseline BSP backend: full-slice ``all_gather`` over mesh axis "pe".
+
+    Must run inside a ``shard_map`` body.  ``gstart`` is the global id of
+    this PE's first owned vertex (for the global-space uniform slice).
+    """
+
+    kind = "allgather"
+
+    def __init__(self, gstart, n_local: int, n_real: int):
+        self.gstart = gstart
+        self.n_local = n_local
+        self.n_real = n_real
+
+    def exchange(self, x):
+        return jax.lax.all_gather(x, "pe", tiled=True)
+
+    def lookup(self, ev: EdgeView, view, x_loc):
+        return view[jnp.where(ev.live, ev.head, 0)]
+
+    def psum(self, x):
+        return jax.lax.psum(x, "pe")
+
+    def gather(self, x):
+        return jax.lax.all_gather(x, "pe", tiled=True)
+
+    def uniform(self, key, ev: EdgeView):
+        # identical per-vertex stream at every P and on the single path
+        return global_uniform_slice(key, self.gstart, n_local=self.n_local,
+                                    n_real=self.n_real)
+
+    def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
+        # tids are gathered-layout ids: owner·n_local + slot
+        pe = jax.lax.axis_index("pe")
+        slot = tids - pe * self.n_local
+        ok = moved & (slot >= 0) & (slot < self.n_local)
+        idx = jnp.where(ok, slot, self.n_local)
+        return labels.at[idx].set(tgts, mode="drop")
+
+
+class HaloComm:
+    """Interface-only backend: ``exchange`` gathers only ``x[:h_local]``.
+
+    Heads are halo codes (< P·h_local → remote interface slot, else local
+    slot + P·h_local); tie-break ids are explicit global ids.  ``uniform``
+    defaults to the same global-vertex-space stream as the other backends
+    (the determinism contract); ``mode="fold"`` keeps the O(n_local)
+    fold-in-per-gid stream for scale runs where materialising (n_real,)
+    per PE is the cost the halo variant exists to avoid.
+    """
+
+    kind = "halo"
+
+    def __init__(self, P: int, h_local: int, n_local: int, n_real: int,
+                 uniform_mode: str = "global"):
+        assert uniform_mode in ("global", "fold"), uniform_mode
+        self.P = P
+        self.h_local = h_local
+        self.n_local = n_local
+        self.n_real = n_real
+        self.H = P * h_local
+        self.uniform_mode = uniform_mode
+
+    def exchange(self, x):
+        return jax.lax.all_gather(x[: self.h_local], "pe", tiled=True)
+
+    def lookup(self, ev: EdgeView, view, x_loc):
+        code = ev.head
+        remote = code < self.H
+        r = view[jnp.where(remote, code, 0)]
+        l = x_loc[jnp.where(remote, 0, code - self.H)]
+        return jnp.where(remote, r, l)
+
+    def psum(self, x):
+        return jax.lax.psum(x, "pe")
+
+    def gather(self, x):
+        return jax.lax.all_gather(x, "pe", tiled=True)
+
+    def uniform(self, key, ev: EdgeView):
+        gid = jnp.where(ev.owned, ev.my_tid, 0)
+        if self.uniform_mode == "fold":
+            return jax.vmap(
+                lambda v: jax.random.uniform(jax.random.fold_in(key, v))
+            )(gid)
+        return jax.random.uniform(key, (self.n_real,))[gid]
+
+    def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
+        # owned slots are permuted interface-first → no arithmetic slot map;
+        # match the (small) global move list against my_tid instead
+        hit = (ev.my_tid[:, None] == tids[None, :]) & moved[None, :]
+        sel = jnp.any(hit, axis=1)
+        tgt = jnp.sum(jnp.where(hit, tgts[None, :], 0), axis=1)
+        return jnp.where(sel, tgt, labels)
+
+
+def halo_edge_view(src, dst_code, head_gid, ew, nw, my_gid, owned) -> EdgeView:
+    """EdgeView of one PE of a halo-sharded level — the single home of the
+    halo coordinate convention (head = halo code, live = head_gid != PAD,
+    tie-break ids = explicit global ids)."""
+    return EdgeView(src=src, head=dst_code, live=head_gid != PAD, ew=ew,
+                    head_tid=head_gid, my_tid=my_gid, nw=nw, owned=owned)
+
+
+def edge_view_from_graph(g) -> EdgeView:
+    """Single-device EdgeView of a :class:`repro.core.graph.Graph`."""
+    live = g.col != PAD
+    n = g.n
+    ids = jnp.arange(n, dtype=jnp.int32)
+    return EdgeView(
+        src=g.src, head=g.col, live=live, ew=g.ew, head_tid=g.col,
+        my_tid=ids, nw=g.nw, owned=jnp.ones((n,), bool),
+    )

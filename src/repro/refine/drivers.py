@@ -1,0 +1,247 @@
+"""Compiled entry points of the unified refinement engine.
+
+One refinement *level* — all temperature rounds, all inner (Jet →
+rebalance → patience) iterations, all greedy/probabilistic rebalance
+epochs — executes as a SINGLE compiled program per backend combination:
+
+  * :func:`refine_single`            — single device, no mesh;
+  * :func:`make_refine_level_sharded` — baseline BSP protocol under
+    ``shard_map`` (``dgraph.ShardedGraph`` layout);
+  * :func:`make_refine_level_halo`    — interface-only halo protocol
+    (``halo.HaloShardedGraph`` layout);
+  * :func:`make_lp_level_sharded`     — the fused dLP baseline level.
+
+The module keeps two counters for the no-per-round-dispatch contract:
+``DISPATCH_COUNT`` increments once per level-refinement *call* and
+``TRACE_COUNT`` once per *trace* — a V-cycle over L levels must show
+exactly L dispatches (asserted in tests and reported by the scaling
+benchmark), where the pre-refactor drivers issued O(rounds · inner)
+dispatches per level.
+
+Factories are memoised on their static configuration, so repeated V-cycles
+over same-shaped levels reuse compiled programs.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import PAD
+from repro.refine import engine
+from repro.refine.comm import (
+    AllGatherComm,
+    EdgeView,
+    HaloComm,
+    SingleComm,
+    edge_view_from_graph,
+    halo_edge_view,
+)
+from repro.refine.gain import make_gain, resolve_gain
+from repro.sharding.compat import shard_map
+
+DISPATCH_COUNT = 0   # level-refinement calls (python → device dispatches)
+TRACE_COUNT = 0      # traces of level programs (≤ DISPATCH_COUNT)
+DISPATCHES: dict[str, int] = {}   # per comm-backend kind
+TRACES: dict[str, int] = {}
+
+
+def reset_counters() -> None:
+    global DISPATCH_COUNT, TRACE_COUNT
+    DISPATCH_COUNT = 0
+    TRACE_COUNT = 0
+    DISPATCHES.clear()
+    TRACES.clear()
+
+
+def _count_dispatch(kind: str) -> None:
+    global DISPATCH_COUNT
+    DISPATCH_COUNT += 1
+    DISPATCHES[kind] = DISPATCHES.get(kind, 0) + 1
+
+
+def _count_trace(kind: str) -> None:
+    global TRACE_COUNT
+    TRACE_COUNT += 1
+    TRACES[kind] = TRACES.get(kind, 0) + 1
+
+
+# --------------------------------------------------------------------------
+# max-degree probes (static setup scalars that size the padded adjacency)
+# --------------------------------------------------------------------------
+
+def graph_max_deg(g) -> int:
+    return max(int(np.asarray(g.degrees).max(initial=0)), 1)
+
+
+@partial(jax.jit, static_argnames=("n_local",))
+def _sharded_degrees(src, dst, n_local: int):
+    live = (dst != PAD).astype(jnp.float32)
+    deg = jax.vmap(
+        lambda s, l: jax.ops.segment_sum(l, s, num_segments=n_local)
+    )(src, live)
+    return jnp.max(deg)
+
+
+def sharded_max_deg(src, dst, n_local: int) -> int:
+    """True max degree of a sharded level — one scalar crosses to the host
+    at setup time (it picks the static padded-adjacency width)."""
+    return max(int(_sharded_degrees(src, dst, n_local)), 1)
+
+
+def _need_max_deg(gain: str) -> bool:
+    return gain in ("pallas", "auto")
+
+
+# --------------------------------------------------------------------------
+# single device
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=(
+    "k", "patience", "max_inner", "gain_kind", "max_deg", "interpret"))
+def _refine_single_jit(g, labels, key, lmax, taus, *, k, patience, max_inner,
+                       gain_kind, max_deg, interpret):
+    _count_trace("single")
+    ev = edge_view_from_graph(g)
+    cm = SingleComm(g.n)
+    gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+    return engine.refine_level(cm, gb, ev, labels, key, lmax, taus, k,
+                               patience, max_inner)
+
+
+def refine_single(g, labels, k, key, lmax, taus, *, patience=12, max_inner=64,
+                  gain="jnp", interpret=None):
+    """Fused single-device level refinement (one dispatch)."""
+    max_deg = graph_max_deg(g) if _need_max_deg(gain) else None
+    gain_kind = resolve_gain(gain, k, max_deg)
+    _count_dispatch("single")
+    return _refine_single_jit(
+        g, labels, key, lmax, jnp.asarray(taus, jnp.float32),
+        k=k, patience=patience, max_inner=max_inner, gain_kind=gain_kind,
+        max_deg=max_deg if gain_kind == "pallas" else None,
+        interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# block-sharded (baseline all-gather BSP) levels
+# --------------------------------------------------------------------------
+
+def _sharded_edge_view(src, dst, ew, nw, owned, n_local: int) -> EdgeView:
+    pe = jax.lax.axis_index("pe")
+    my_tid = pe * n_local + jnp.arange(n_local, dtype=jnp.int32)
+    return EdgeView(src=src, head=dst, live=dst != PAD, ew=ew, head_tid=dst,
+                    my_tid=my_tid, nw=nw, owned=owned)
+
+
+@lru_cache(maxsize=128)
+def _sharded_level_fn(mesh, k, n_local, n_real, patience, max_inner,
+                      gain_kind, max_deg, interpret, mode):
+    def per_pe(src, dst, ew, nw, owned, gstart, labels, key, lmax, taus):
+        _count_trace("lp" if mode == "lp" else "sharded")
+        ev = _sharded_edge_view(src[0], dst[0], ew[0], nw[0], owned[0],
+                                n_local)
+        cm = AllGatherComm(gstart[0], n_local, n_real)
+        gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+        if mode == "lp":
+            out = engine.lp_level(cm, gb, ev, labels[0], key, lmax, k)
+        else:
+            out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus,
+                                      k, patience, max_inner)
+        return out[None]
+
+    sh = P("pe", None)
+    return jax.jit(shard_map(
+        per_pe, mesh=mesh,
+        in_specs=(sh, sh, sh, sh, sh, P("pe"), sh, P(), P(), P()),
+        out_specs=sh,
+    ))
+
+
+def make_refine_level_sharded(mesh, sg, k, *, rounds_taus, patience=12,
+                              max_inner=64, gain="jnp", interpret=None,
+                              mode="jet"):
+    """Fused level refinement over a :class:`ShardedGraph`.
+
+    Returns ``run(lab_sh, key, lmax) -> lab_sh`` — one dispatch per call.
+    ``rounds_taus`` is the temperature vector (ignored by ``mode="lp"``).
+    """
+    from repro.distributed.dgraph import owned_mask
+
+    max_deg = (sharded_max_deg(sg.src, sg.dst, sg.n_local)
+               if _need_max_deg(gain) else None)
+    gain_kind = resolve_gain(gain, k, max_deg)
+    fn = _sharded_level_fn(
+        mesh, k, sg.n_local, sg.n_real, patience, max_inner, gain_kind,
+        max_deg if gain_kind == "pallas" else None, interpret, mode)
+    owned = owned_mask(sg)
+    taus = jnp.asarray(rounds_taus, jnp.float32)
+
+    def run(lab_sh, key, lmax):
+        _count_dispatch("lp" if mode == "lp" else "sharded")
+        return fn(sg.src, sg.dst, sg.ew, sg.nw, owned, sg.vtx_start, lab_sh,
+                  key, jnp.float32(lmax), taus)
+
+    return run
+
+
+def make_lp_level_sharded(mesh, sg, k, *, gain="jnp", interpret=None):
+    return make_refine_level_sharded(
+        mesh, sg, k, rounds_taus=[0.0], gain=gain, interpret=interpret,
+        mode="lp")
+
+
+# --------------------------------------------------------------------------
+# halo (interface-only) levels
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=128)
+def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
+                   max_inner, gain_kind, max_deg, interpret, uniform_mode):
+    def per_pe(src, dst_code, head_gid, ew, nw, my_gid, owned, labels, key,
+               lmax, taus):
+        _count_trace("halo")
+        ev = halo_edge_view(src[0], dst_code[0], head_gid[0], ew[0], nw[0],
+                            my_gid[0], owned[0])
+        cm = HaloComm(n_pe, h_local, n_local, n_real,
+                      uniform_mode=uniform_mode)
+        gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+        out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus, k,
+                                  patience, max_inner)
+        return out[None]
+
+    sh = P("pe", None)
+    return jax.jit(shard_map(
+        per_pe, mesh=mesh,
+        in_specs=(sh, sh, sh, sh, sh, sh, sh, sh, P(), P(), P()),
+        out_specs=sh,
+    ))
+
+
+def make_refine_level_halo(mesh, hsg, k, *, rounds_taus, patience=12,
+                           max_inner=64, gain="jnp", interpret=None,
+                           uniform_mode="global"):
+    """Fused level refinement over a :class:`HaloShardedGraph`.
+
+    ``uniform_mode="global"`` (default) draws rebalance randomness in the
+    shared global-vertex-space stream — the determinism-contract setting;
+    ``"fold"`` keeps the O(n_local) per-gid fold-in stream for scale runs.
+    """
+    max_deg = (sharded_max_deg(hsg.src, hsg.head_gid, hsg.n_local)
+               if _need_max_deg(gain) else None)
+    gain_kind = resolve_gain(gain, k, max_deg)
+    fn = _halo_level_fn(
+        mesh, k, hsg.n_local, hsg.n_real, hsg.P, hsg.h_local, patience,
+        max_inner, gain_kind, max_deg if gain_kind == "pallas" else None,
+        interpret, uniform_mode)
+    taus = jnp.asarray(rounds_taus, jnp.float32)
+
+    def run(lab_sh, key, lmax):
+        _count_dispatch("halo")
+        return fn(hsg.src, hsg.dst_code, hsg.head_gid, hsg.ew, hsg.nw,
+                  hsg.my_gid, hsg.owned, lab_sh, key, jnp.float32(lmax), taus)
+
+    return run

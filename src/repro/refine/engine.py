@@ -1,0 +1,339 @@
+"""The unified Jet refinement engine (paper §2), written once over a comm
+backend (``comm.py``) and a gain backend (``gain.py``).
+
+This module holds the *only* copy of the arithmetic that used to live three
+times in the repo (``core/jet.py`` + ``core/rebalance.py`` single-device,
+``distributed/djet.py`` BSP, ``distributed/halo.py`` interface-only):
+
+  * :func:`jet_move`        — candidate set M + afterburner + apply/lock;
+  * :func:`prob_pass`       — Alg. 1 probabilistic bucket rebalancing;
+  * :func:`greedy_epoch`    — the dKaMinPar greedy rebalancer (two-stage
+    top-k candidate gather + redundantly replayed global move sequence);
+  * :func:`rebalance_loop`  — greedy epochs with the paper's <10 % progress
+    escalation to the probabilistic pass;
+  * :func:`jet_inner`       — (Jet → rebalance) until `patience`
+    non-improvements of the best balanced partition;
+  * :func:`refine_level`    — the whole d4xJet level: all temperature
+    rounds fused into one ``lax.fori_loop`` so a level is ONE compiled
+    device-resident program (see ``drivers.py``);
+  * :func:`lp_round`        — the dLP baseline round.
+
+Rebalance constants (paper Alg. 1) live here and nowhere else;
+``core.rebalance`` re-exports them for backwards compatibility.
+
+Determinism: every reduction is a fp32 sum of integers (exact), every
+argmax/top-k tie-break is index-order on ids that are order-isomorphic to
+global vertex ids in all backends, and all randomness is drawn in global
+vertex space — so any gain × comm × P combination replays the same move
+sequence from one seed (tests/test_refine_matrix.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.refine.comm import EdgeView
+
+NEG = -jnp.inf
+
+# ---- paper Alg. 1 rebalance constants (single source of truth) ------------
+ALPHA = 1.1          # paper §2: "we use α = 1.1"
+N_BUCKETS = 96       # static bucket count; r_v ≈ −1e4 lands in bucket ~97 → clip
+GREEDY_NCAND = 128   # "a few vertices per overloaded block in every epoch"
+
+
+def _relative_gain(gain: jax.Array, cv: jax.Array) -> jax.Array:
+    """r_v = g_v·c(v) if g_v > 0 else g_v/c(v)  (paper Alg. 1 line 4)."""
+    cv = jnp.maximum(cv, 1e-9)
+    return jnp.where(gain > 0, gain * cv, gain / cv)
+
+
+def _bucket_index(r: jax.Array) -> jax.Array:
+    """Exponentially spaced bucket index (paper Alg. 1 line 5)."""
+    neg = 1.0 + jnp.ceil(jnp.log1p(jnp.maximum(-r, 0.0)) / jnp.log(ALPHA))
+    j = jnp.where(r >= 0, 0.0, neg)
+    return jnp.clip(j, 0, N_BUCKETS - 1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# shared per-round helpers
+# --------------------------------------------------------------------------
+
+def _head_labels(cm, ev: EdgeView, labels):
+    """Per-edge labels of heads — the ghost/halo label update + lookup."""
+    return cm.lookup(ev, cm.exchange(labels), labels)
+
+
+def block_weights(cm, ev: EdgeView, labels, k: int):
+    return cm.psum(jax.ops.segment_sum(ev.nw, labels, num_segments=k))
+
+
+def overload_of(cm, ev: EdgeView, labels, k: int, lmax):
+    bw = block_weights(cm, ev, labels, k)
+    return jnp.sum(jnp.maximum(bw - lmax, 0.0))
+
+
+def cut_of(cm, ev: EdgeView, labels):
+    lv = _head_labels(cm, ev, labels)
+    w = jnp.where(ev.live & (labels[ev.src] != lv), ev.ew, 0.0)
+    return cm.psum(jnp.sum(w)) * 0.5
+
+
+# --------------------------------------------------------------------------
+# Jet round: candidate set + afterburner (paper §2 "Jet Refinement")
+# --------------------------------------------------------------------------
+
+def jet_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
+    """One Jet round; returns (new_labels, moved mask)."""
+    lv_e = _head_labels(cm, ev, labels)
+    own, gain, target = gb.best(ev, lv_e, labels, None)
+
+    # candidate set M: negative gains admitted up to −⌊τ·conn_own⌋
+    threshold = -jnp.floor(tau * own)
+    cand = (gain >= threshold) & (~locked) & (target != labels)
+    cand &= jnp.isfinite(gain) & ev.owned
+
+    # afterburner: exchange (g(v), target, ∈M); u precedes v iff
+    # (g(u), −u) > (g(v), −v) in the virtual order
+    gmask = jnp.where(cand, gain, NEG)
+    gu = cm.lookup(ev, cm.exchange(gmask), gmask)
+    tu = cm.lookup(ev, cm.exchange(target), target)
+    cu = cm.lookup(ev, cm.exchange(cand), cand)
+
+    gv = gain[ev.src]
+    precede = cu & ((gu > gv) | ((gu == gv) & (ev.head_tid < ev.my_tid[ev.src])))
+    assumed = jnp.where(precede, tu, lv_e)
+
+    w = jnp.where(ev.live, ev.ew, 0.0)
+    tv = target[ev.src]
+    lown = labels[ev.src]
+    delta_e = w * ((assumed == tv).astype(w.dtype)
+                   - (assumed == lown).astype(w.dtype))
+    delta = jax.ops.segment_sum(delta_e, ev.src, num_segments=ev.n_local)
+
+    move = cand & (delta >= 0.0)
+    return jnp.where(move, target, labels), move
+
+
+# --------------------------------------------------------------------------
+# Alg. 1 — probabilistic bucket rebalancing
+# --------------------------------------------------------------------------
+
+def prob_pass(cm, gb, ev: EdgeView, labels, key, lmax, k: int):
+    bw = block_weights(cm, ev, labels, k)
+    overloaded = bw > lmax
+    capacity = jnp.where(~overloaded, lmax - bw, NEG)
+
+    lv_e = _head_labels(cm, ev, labels)
+    _, gain, target = gb.best(ev, lv_e, labels, capacity)
+
+    mover = overloaded[labels] & jnp.isfinite(gain) & ev.owned & (ev.nw > 0)
+    bucket = _bucket_index(_relative_gain(gain, ev.nw))
+
+    # per-(overloaded block, bucket) weights c(B_o^i) — Alg. 1 line 8
+    B = cm.psum(jax.ops.segment_sum(
+        jnp.where(mover, ev.nw, 0.0), labels * N_BUCKETS + bucket,
+        num_segments=k * N_BUCKETS,
+    )).reshape(k, N_BUCKETS)
+
+    prefix = jnp.cumsum(B, axis=1)
+    excess = jnp.maximum(bw - lmax, 0.0)
+    covered = prefix >= excess[:, None]
+    cutoff = jnp.where(jnp.any(covered, axis=1),
+                       jnp.argmax(covered, axis=1) + 1, N_BUCKETS)
+    cutoff = jnp.where(excess > 0, cutoff, 0)
+
+    move_cand = mover & (bucket < cutoff[labels])
+    W = cm.psum(jax.ops.segment_sum(
+        jnp.where(move_cand, ev.nw, 0.0), target, num_segments=k))
+    room = jnp.maximum(lmax - bw, 0.0)
+    p = jnp.where(W > 0, jnp.minimum(room / jnp.maximum(W, 1e-9), 1.0), 0.0)
+
+    accept = move_cand & (cm.uniform(key, ev) < p[target])
+    return jnp.where(accept, target, labels)
+
+
+# --------------------------------------------------------------------------
+# Greedy rebalancer (dKaMinPar Ref. [9]) — two-stage top-k + replay
+# --------------------------------------------------------------------------
+
+def greedy_epoch(cm, gb, ev: EdgeView, labels, lmax, k: int,
+                 ncand: int = GREEDY_NCAND):
+    """One centrally coordinated epoch.
+
+    Stage 1: each PE top-k's its own candidates by r_v (the global top-ncand
+    is contained in the union of per-PE top-ncands).  Stage 2: one small
+    ``gather`` of the per-PE candidate records, then every PE redundantly
+    replays the same deterministic global move sequence with live weight
+    accounting — O(P·ncand) wire bytes instead of the full label gather.
+    """
+    bw = block_weights(cm, ev, labels, k)
+    overloaded = bw > lmax
+    capacity = jnp.where(~overloaded, lmax - bw, NEG)
+
+    lv_e = _head_labels(cm, ev, labels)
+    _, gain, target = gb.best(ev, lv_e, labels, capacity)
+
+    mover = overloaded[labels] & jnp.isfinite(gain) & ev.owned
+    score = jnp.where(mover, _relative_gain(gain, ev.nw), NEG)
+
+    # selection order is (score desc, tie-break id asc) — EXPLICITLY, not by
+    # slot position: halo slots are permuted interface-first, so positional
+    # top_k stability would break the cross-backend determinism contract
+    nc_loc = min(ncand, ev.n_local)
+    idx = jnp.lexsort((ev.my_tid, -score))[:nc_loc]
+
+    rec_s = cm.gather(score[idx])
+    rec_tid = cm.gather(ev.my_tid[idx])
+    rec_tgt = cm.gather(target[idx])
+    rec_w = cm.gather(ev.nw[idx])
+    rec_lab = cm.gather(labels[idx])
+
+    n_rec = min(ncand, rec_s.shape[0])
+    ord2 = jnp.lexsort((rec_tid, -rec_s))[:n_rec]
+    s2 = rec_s[ord2]
+    tid2, tgt2 = rec_tid[ord2], rec_tgt[ord2]
+    w2, lab2 = rec_w[ord2], rec_lab[ord2]
+
+    def body(i, carry):
+        moved, bw = carry
+        ok = (
+            jnp.isfinite(s2[i])
+            & (bw[lab2[i]] > lmax)
+            & (bw[tgt2[i]] + w2[i] <= lmax)
+            & (tgt2[i] != lab2[i])
+        )
+        moved = moved.at[i].set(ok)
+        dw = jnp.where(ok, w2[i], 0.0)
+        bw = bw.at[lab2[i]].add(-dw).at[tgt2[i]].add(dw)
+        return moved, bw
+
+    moved, _ = jax.lax.fori_loop(
+        0, n_rec, body, (jnp.zeros((n_rec,), bool), bw))
+    return cm.apply_moves(ev, labels, tid2, tgt2, moved)
+
+
+# --------------------------------------------------------------------------
+# Rebalance driver: greedy epochs + <10 % progress escalation (paper §2)
+# --------------------------------------------------------------------------
+
+def rebalance_loop(cm, gb, ev: EdgeView, labels, key, lmax, k: int,
+                   max_epochs: int = 32, ncand: int = GREEDY_NCAND):
+    """Returns (labels, overload, epochs, prob_passes)."""
+
+    def cond(state):
+        _, _, ov, ep, _ = state
+        return (ov > 0) & (ep < max_epochs)
+
+    def body(state):
+        labels, key, ov, ep, pp = state
+        labels = greedy_epoch(cm, gb, ev, labels, lmax, k, ncand)
+        new_ov = overload_of(cm, ev, labels, k, lmax)
+        slow = new_ov > 0.9 * ov  # <10 % progress → escalate to Alg. 1
+        key, sub = jax.random.split(key)
+        labels = jax.lax.cond(
+            slow,
+            lambda l: prob_pass(cm, gb, ev, l, sub, lmax, k),
+            lambda l: l,
+            labels,
+        )
+        new_ov = jax.lax.cond(
+            slow, lambda l: overload_of(cm, ev, l, k, lmax),
+            lambda _: new_ov, labels)
+        return labels, key, new_ov, ep + 1, pp + slow.astype(jnp.int32)
+
+    ov0 = overload_of(cm, ev, labels, k, lmax)
+    labels, _, ov, ep, pp = jax.lax.while_loop(
+        cond, body, (labels, key, ov0, jnp.int32(0), jnp.int32(0)))
+    return labels, ov, ep, pp
+
+
+# --------------------------------------------------------------------------
+# d4xJet integration: inner (Jet → rebalance) loop + fused temperature loop
+# --------------------------------------------------------------------------
+
+def jet_inner(cm, gb, ev: EdgeView, labels, tau, lmax, key, k: int,
+              patience: int, max_inner: int):
+    """One temperature round: repeat (jet_move → rebalance_loop) until
+    `patience` consecutive failures to improve the best balanced cut."""
+
+    def cond(s):
+        _, _, _, _, since, it, _ = s
+        return (since < patience) & (it < max_inner)
+
+    def body(s):
+        labels, locked, best_labels, best_cut, since, it, key = s
+        key, k_reb = jax.random.split(key)
+        labels, moved = jet_move(cm, gb, ev, labels, locked, tau, k)
+        labels, ov, _, _ = rebalance_loop(cm, gb, ev, labels, k_reb, lmax, k)
+        cut = cut_of(cm, ev, labels)
+        improved = (ov <= 0) & (cut < best_cut)
+        best_labels = jnp.where(improved, labels, best_labels)
+        best_cut = jnp.where(improved, cut, best_cut)
+        since = jnp.where(improved, 0, since + 1)
+        return labels, moved, best_labels, best_cut, since, it + 1, key
+
+    cut0 = cut_of(cm, ev, labels)
+    ov0 = overload_of(cm, ev, labels, k, lmax)
+    best_cut0 = jnp.where(ov0 <= 0, cut0, jnp.inf)
+    init = (labels, jnp.zeros(ev.n_local, bool), labels, best_cut0,
+            jnp.int32(0), jnp.int32(0), key)
+    labels, _, best_labels, best_cut, _, _, _ = jax.lax.while_loop(
+        cond, body, init)
+    # if no balanced state was ever seen, fall back to the last labels
+    return jnp.where(jnp.isfinite(best_cut), best_labels, labels)
+
+
+def refine_level(cm, gb, ev: EdgeView, labels, key, lmax, taus, k: int,
+                 patience: int, max_inner: int):
+    """Whole-level d4xJet: the temperature rounds are a ``fori_loop`` over
+    the (traced) ``taus`` vector, so the level is one compiled program —
+    O(1) dispatches instead of O(rounds · inner · epochs)."""
+
+    def round_body(i, carry):
+        labels, key = carry
+        key, sub = jax.random.split(key)
+        labels = jet_inner(cm, gb, ev, labels, taus[i], lmax, sub, k,
+                           patience, max_inner)
+        return labels, key
+
+    labels, _ = jax.lax.fori_loop(0, taus.shape[0], round_body, (labels, key))
+    return labels
+
+
+# --------------------------------------------------------------------------
+# dLP baseline round (size-constrained label propagation)
+# --------------------------------------------------------------------------
+
+def lp_round(cm, gb, ev: EdgeView, labels, key, lmax, k: int):
+    bw = block_weights(cm, ev, labels, k)
+    capacity = lmax - bw
+    lv_e = _head_labels(cm, ev, labels)
+    _, gain, target = gb.best(ev, lv_e, labels, capacity)
+    want = (gain > 0) & jnp.isfinite(gain) & ev.owned
+
+    w_in = cm.psum(jax.ops.segment_sum(
+        jnp.where(want, ev.nw, 0.0), target, num_segments=k))
+    p = jnp.where(w_in > 0,
+                  jnp.clip(capacity / jnp.maximum(w_in, 1e-9), 0.0, 1.0), 1.0)
+    accept = want & (cm.uniform(key, ev) < p[target])
+    return jnp.where(accept, target, labels)
+
+
+def lp_level(cm, gb, ev: EdgeView, labels, key, lmax, k: int,
+             lp_rounds: int = 8, max_epochs: int = 32):
+    """Fused dLP level: ``lp_rounds`` LP rounds + the rebalance finisher,
+    one compiled program."""
+
+    def body(i, carry):
+        labels, key = carry
+        key, sub = jax.random.split(key)
+        labels = lp_round(cm, gb, ev, labels, sub, lmax, k)
+        return labels, key
+
+    labels, key = jax.lax.fori_loop(0, lp_rounds, body, (labels, key))
+    key, sub = jax.random.split(key)
+    labels, _, _, _ = rebalance_loop(cm, gb, ev, labels, sub, lmax, k,
+                                     max_epochs)
+    return labels

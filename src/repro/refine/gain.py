@@ -1,0 +1,175 @@
+"""Gain backends of the unified refinement engine (DESIGN.md §5).
+
+A gain backend answers one question per round, for every owned vertex v:
+
+    own(v)    = conn(v, V_own)
+    gain(v)   = max_{j eligible} conn(v, V_j) − own(v)
+    target(v) = argmax_{j eligible} conn(v, V_j)
+
+with eligibility j ≠ own(v) ∧ capacity[j] ≥ c(v) (``capacity=None`` means
+unconstrained Jet move generation).  Two implementations:
+
+  * :class:`JnpGain`    — the streaming ``segment_sum`` formulation (one
+    (n_local·k,) scatter-add per round); works at any degree / k.
+  * :class:`PallasGain` — the VMEM scoreboard kernel
+    (``kernels/gain/kernel.py``): a dense (TILE_N, K) tile accumulated
+    DEG_CHUNK neighbours at a time.  Needs the padded adjacency, built once
+    per level from the edge view, and is subject to the DESIGN.md §5 VMEM
+    envelope — :func:`resolve_gain` applies the max_deg/K fallback rule
+    automatically.
+
+Both backends compute bit-identical results on integer-weight graphs (fp32
+sums of integers < 2²⁴ are exact; argmax tie-breaks are index-order in
+both), which is what lets the determinism contract span the gain axis of
+the backend matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PAD
+from repro.kernels.gain.kernel import LANE, gain_scoreboard_pallas
+from repro.kernels.gain.kernel import round_up as _round_up
+
+PALLAS_MAX_DEG = 2048  # DESIGN.md §5: VMEM envelope of the scoreboard kernel
+PALLAS_MAX_K = 1024
+
+
+def resolve_gain(kind: str, k: int, max_deg: int | None) -> str:
+    """Apply the DESIGN.md §5 fallback rule: the Pallas scoreboard serves
+    max_deg ≤ 2048 and k ≤ 1024; anything larger streams through HBM via
+    the jnp segment-sum path.  ``kind="auto"`` means "pallas if it fits"."""
+    if kind == "auto":
+        kind = "pallas"
+    if kind not in ("jnp", "pallas"):
+        raise ValueError(f"gain backend must be 'jnp', 'pallas' or 'auto', got {kind!r}")
+    if kind == "pallas" and (
+        max_deg is None or max_deg > PALLAS_MAX_DEG or k > PALLAS_MAX_K
+    ):
+        return "jnp"
+    return kind
+
+
+def masked_best(conn, labels, nw, capacity, k: int):
+    """(own, gain, target) from a dense (n, k) connectivity matrix — the
+    shared move-selection rule (index-order argmax tie-break; gain = −inf
+    and target = own block when no block is eligible)."""
+    own = jnp.take_along_axis(conn, labels[:, None], axis=1)[:, 0]
+    blk = jnp.arange(k, dtype=jnp.int32)
+    eligible = blk[None, :] != labels[:, None]
+    if capacity is not None:
+        eligible &= capacity[None, :] >= nw[:, None]
+    masked = jnp.where(eligible, conn, -jnp.inf)
+    tgt = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    best = jnp.max(masked, axis=1)
+    gain = jnp.where(jnp.isfinite(best), best - own, -jnp.inf)
+    tgt = jnp.where(jnp.isfinite(best), tgt, labels)
+    return own, gain, tgt
+
+
+class JnpGain:
+    """Segment-sum gain backend — the HBM-streaming reference path."""
+
+    kind = "jnp"
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def best(self, ev, lv_e, labels, capacity):
+        n_loc = ev.n_local
+        w = jnp.where(ev.live, ev.ew, 0.0)
+        key = ev.src * self.k + jnp.where(ev.live, lv_e, 0)
+        conn = jax.ops.segment_sum(
+            w, key, num_segments=n_loc * self.k
+        ).reshape(n_loc, self.k)
+        return masked_best(conn, labels, ev.nw, capacity, self.k)
+
+
+class PallasGain:
+    """Scoreboard-kernel gain backend.
+
+    Construction (once per level, loop-invariant inside the fused level
+    program) builds the padded adjacency in *edge-slot* coordinates:
+    ``eslot[v, r]`` is the edge index of v's r-th neighbour (m = padding).
+    Per round the head labels are produced by the comm backend's per-edge
+    lookup and gathered through ``eslot`` — so one padded adjacency serves
+    every round and every comm backend.
+    """
+
+    kind = "pallas"
+
+    def __init__(self, ev, k: int, max_deg: int, tile_n: int = 256,
+                 deg_chunk: int = 16, interpret: bool | None = None):
+        self.k = k
+        self.tile_n = tile_n
+        self.deg_chunk = deg_chunk
+        self.interpret = (
+            jax.default_backend() != "tpu" if interpret is None else interpret
+        )
+        n_loc = ev.n_local
+        m = ev.src.shape[0]
+        d = _round_up(max(int(max_deg), 1), deg_chunk)
+        n_pad = _round_up(max(n_loc, 1), tile_n)
+
+        # rank of each live edge within its row (rows need not be contiguous
+        # in the slot array: recover CSR order with one stable sort)
+        skey = jnp.where(ev.live, ev.src, n_loc).astype(jnp.int32)
+        order = jnp.argsort(skey)
+        sk = skey[order]
+        starts = jnp.searchsorted(sk, jnp.arange(n_loc, dtype=jnp.int32),
+                                  side="left")
+        rank_sorted = (
+            jnp.arange(m, dtype=jnp.int32)
+            - starts[jnp.clip(sk, 0, max(n_loc - 1, 0))].astype(jnp.int32)
+        )
+        rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+
+        ok = ev.live & (rank < d)
+        rows = jnp.where(ok, ev.src, n_pad)     # pads routed out of bounds
+        cols = jnp.where(ok, rank, 0)
+        slots = jnp.arange(m, dtype=jnp.int32)
+        self.eslot = jnp.full((n_pad, d), m, jnp.int32).at[rows, cols].set(
+            jnp.where(ok, slots, m), mode="drop"
+        )
+        self.nbr_w = jnp.zeros((n_pad, d), jnp.float32).at[rows, cols].set(
+            jnp.where(ok, ev.ew, 0.0), mode="drop"
+        )
+        self.n_loc = n_loc
+        self.n_pad = n_pad
+
+    def best(self, ev, lv_e, labels, capacity):
+        k_pad = _round_up(self.k, LANE)
+        cap_k = (
+            jnp.full((self.k,), jnp.inf, jnp.float32)
+            if capacity is None else capacity
+        )
+        cap = jnp.full((k_pad,), -jnp.inf, jnp.float32).at[: self.k].set(cap_k)
+        lv_ext = jnp.concatenate(
+            [jnp.where(ev.live, lv_e, PAD).astype(jnp.int32),
+             jnp.full((1,), PAD, jnp.int32)]
+        )
+        nbr_lab = lv_ext[self.eslot]
+        pad = self.n_pad - self.n_loc
+        lab_p = jnp.pad(labels, (0, pad))
+        nw_p = jnp.pad(ev.nw, (0, pad))
+        own, gain, tgt = gain_scoreboard_pallas(
+            nbr_lab, self.nbr_w, lab_p, nw_p, cap,
+            tile_n=self.tile_n, deg_chunk=self.deg_chunk,
+            interpret=self.interpret,
+        )
+        return own[: self.n_loc, 0], gain[: self.n_loc, 0], tgt[: self.n_loc, 0]
+
+
+def make_gain(kind: str, ev, k: int, max_deg: int | None = None,
+              interpret: bool | None = None, tile_n: int = 256,
+              deg_chunk: int = 16):
+    """Instantiate the gain backend for one level, applying the fallback
+    rule.  ``max_deg`` is the true maximum degree of the level (a static,
+    setup-time scalar — it sizes the padded adjacency)."""
+    kind = resolve_gain(kind, k, max_deg)
+    if kind == "pallas":
+        return PallasGain(ev, k, max_deg, tile_n=tile_n, deg_chunk=deg_chunk,
+                          interpret=interpret)
+    return JnpGain(k)

@@ -1,0 +1,74 @@
+"""P-invariance with ragged shards: n not divisible by P exercises the
+padded-shape path (the last PE owns fewer vertices than n_local, padding
+slots carry zero weight / PAD heads) — previously only covered implicitly.
+
+Property: from one seed, the partition is bit-identical at P = 1 and P = 8
+across both comm backends (all-gather BSP and interface-only halo), and
+matches the single-device reference."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# n = 323 (prime·17, 323 % 8 = 3) and n = 437 (19·23, 437 % 8 = 5): both
+# force a ragged last shard and interior padding at P = 8
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.graphs import grid2d, chung_lu_powerlaw
+from repro.core import partition
+from repro.distributed import dpartition
+
+KW = dict(seed=0, refiner="d4xjet", max_inner=4, coarsen_until=48)
+out = {}
+for name, g in (("grid19x17", grid2d(19, 17)),
+                ("powerlaw437", chung_lu_powerlaw(n=437, avg_deg=6, seed=3))):
+    assert g.n % 8 != 0, (name, g.n)
+    ref = np.asarray(partition(g, k=4, **KW).labels)
+    rec = {"n": g.n}
+    for comm, kw in (("allgather", dict(coarsen="host")),
+                     ("halo", dict(halo=True))):
+        p1 = np.asarray(dpartition(g, k=4, P=1, **kw, **KW).labels)
+        p8 = np.asarray(dpartition(g, k=4, P=8, **kw, **KW).labels)
+        rec[f"{comm}_p1"] = bool(np.array_equal(ref, p1))
+        rec[f"{comm}_p8"] = bool(np.array_equal(ref, p8))
+    # the dLP baseline refiner over the ragged split (allgather backend)
+    l1 = np.asarray(dpartition(g, k=4, P=1, refiner="dlp", seed=0,
+                               coarsen="host", coarsen_until=48).labels)
+    l8 = np.asarray(dpartition(g, k=4, P=8, refiner="dlp", seed=0,
+                               coarsen="host", coarsen_until=48).labels)
+    rec["dlp_p_invariant"] = bool(np.array_equal(l1, l8))
+    out[name] = rec
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def ragged():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
+
+
+@pytest.mark.parametrize("comm", ["allgather", "halo"])
+def test_ragged_shard_p_invariant(ragged, comm):
+    for name, rec in ragged.items():
+        assert rec[f"{comm}_p1"], (name, rec)
+        assert rec[f"{comm}_p8"], (name, rec)
+
+
+def test_ragged_shard_dlp_p_invariant(ragged):
+    for name, rec in ragged.items():
+        assert rec["dlp_p_invariant"], (name, rec)

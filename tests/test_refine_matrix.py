@@ -1,0 +1,99 @@
+"""Tentpole acceptance for the unified refinement engine: bit-identical
+partitions from one seed across the full backend matrix
+
+    {gain: jnp, pallas-interpret} × {comm: single, all-gather, halo} × {P: 1, 8}
+
+plus the fused round-loop contract — each refinement level executes as a
+single compiled device-resident program (one dispatch per level, no
+per-round Python dispatch)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.graphs import grid2d
+from repro.core import partition
+from repro.distributed import dpartition
+from repro.refine import drivers
+
+g = grid2d(32, 32)
+k = 4
+KW = dict(seed=0, refiner="d4xjet", max_inner=6, coarsen_until=64)
+
+labels = {}
+for gk in ("jnp", "pallas"):
+    labels[f"single:P1:{gk}"] = np.asarray(
+        partition(g, k=k, gain=gk, **KW).labels)
+    labels[f"allgather:P1:{gk}"] = np.asarray(
+        dpartition(g, k=k, P=1, coarsen="host", gain=gk, **KW).labels)
+    labels[f"allgather:P8:{gk}"] = np.asarray(
+        dpartition(g, k=k, P=8, coarsen="host", gain=gk, **KW).labels)
+    labels[f"halo:P1:{gk}"] = np.asarray(
+        dpartition(g, k=k, P=1, halo=True, gain=gk, **KW).labels)
+    labels[f"halo:P8:{gk}"] = np.asarray(
+        dpartition(g, k=k, P=8, halo=True, gain=gk, **KW).labels)
+
+# device-born (sharded-coarsening) levels through both gain backends, with
+# the dispatch/trace counters around the jnp run for the fused-loop contract
+drivers.reset_counters()
+r_sh = dpartition(g, k=k, P=8, coarsen="sharded", gain="jnp", **KW)
+counts = {
+    "levels": r_sh.levels,
+    "sharded_dispatches": drivers.DISPATCHES.get("sharded", 0),
+    "sharded_traces": drivers.TRACES.get("sharded", 0),
+    "single_dispatches": drivers.DISPATCHES.get("single", 0),
+}
+labels["allgather:P8:sharded:jnp"] = np.asarray(r_sh.labels)
+labels["allgather:P8:sharded:pallas"] = np.asarray(
+    dpartition(g, k=k, P=8, coarsen="sharded", gain="pallas", **KW).labels)
+
+ref_name = "single:P1:jnp"
+ref = labels[ref_name]
+out = {
+    "equal": {name: bool(np.array_equal(ref, lab))
+              for name, lab in labels.items()},
+    "counts": counts,
+}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
+
+
+def test_full_backend_matrix_bit_identical(matrix):
+    """Every gain × comm × P combination replays the same move sequence."""
+    bad = [name for name, eq in matrix["equal"].items() if not eq]
+    assert not bad, f"combinations diverging from single:P1:jnp: {bad}"
+    assert len(matrix["equal"]) == 12
+
+
+def test_each_level_is_one_dispatch(matrix):
+    """The fused round loop: a V-cycle over L levels issues exactly L
+    sharded level-refinement dispatches (the pre-refactor driver issued
+    O(rounds · inner) per level), each traced at most once."""
+    c = matrix["counts"]
+    assert c["sharded_dispatches"] == c["levels"], c
+    assert c["sharded_traces"] <= c["sharded_dispatches"], c
+    # initial partitioning refines the (centralised) coarsest graph with
+    # n_restarts=4 fused single-device programs — also one dispatch each
+    assert c["single_dispatches"] == 4, c
