@@ -19,6 +19,14 @@ measures instead (and what transfers to real fabric):
     host-dispatch count for the level rides along as the derived value;
     the actual no-per-round-dispatch contract (dispatches == levels over
     a whole V-cycle) is asserted in tests/test_refine_matrix.py.
+  * the halo × sharded-coarsen cell: the same coarsen/refine split with
+    halo=True — the hierarchy additionally derives the interface-only halo
+    metadata per level ON DEVICE (halo.halo_from_sharded; the host-gather
+    re-shard loop of the old halo path is gone), and the fused level
+    program runs over the HaloComm backend.  Each config reports its own
+    ``coarsen_us``/``refine_us`` pair so the host-gather elimination is
+    visible in the trajectory; ``h_frac`` (h_local/n_local, the exchanged
+    fraction) rides along as the halo refine cell's companion.
 
 Bytes come from the compiled per-PE program of the shard_map'd Jet round,
 via the same HLO collective parser the roofline uses — executed in a
@@ -95,11 +103,38 @@ refine(lab_sh, jax.random.PRNGKey(1), lmax).block_until_ready()
 refine_s = time.perf_counter() - t0
 refine_dispatches = drivers.DISPATCHES.get("sharded", 0)
 
+# halo x sharded-coarsen cell: hierarchy + device-derived per-level halo
+# metadata (coarsen split), then ONE fused halo level program (refine split)
+from repro.distributed.halo import block_labels_to_halo, halo_from_sharded
+from repro.refine.drivers import make_refine_level_halo
+
+dcoarsen_hierarchy(mesh, sg, k, key, halo=True)   # warm-up / compile
+t0 = time.perf_counter()
+_, coarsest_h, halos = dcoarsen_hierarchy(mesh, sg, k, key, halo=True)
+jax.block_until_ready(halos[-1].dst_code)
+halo_coarsen_s = time.perf_counter() - t0
+
+hsg = halo_from_sharded(mesh, sg)
+lab_h = block_labels_to_halo(hsg, lab_sh)
+refine_h = make_refine_level_halo(mesh, hsg, k,
+                                  rounds_taus=temperature_schedule(4),
+                                  max_inner=4)
+refine_h(lab_h, jax.random.PRNGKey(1), lmax).block_until_ready()  # warm-up
+drivers.reset_counters()
+t0 = time.perf_counter()
+refine_h(lab_h, jax.random.PRNGKey(1), lmax).block_until_ready()
+halo_refine_s = time.perf_counter() - t0
+halo_refine_dispatches = drivers.DISPATCHES.get("halo", 0)
+
 print("RESULT::" + json.dumps({"P": P, "n": g.n, "n_local": sg.n_local,
       "coll_bytes": sum(coll.values()), "coll": coll, "sec_per_round": dt,
       "coarsen_s": coarsen_s, "coarsen_levels": len(levels),
       "coarsest_n": coarsest.n_real, "refine_s": refine_s,
-      "refine_dispatches": refine_dispatches}))
+      "refine_dispatches": refine_dispatches,
+      "halo_coarsen_s": halo_coarsen_s, "halo_levels": len(halos) - 1,
+      "halo_refine_s": halo_refine_s,
+      "halo_refine_dispatches": halo_refine_dispatches,
+      "h_frac": hsg.h_local / hsg.n_local}))
 """
 
 
@@ -110,7 +145,7 @@ def main(emit):
         env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu")
         proc = subprocess.run([sys.executable, "-c", SCRIPT % {"P": P}],
                               env=env, capture_output=True, text=True,
-                              timeout=900)
+                              timeout=1800)
         if proc.returncode != 0:
             emit(f"fig2.weak.P{P}.FAILED", 0, -1)
             continue
@@ -121,21 +156,31 @@ def main(emit):
     for r in rows:
         emit(f"fig2.weak.P{r['P']}.coll_bytes_per_pe", r["sec_per_round"] * 1e6,
              r["coll_bytes"])
+        # per-config coarsen/refine split: baseline all-gather config ...
         emit(f"fig2.weak.P{r['P']}.coarsen_us", r["coarsen_s"] * 1e6,
              r["coarsen_levels"])
         # refinement phase: fused whole-level program; derived value is the
         # engine host-dispatch count observed for the level
         emit(f"fig2.weak.P{r['P']}.refine_us", r["refine_s"] * 1e6,
              r["refine_dispatches"])
+        # ... and the halo × sharded-coarsen cell (device-derived per-level
+        # halo metadata; no host gather / re-shard loop in either phase)
+        emit(f"fig2.weak.P{r['P']}.halo.coarsen_us", r["halo_coarsen_s"] * 1e6,
+             r["halo_levels"])
+        emit(f"fig2.weak.P{r['P']}.halo.refine_us", r["halo_refine_s"] * 1e6,
+             r["halo_refine_dispatches"])
+        emit(f"fig2.weak.P{r['P']}.halo.h_frac", 0, r["h_frac"])
     by_p = {r["P"]: r for r in rows}
     if 1 in by_p and 8 in by_p and by_p[1]["coll_bytes"] > 0:
         emit("fig2.weak.coll_growth_P8_over_P1", 0,
              by_p[8]["coll_bytes"] / by_p[1]["coll_bytes"])
-    if 1 in by_p and 8 in by_p and by_p[1]["coarsen_s"] > 0:
-        # weak scaling of the coarsening phase (ideal: ~flat)
-        emit("fig2.weak.coarsen_growth_P8_over_P1", 0,
-             by_p[8]["coarsen_s"] / by_p[1]["coarsen_s"])
-    if 1 in by_p and 8 in by_p and by_p[1]["refine_s"] > 0:
-        # weak scaling of the fused refinement level (ideal: ~flat)
-        emit("fig2.weak.refine_growth_P8_over_P1", 0,
-             by_p[8]["refine_s"] / by_p[1]["refine_s"])
+    for cfg, cz, rz in (("", "coarsen_s", "refine_s"),
+                        ("halo.", "halo_coarsen_s", "halo_refine_s")):
+        if 1 in by_p and 8 in by_p and by_p[1][cz] > 0:
+            # weak scaling of the coarsening phase (ideal: ~flat)
+            emit(f"fig2.weak.{cfg}coarsen_growth_P8_over_P1", 0,
+                 by_p[8][cz] / by_p[1][cz])
+        if 1 in by_p and 8 in by_p and by_p[1][rz] > 0:
+            # weak scaling of the fused refinement level (ideal: ~flat)
+            emit(f"fig2.weak.{cfg}refine_growth_P8_over_P1", 0,
+                 by_p[8][rz] / by_p[1][rz])

@@ -6,6 +6,17 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Collection preflight: surface import-time breakage (a broken module, a bad
+# test import) as an immediate failure instead of mid-matrix; pytest exits
+# non-zero on any collection error, which set -e turns fatal.  The (long)
+# collected-test listing is suppressed, but the ERRORS section is replayed
+# on failure so the import traceback reaches the log.
+echo "== pytest collection preflight =="
+collect_log="$(mktemp)"
+python -m pytest --co -q >"$collect_log" 2>&1 \
+  || { cat "$collect_log"; rm -f "$collect_log"; exit 1; }
+rm -f "$collect_log"
+
 python -m pytest -x -q
 
 echo "== 4-device distributed V-cycle smoke =="

@@ -23,7 +23,11 @@ bodies over mesh axis ``"pe"``, reusing djet.py's ghost-exchange pattern:
 
 Only three scalars per level cross to the host (moved-vertex count, nc, and
 the max per-PE coarse edge count) — they pick the next level's static shapes,
-the BSP analogue of dKaMinPar's global per-level synchronisation.
+the BSP analogue of dKaMinPar's global per-level synchronisation.  With
+``halo=True`` a fourth scalar (h_local, the max per-PE interface count) rides
+along and the hierarchy emits device-derived interface-only halo metadata
+per level (``halo.halo_from_sharded``) — the halo V-cycle never gathers a
+level graph either.
 
 Coarse vertex layout: because each PE owns exactly ``blk`` coarse-vertex
 slots, a coarse vertex's gathered-layout id equals its global id, so no dst
@@ -342,11 +346,20 @@ def dcoarsen_hierarchy(
     coarsen_until: int | None = None,
     max_levels: int = 30,
     shrink_min: float = 0.05,
+    halo: bool = False,
 ):
     """Sharded analogue of core.coarsen.coarsen_hierarchy.
 
     Returns (levels, coarsest) where levels is a list of
     (fine_sharded, map_sh, coarse_sharded) from finest to coarsest-1.
+
+    With ``halo=True`` the hierarchy additionally emits the interface-only
+    halo metadata of every level *derived from the sharded level itself*
+    (``halo.halo_from_sharded`` — a per-PE device-side construction; only
+    the h_local scalar joins the 3 per-level scalars that already cross to
+    the host): returns (levels, coarsest, halos) where ``halos[i]`` is the
+    :class:`~repro.distributed.halo.HaloShardedGraph` of ``levels[i][0]``
+    and ``halos[-1]`` that of the coarsest graph.
     """
     if coarsen_until is None:
         coarsen_until = max(512, 16 * k)
@@ -363,4 +376,10 @@ def dcoarsen_hierarchy(
             break  # diminishing returns — stop coarsening
         levels.append((cur, map_sh, coarse))
         cur = coarse
-    return levels, cur
+    if not halo:
+        return levels, cur
+    from repro.distributed.halo import halo_from_sharded
+
+    halos = [halo_from_sharded(mesh, sg) for sg, _, _ in levels]
+    halos.append(halo_from_sharded(mesh, cur))
+    return levels, cur, halos

@@ -23,6 +23,12 @@ system at shard time so the ghost lookup is a single gather per round.
 The vertex split is chosen to equalise *edges* per PE (the paper's layout):
 a prefix-sum split of the degree array into P roughly-equal-weight ranges,
 then each range padded to common n_local / m_local.
+
+``shard_graph`` is the single home of this split: the interface-only halo
+layout (``distributed.halo``) is *derived* from a :class:`ShardedGraph` —
+per-PE on device for the sharded V-cycle, or via the same layout-pure core
+at setup time for host-built levels — never from its own split of the
+centralised graph.
 """
 
 from __future__ import annotations

@@ -1,22 +1,31 @@
 """Distributed multilevel driver.
 
-The full V-cycle now stays on device (paper §2 + DESIGN.md):
+The full V-cycle stays on device (paper §2 + DESIGN.md §2/§3), under either
+comm protocol:
 
   coarsen ↓   dcoarsen.py — sharded LP clustering + contraction under
               shard_map, with a bucketed all_to_all edge reshuffle; each
-              coarse level is born sharded, the fine graph is never gathered
+              coarse level is born sharded, the fine graph is never gathered.
+              With halo=True every level also emits its interface-only halo
+              metadata (halo.halo_from_sharded: a per-PE ownership compare,
+              device-side interface-first sort and one all_gather of the
+              inverse permutations — only the h_local scalar joins the 3
+              per-level scalars crossing to the host)
   initial     the (small, ≤ max(512, 16k)-vertex) coarsest graph is
               centralised — exactly where dKaMinPar also replicates — and
               seeded with the multi-restart greedy + refine of core.initial
-  uncoarsen ↑ one all_gather of coarse labels per level (duncoarsen), then
-              djet refinement on the already-sharded level
+  uncoarsen ↑ one all_gather of coarse labels per level (duncoarsen); the
+              labels route straight into the level's refinement layout —
+              baseline all-gather BSP, or the halo layout via a per-PE
+              device-side permutation gather (halo.block_labels_to_halo) —
+              and the fused level program refines in place
 
 ``coarsen="host"`` keeps the original centralised coarsening as a debugging
 fallback (level graphs are built on the host and re-sharded per level); both
 paths produce bit-identical partitions from the same seed on integer-weight
-graphs, which is how the sharded path is tested.  The halo (interface-only
-exchange) refinement variant implies the host path — it shards per level
-with its own interface-first permutation.
+graphs — with or without halo=True — which is how the sharded path is
+tested.  The old "halo implies host coarsening" restriction is gone: the
+halo layout is derived from each sharded level directly.
 """
 
 from __future__ import annotations
@@ -25,7 +34,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import coarsen as C
 from repro.core.graph import Graph
@@ -37,7 +45,6 @@ from repro.distributed.dgraph import (
     ShardedGraph,
     labels_from_sharded,
     labels_to_sharded,
-    owned_mask,
     shard_graph,
     sharded_to_graph,
 )
@@ -72,24 +79,41 @@ def _dl_max(sg: ShardedGraph, k: int, eps: float):
 
 
 def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key, refiner,
-                     patience, max_inner, gain="jnp"):
+                     patience, max_inner, gain="jnp", hsg=None,
+                     halo_uniform="global"):
     """Refine one already-sharded level in place (labels stay sharded).
 
     The whole level is ONE fused dispatch (``repro.refine.drivers``): the
     temperature loop and the inner (Jet → rebalance → patience) loop run
-    device-resident, instead of one dispatch per round."""
+    device-resident, instead of one dispatch per round.  With ``hsg`` set,
+    the level runs under the interface-only halo protocol: labels convert to
+    the interface-first layout with a per-PE device gather, refine, and
+    convert back — still one dispatch for the level program."""
     if refiner == "dlp":
         run = make_lp_level_sharded(mesh, sg, k, gain=gain)
-    else:
-        rounds = 1 if refiner == "djet" else 4
-        run = make_refine_level_sharded(
-            mesh, sg, k, rounds_taus=temperature_schedule(rounds),
-            patience=patience, max_inner=max_inner, gain=gain)
+        return run(lab_sh, key, lmax)
+    rounds = 1 if refiner == "djet" else 4
+    if hsg is not None:
+        from repro.distributed.halo import (
+            block_labels_from_halo,
+            block_labels_to_halo,
+        )
+
+        run = make_refine_level_halo(
+            mesh, hsg, k, rounds_taus=temperature_schedule(rounds),
+            patience=patience, max_inner=max_inner, gain=gain,
+            uniform_mode=halo_uniform)
+        lab_h = run(block_labels_to_halo(hsg, lab_sh), key, lmax)
+        return block_labels_from_halo(hsg, lab_h)
+    run = make_refine_level_sharded(
+        mesh, sg, k, rounds_taus=temperature_schedule(rounds),
+        patience=patience, max_inner=max_inner, gain=gain)
     return run(lab_sh, key, lmax)
 
 
 def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
-                   max_inner, halo: bool = False, gain="jnp"):
+                   max_inner, halo: bool = False, gain="jnp",
+                   halo_uniform="global"):
     """Host-path level refinement: shard the level graph, refine, gather."""
     P_ = mesh.devices.size
     lmax = l_max(g, k, eps)
@@ -108,7 +132,8 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
         rounds = 1 if refiner == "djet" else 4
         run = make_refine_level_halo(
             mesh, hsg, k, rounds_taus=temperature_schedule(rounds),
-            patience=patience, max_inner=max_inner, gain=gain)
+            patience=patience, max_inner=max_inner, gain=gain,
+            uniform_mode=halo_uniform)
         lab_sh = run(lab_sh, key, lmax)
         return halo_labels_from_sharded(hsg, perm, lab_sh)
 
@@ -120,7 +145,8 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
 
 
 def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
-                             coarsen_until, patience, max_inner, halo, gain):
+                             coarsen_until, patience, max_inner, halo, gain,
+                             halo_uniform):
     """Fallback: centralised coarsening, per-level re-sharded refinement."""
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                            coarsen_until=coarsen_until)
@@ -128,24 +154,36 @@ def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
 
     key, sub = jax.random.split(key)
     labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, refiner,
-                            patience, max_inner, halo=halo, gain=gain)
+                            patience, max_inner, halo=halo, gain=gain,
+                            halo_uniform=halo_uniform)
 
     for fine, mapping in reversed(levels):
         labels = labels[mapping]
         key, sub = jax.random.split(key)
         labels = _drefine_level(mesh, fine, labels, k, eps, sub, refiner,
-                                patience, max_inner, halo=halo, gain=gain)
+                                patience, max_inner, halo=halo, gain=gain,
+                                halo_uniform=halo_uniform)
     return labels, len(levels) + 1
 
 
 def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
                                 refiner, coarsen_until, patience, max_inner,
-                                gain):
-    """On-device V-cycle: graph is sharded once; every level stays sharded."""
+                                halo, gain, halo_uniform):
+    """On-device V-cycle: graph is sharded once; every level stays sharded.
+
+    With halo=True the hierarchy emits device-derived halo metadata per
+    level and every refinement runs under the interface-only protocol — the
+    fully on-device halo V-cycle (no per-level host gather of the graph)."""
     P_ = mesh.devices.size
     sg0 = shard_graph(g, P_)
-    levels, coarsest = dcoarsen_hierarchy(mesh, sg0, k, k_coarse,
-                                          coarsen_until=coarsen_until)
+    use_halo = halo and refiner != "dlp"
+    if use_halo:
+        levels, coarsest, halos = dcoarsen_hierarchy(
+            mesh, sg0, k, k_coarse, coarsen_until=coarsen_until, halo=True)
+    else:
+        levels, coarsest = dcoarsen_hierarchy(mesh, sg0, k, k_coarse,
+                                              coarsen_until=coarsen_until)
+        halos = [None] * (len(levels) + 1)
 
     # initial partitioning on the (small) centralised coarsest graph
     gc = sharded_to_graph(coarsest)
@@ -155,14 +193,17 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
     key, sub = jax.random.split(key)
     lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
                               _dl_max(coarsest, k, eps), sub, refiner,
-                              patience, max_inner, gain=gain)
+                              patience, max_inner, gain=gain, hsg=halos[-1],
+                              halo_uniform=halo_uniform)
 
-    for fine_sg, map_sh, coarse_sg in reversed(levels):
+    for i in reversed(range(len(levels))):
+        fine_sg, map_sh, coarse_sg = levels[i]
         lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
         key, sub = jax.random.split(key)
         lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
                                   _dl_max(fine_sg, k, eps), sub, refiner,
-                                  patience, max_inner, gain=gain)
+                                  patience, max_inner, gain=gain,
+                                  hsg=halos[i], halo_uniform=halo_uniform)
 
     return labels_from_sharded(sg0, lab_sh), len(levels) + 1
 
@@ -174,23 +215,24 @@ def dpartition(
     eps: float = 0.03,
     seed: int = 0,
     refiner: str = "d4xjet",
-    coarsen: str | None = None,
+    coarsen: str | None = "sharded",
     coarsen_until: int | None = None,
     patience: int = 12,
     max_inner: int = 64,
     halo: bool = False,
     gain: str = "jnp",
+    halo_uniform: str = "global",
 ) -> DPartitionResult:
+    """Distributed multilevel partition; ``halo=True`` composes with either
+    coarsening path (the halo layout is derived per level from the sharded
+    level itself under ``coarsen="sharded"``).  ``halo_uniform`` picks the
+    halo rebalance stream: ``"global"`` (default, the cross-backend
+    determinism contract) or ``"fold"`` (O(n_local) memory for scale runs;
+    P-invariant but its own stream — see DESIGN.md §2)."""
     if coarsen is None:
-        coarsen = "host" if halo else "sharded"
+        coarsen = "sharded"  # old auto default; halo no longer forces "host"
     if coarsen not in ("sharded", "host"):
         raise ValueError(f"coarsen must be 'sharded' or 'host', got {coarsen!r}")
-    if halo and coarsen == "sharded":
-        raise ValueError(
-            "halo=True implies host coarsening (the interface-first "
-            "permutation is built per level from the centralised level "
-            "graph); drop coarsen='sharded' or use the baseline protocol"
-        )
     mesh, P_ = make_pe_mesh(P)
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
@@ -198,11 +240,11 @@ def dpartition(
     if coarsen == "host":
         labels, n_levels = _dpartition_host_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner, halo, gain)
+            patience, max_inner, halo, gain, halo_uniform)
     else:
         labels, n_levels = _dpartition_sharded_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner, gain)
+            patience, max_inner, halo, gain, halo_uniform)
 
     return DPartitionResult(
         labels=labels,

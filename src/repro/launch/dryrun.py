@@ -283,7 +283,8 @@ def run_partitioner_cell(multi_pod: bool, n_local: int = 1 << 18,
         sh = P("pe", None)
         sg_specs = HaloShardedGraph(
             src=sh, dst_code=sh, head_gid=sh, ew=sh, nw=sh, my_gid=sh,
-            owned=sh, n_real=Pn * n_local, P=Pn, n_local=n_local,
+            owned=sh, perm_loc=sh, inv_perm=sh, gstart=P("pe"),
+            n_real=Pn * n_local, P=Pn, n_local=n_local,
             m_local=m_local, h_local=h_local,
         )
         f = jax.jit(compat_shard_map(
@@ -295,7 +296,10 @@ def run_partitioner_cell(multi_pod: bool, n_local: int = 1 << 18,
             src=s((Pn, m_local), jnp.int32), dst_code=s((Pn, m_local), jnp.int32),
             head_gid=s((Pn, m_local), jnp.int32), ew=s((Pn, m_local), jnp.float32),
             nw=s((Pn, n_local), jnp.float32), my_gid=s((Pn, n_local), jnp.int32),
-            owned=s((Pn, n_local), jnp.bool_), n_real=Pn * n_local, P=Pn,
+            owned=s((Pn, n_local), jnp.bool_),
+            perm_loc=s((Pn, n_local), jnp.int32),
+            inv_perm=s((Pn, n_local), jnp.int32), gstart=s((Pn,), jnp.int32),
+            n_real=Pn * n_local, P=Pn,
             n_local=n_local, m_local=m_local, h_local=h_local,
         )
         args = (sg_args, s((Pn, n_local), jnp.int32), s((Pn, n_local), jnp.bool_),

@@ -163,13 +163,15 @@ class HaloComm:
     kind = "halo"
 
     def __init__(self, P: int, h_local: int, n_local: int, n_real: int,
-                 uniform_mode: str = "global"):
+                 gstart, inv_perm, uniform_mode: str = "global"):
         assert uniform_mode in ("global", "fold"), uniform_mode
         self.P = P
         self.h_local = h_local
         self.n_local = n_local
         self.n_real = n_real
         self.H = P * h_local
+        self.gstart = gstart      # global id of this PE's first owned vertex
+        self.inv_perm = inv_perm  # (n_local,) block-layout slot → halo slot
         self.uniform_mode = uniform_mode
 
     def exchange(self, x):
@@ -197,12 +199,17 @@ class HaloComm:
         return jax.random.uniform(key, (self.n_real,))[gid]
 
     def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
-        # owned slots are permuted interface-first → no arithmetic slot map;
-        # match the (small) global move list against my_tid instead
-        hit = (ev.my_tid[:, None] == tids[None, :]) & moved[None, :]
-        sel = jnp.any(hit, axis=1)
-        tgt = jnp.sum(jnp.where(hit, tgts[None, :], 0), axis=1)
-        return jnp.where(sel, tgt, labels)
+        # per-PE inverse-permutation gather, O(P·ncand): ownership of a
+        # global move id is a range test against this PE's contiguous block,
+        # its halo slot one gather through inv_perm.  (Replaces the old
+        # (n_local × P·ncand) my_tid mask-compare.)  Ids past the owned
+        # prefix of the block land on ~owned halo slots and are dropped.
+        rel = tids - self.gstart
+        inb = moved & (rel >= 0) & (rel < self.n_local)
+        slot = self.inv_perm[jnp.where(inb, rel, 0)]
+        ok = inb & ev.owned[slot]
+        idx = jnp.where(ok, slot, self.n_local)
+        return labels.at[idx].set(tgts, mode="drop")
 
 
 def halo_edge_view(src, dst_code, head_gid, ew, nw, my_gid, owned) -> EdgeView:

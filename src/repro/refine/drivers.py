@@ -201,13 +201,13 @@ def make_lp_level_sharded(mesh, sg, k, *, gain="jnp", interpret=None):
 @lru_cache(maxsize=128)
 def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
                    max_inner, gain_kind, max_deg, interpret, uniform_mode):
-    def per_pe(src, dst_code, head_gid, ew, nw, my_gid, owned, labels, key,
-               lmax, taus):
+    def per_pe(src, dst_code, head_gid, ew, nw, my_gid, owned, inv_perm,
+               gstart, labels, key, lmax, taus):
         _count_trace("halo")
         ev = halo_edge_view(src[0], dst_code[0], head_gid[0], ew[0], nw[0],
                             my_gid[0], owned[0])
-        cm = HaloComm(n_pe, h_local, n_local, n_real,
-                      uniform_mode=uniform_mode)
+        cm = HaloComm(n_pe, h_local, n_local, n_real, gstart=gstart[0],
+                      inv_perm=inv_perm[0], uniform_mode=uniform_mode)
         gb = make_gain(gain_kind, ev, k, max_deg, interpret)
         out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus, k,
                                   patience, max_inner)
@@ -216,7 +216,7 @@ def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
     sh = P("pe", None)
     return jax.jit(shard_map(
         per_pe, mesh=mesh,
-        in_specs=(sh, sh, sh, sh, sh, sh, sh, sh, P(), P(), P()),
+        in_specs=(sh, sh, sh, sh, sh, sh, sh, sh, P("pe"), sh, P(), P(), P()),
         out_specs=sh,
     ))
 
@@ -242,6 +242,7 @@ def make_refine_level_halo(mesh, hsg, k, *, rounds_taus, patience=12,
     def run(lab_sh, key, lmax):
         _count_dispatch("halo")
         return fn(hsg.src, hsg.dst_code, hsg.head_gid, hsg.ew, hsg.nw,
-                  hsg.my_gid, hsg.owned, lab_sh, key, jnp.float32(lmax), taus)
+                  hsg.my_gid, hsg.owned, hsg.inv_perm, hsg.gstart, lab_sh,
+                  key, jnp.float32(lmax), taus)
 
     return run

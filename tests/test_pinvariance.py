@@ -3,8 +3,10 @@ padded-shape path (the last PE owns fewer vertices than n_local, padding
 slots carry zero weight / PAD heads) — previously only covered implicitly.
 
 Property: from one seed, the partition is bit-identical at P = 1 and P = 8
-across both comm backends (all-gather BSP and interface-only halo), and
-matches the single-device reference."""
+across the comm backends (all-gather BSP, interface-only halo over host
+coarsening, and the device-native halo × sharded-coarsen V-cycle — whose
+ragged last shard also exercises the device-derived interface permutation
+and halo slot map), and matches the single-device reference."""
 
 import json
 import os
@@ -34,7 +36,8 @@ for name, g in (("grid19x17", grid2d(19, 17)),
     ref = np.asarray(partition(g, k=4, **KW).labels)
     rec = {"n": g.n}
     for comm, kw in (("allgather", dict(coarsen="host")),
-                     ("halo", dict(halo=True))):
+                     ("halo", dict(halo=True, coarsen="host")),
+                     ("halo_sharded", dict(halo=True, coarsen="sharded"))):
         p1 = np.asarray(dpartition(g, k=4, P=1, **kw, **KW).labels)
         p8 = np.asarray(dpartition(g, k=4, P=8, **kw, **KW).labels)
         rec[f"{comm}_p1"] = bool(np.array_equal(ref, p1))
@@ -62,7 +65,7 @@ def ragged():
     raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
 
 
-@pytest.mark.parametrize("comm", ["allgather", "halo"])
+@pytest.mark.parametrize("comm", ["allgather", "halo", "halo_sharded"])
 def test_ragged_shard_p_invariant(ragged, comm):
     for name, rec in ragged.items():
         assert rec[f"{comm}_p1"], (name, rec)
