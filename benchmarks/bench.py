@@ -1,0 +1,210 @@
+"""Quality/perf benchmark harness → machine-readable ``BENCH_quality.json``.
+
+Runs the refinement-variant × P × graph sweep (every registered variant of
+``repro.refine.variants`` by default) under forced host devices — one
+subprocess per P, like the fig2 harness — and emits one schema-versioned
+JSON document so the repo's quality/perf trajectory has PR-over-PR data
+points.  Per cell: cut, imbalance, level count, coarsen/init/refine phase
+wall-µs (``dpartition(timing=True)``), and the engine's host-dispatch
+counters.  The document is validated against the schema in
+``benchmarks/common.py`` before it is written; schema violations or any
+NaN/inf metric exit non-zero — which is what CI's ``bench-smoke`` job
+(``--smoke``: tiny grid, P ∈ {1, 4}) turns into a red check.
+
+    PYTHONPATH=src:. python benchmarks/bench.py --smoke --out BENCH_quality.json
+    PYTHONPATH=src:. python benchmarks/bench.py               # full sweep
+
+See benchmarks/README.md for the schema and the CI artifact mapping.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+SRC = os.path.join(ROOT, "src")
+
+SMOKE_PS = (1, 4)
+FULL_PS = (1, 4, 8)
+SMOKE_GRAPHS = ("grid2d_24", "rmat_9")
+FULL_GRAPHS = ("grid2d_2k", "rhg_4k", "rmat_11")
+
+# Child process: one P, every (graph, variant) cell.  Forced host device
+# count must be set before jax import, hence a fresh interpreter per P.
+CHILD = r"""
+import json, sys, time
+cfg = json.loads(sys.argv[1])
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%d" % cfg["p"])
+from benchmarks.common import bench_graph
+from repro.distributed import dpartition
+from repro.refine import drivers
+
+cells = []
+for gname in cfg["graphs"]:
+    g = bench_graph(gname)
+    for variant in cfg["variants"]:
+        drivers.reset_counters()
+        t0 = time.perf_counter()
+        r = dpartition(g, k=cfg["k"], P=cfg["p"], seed=cfg["seed"],
+                       refiner=variant, max_inner=cfg["max_inner"],
+                       coarsen_until=cfg["coarsen_until"], timing=True)
+        total_s = time.perf_counter() - t0
+        cells.append({
+            "graph": gname, "variant": variant, "p": cfg["p"], "k": cfg["k"],
+            "n": int(g.n), "m": int(g.m),
+            "cut": float(r.cut), "imbalance": float(r.imbalance),
+            "levels": int(r.levels),
+            "coarsen_us": r.timings.get("coarsen_s", 0.0) * 1e6,
+            "init_us": r.timings.get("init_s", 0.0) * 1e6,
+            "refine_us": r.timings.get("refine_s", 0.0) * 1e6,
+            "total_us": total_s * 1e6,
+            "dispatch_count": int(drivers.DISPATCH_COUNT),
+            "dispatches": dict(drivers.DISPATCHES),
+        })
+        print("CELL::" + cells[-1]["graph"] + "/" + variant, file=sys.stderr)
+print("RESULT::" + json.dumps(cells))
+"""
+
+
+def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
+              timeout=3600):
+    """Run the sweep, one subprocess per P; returns (cells, failures)."""
+    cells, failures = [], []
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join([SRC, ROOT]),
+               JAX_PLATFORMS="cpu")
+    for p in ps:
+        cfg = {"p": p, "graphs": list(graphs), "variants": list(variants),
+               "k": k, "seed": seed, "max_inner": max_inner,
+               "coarsen_until": coarsen_until}
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", CHILD, json.dumps(cfg)],
+                env=env, capture_output=True, text=True, timeout=timeout)
+        except subprocess.TimeoutExpired:
+            # record the hung leg and keep the partial document writable
+            failures.append(f"P={p}: timed out after {timeout}s")
+            continue
+        if proc.returncode != 0:
+            failures.append(f"P={p}: exit {proc.returncode}: "
+                            + proc.stderr[-2000:])
+            continue
+        got = [line for line in proc.stdout.splitlines()
+               if line.startswith("RESULT::")]
+        if not got:
+            failures.append(f"P={p}: no RESULT line: {proc.stdout[-1000:]}")
+            continue
+        cells.extend(json.loads(got[0][len("RESULT::"):]))
+    return cells, failures
+
+
+def summarize(cells, baseline="jet"):
+    """Per-variant geometric-mean cut ratio vs the ``jet`` baseline over
+    the (graph, p) cells both completed — the headline trajectory number."""
+    from benchmarks.common import gmean
+
+    base = {(c["graph"], c["p"]): c["cut"] for c in cells
+            if c["variant"] == baseline}
+    out = {}
+    for variant in sorted({c["variant"] for c in cells}):
+        ratios = [c["cut"] / max(base[(c["graph"], c["p"])], 1e-9)
+                  for c in cells
+                  if c["variant"] == variant and (c["graph"], c["p"]) in base
+                  and base[(c["graph"], c["p"])] > 0]
+        if ratios:
+            out[variant] = {"gmean_cut_ratio_vs_jet": gmean(ratios),
+                            "cells": len(ratios)}
+    return out
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, SRC)
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import BENCH_SCHEMA_VERSION, validate_bench
+    from repro.refine.variants import registered_variants
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid, P in {1,4} (the CI bench-smoke job)")
+    ap.add_argument("--out", default=os.path.join(HERE, "BENCH_quality.json"))
+    ap.add_argument("--variants", default=None,
+                    help="comma-separated subset (default: all registered)")
+    ap.add_argument("--graphs", default=None,
+                    help="comma-separated instance names (benchmarks/common.py)")
+    ap.add_argument("--ps", default=None,
+                    help="comma-separated PE counts (default: smoke 1,4 / full 1,4,8)")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-inner", type=int, default=None,
+                    help="inner-loop bound (default: smoke 6 / full 12)")
+    args = ap.parse_args(argv)
+
+    variants = (tuple(args.variants.split(","))
+                if args.variants else registered_variants())
+    for v in variants:
+        from repro.refine.variants import resolve_variant
+        resolve_variant(v)  # fail fast on a typo
+    ps = (tuple(int(x) for x in args.ps.split(","))
+          if args.ps else (SMOKE_PS if args.smoke else FULL_PS))
+    graphs = (tuple(args.graphs.split(","))
+              if args.graphs else (SMOKE_GRAPHS if args.smoke else FULL_GRAPHS))
+    max_inner = (args.max_inner if args.max_inner is not None
+                 else (6 if args.smoke else 12))
+    coarsen_until = 64 if args.smoke else None
+
+    print(f"bench: variants={variants} ps={ps} graphs={graphs} "
+          f"k={args.k} max_inner={max_inner}", flush=True)
+    cells, failures = run_sweep(ps, graphs, variants, args.k, args.seed,
+                                max_inner, coarsen_until)
+
+    import jax
+    import numpy as np
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "smoke": bool(args.smoke),
+        "config": {"variants": list(variants), "ps": list(ps),
+                   "graphs": list(graphs), "k": args.k, "seed": args.seed,
+                   "max_inner": max_inner, "coarsen_until": coarsen_until},
+        "versions": {"jax": jax.__version__, "numpy": np.__version__,
+                     "python": sys.version.split()[0]},
+        "summary": summarize(cells),
+        "cells": cells,
+    }
+    violations = [] if not cells else validate_bench(doc)
+
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+    for c in cells:
+        print(f"  {c['graph']:12s} {c['variant']:6s} P{c['p']} "
+              f"cut={c['cut']:9.1f} imb={c['imbalance']:.4f} "
+              f"levels={c['levels']} refine_us={c['refine_us']:.0f} "
+              f"dispatches={c['dispatch_count']}")
+    for variant, s in doc["summary"].items():
+        print(f"  summary {variant:6s} gmean cut ratio vs jet: "
+              f"{s['gmean_cut_ratio_vs_jet']:.4f} over {s['cells']} cells")
+
+    ok = True
+    for msg in failures:
+        ok = False
+        print(f"SWEEP FAILURE: {msg}", file=sys.stderr)
+    if not cells:
+        ok = False
+        print("SCHEMA VIOLATION: no cells produced", file=sys.stderr)
+    for msg in violations:
+        ok = False
+        print(f"SCHEMA VIOLATION: {msg}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,7 @@ shape story (EXPERIMENTS.md §Dry-run).
 
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -25,8 +26,89 @@ INSTANCES = {
     "rmat_11": lambda: rmat(scale=11, edge_factor=6, seed=5),
 }
 
+# tiny instances for the CI bench-smoke grid (one meshy + one power-law,
+# seconds per cell) — benchmarks/bench.py --smoke
+SMOKE_INSTANCES = {
+    "grid2d_24": lambda: grid2d(24, 24),
+    "rmat_9": lambda: rmat(scale=9, edge_factor=4, seed=5),
+}
+
 KS = (2, 4, 8)
 EPS = 0.03
+
+
+def bench_graph(name):
+    """Instance factory lookup shared by the bench harness and its
+    subprocesses (full sweep + smoke instances, by name)."""
+    table = {**INSTANCES, **SMOKE_INSTANCES}
+    if name not in table:
+        raise ValueError(f"unknown bench graph {name!r}; known: {sorted(table)}")
+    return table[name]()
+
+
+# ---- BENCH_quality.json schema (benchmarks/README.md documents it) --------
+
+BENCH_SCHEMA_VERSION = 1
+
+# per-cell required keys -> allowed types; every numeric value must also be
+# finite (NaN/inf in any metric fails CI's bench-smoke job)
+BENCH_CELL_KEYS = {
+    "graph": str,
+    "variant": str,
+    "p": int,
+    "k": int,
+    "n": int,
+    "m": int,
+    "cut": (int, float),
+    "imbalance": (int, float),
+    "levels": int,
+    "coarsen_us": (int, float),
+    "init_us": (int, float),
+    "refine_us": (int, float),
+    "total_us": (int, float),
+    "dispatch_count": int,
+    "dispatches": dict,
+}
+
+
+def validate_bench(doc) -> list[str]:
+    """Validate a BENCH_quality.json document; returns a list of violations
+    (empty = valid).  Checked: schema version, top-level shape, per-cell
+    required keys/types, and finiteness of every numeric metric."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"document is {type(doc).__name__}, expected object"]
+    if doc.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errs.append(
+            f"schema_version={doc.get('schema_version')!r}, "
+            f"expected {BENCH_SCHEMA_VERSION}")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        return errs + ["cells missing/empty"]
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            errs.append(f"cells[{i}] is {type(cell).__name__}")
+            continue
+        where = f"cells[{i}] ({cell.get('graph')}/{cell.get('variant')}/P{cell.get('p')})"
+        for key, types in BENCH_CELL_KEYS.items():
+            if key not in cell:
+                errs.append(f"{where}: missing {key!r}")
+                continue
+            v = cell[key]
+            if isinstance(v, bool) or not isinstance(v, types):
+                errs.append(f"{where}: {key}={v!r} has type "
+                            f"{type(v).__name__}, expected {types}")
+            elif isinstance(v, (int, float)) and not math.isfinite(v):
+                errs.append(f"{where}: {key}={v!r} is not finite")
+        for dk, dv in cell.get("dispatches", {}).items() \
+                if isinstance(cell.get("dispatches"), dict) else []:
+            if isinstance(dv, bool) or not isinstance(dv, int):
+                errs.append(f"{where}: dispatches[{dk!r}]={dv!r} not an int")
+        if isinstance(cell.get("cut"), (int, float)) and cell["cut"] < 0:
+            errs.append(f"{where}: negative cut")
+        if isinstance(cell.get("imbalance"), (int, float)) and cell["imbalance"] < 0:
+            errs.append(f"{where}: negative imbalance")
+    return errs
 
 
 def timed(fn, *args, **kw):

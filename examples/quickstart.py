@@ -11,13 +11,14 @@ def main():
     for name, g in (("grid 64x64", grid2d(64, 64)),
                     ("rmat-12 (power law)", rmat(scale=12, edge_factor=8))):
         print(f"\n=== {name}: n={g.n} m={g.m}")
-        for refiner in ("dlp", "d4xjet"):
+        for refiner in ("dlp", "d4xjet", "jetlp"):
             res = partition(g, k=8, eps=0.03, seed=0, refiner=refiner,
                             max_inner=16)
             print(f"  {refiner:8s} cut={res.cut:10.0f} imbalance={res.imbalance:.4f} "
                   f"levels={res.levels}")
         print("  (d4xJet = paper configuration: 4 temperature rounds of "
-              "unconstrained Jet + probabilistic rebalancing)")
+              "unconstrained Jet + probabilistic rebalancing; jetlp = the "
+              "LP-style variant from the registry, repro.refine.variants)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,20 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Version echo first: when a matrix leg (e.g. the latest-jax canary) breaks,
+# the log says immediately which toolchain it broke under.
+echo "== versions =="
+python - <<'PY'
+import sys
+import jax
+import numpy
+import pytest
+print(f"python {sys.version.split()[0]}")
+print(f"jax {jax.__version__}")
+print(f"numpy {numpy.__version__}")
+print(f"pytest {pytest.__version__}")
+PY
+
 # Collection preflight: surface import-time breakage (a broken module, a bad
 # test import) as an immediate failure instead of mid-matrix; pytest exits
 # non-zero on any collection error, which set -e turns fatal.  The (long)
@@ -20,15 +34,7 @@ rm -f "$collect_log"
 python -m pytest -x -q
 
 echo "== 4-device distributed V-cycle smoke =="
+# the identical entry point CI runs — see src/repro/launch/smoke.py
 JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-python - <<'PY'
-from repro.graphs import grid2d
-from repro.distributed import dpartition
-
-r = dpartition(grid2d(32, 32), k=4, P=4, seed=0, refiner="d4xjet",
-               max_inner=8, coarsen_until=64, coarsen="sharded")
-assert r.P == 4 and r.levels >= 2, r
-assert r.imbalance <= 0.031, r
-print(f"ok: cut={r.cut} imbalance={r.imbalance:.4f} levels={r.levels}")
-PY
+python -m repro.launch.smoke
 echo "check.sh: all green"

@@ -1,15 +1,14 @@
 """Multilevel V-cycle driver: coarsen → initial partition → uncoarsen+refine.
 
-``refiner`` selects the paper's configurations:
-  * ``"dlp"``    — label propagation only (plain dKaMinPar baseline)
-  * ``"djet"``   — 1 round of Jet (paper's dJet)
-  * ``"d4xjet"`` — 4 temperature rounds of Jet (paper's d4xJet, the default)
+``refiner`` names a registered refinement variant
+(``repro.refine.variants``): ``jet`` / ``jetlp`` / ``jet_h`` / ``lp``, plus
+the paper-configuration aliases ``d4xjet`` (= jet, 4 temperature rounds,
+the default), ``djet`` (= jet, 1 round) and ``dlp`` (= lp).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +17,10 @@ from repro.core import coarsen as C
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance
-from repro.core.refine import jet_refine, lp_refine_balanced
+from repro.core.refine import jet_refine, lp_refine_level
+from repro.refine.variants import Variant, resolve_variant
 
-Refiner = Literal["dlp", "djet", "d4xjet"]
+Refiner = str  # a registered variant or alias name — see repro.refine.variants
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,13 +31,13 @@ class PartitionResult:
     levels: int
 
 
-def _refine(g: Graph, labels, k, eps, key, refiner: Refiner, patience: int,
+def _refine(g: Graph, labels, k, eps, key, var: Variant, patience: int,
             max_inner: int, gain: str = "jnp"):
-    if refiner == "dlp":
-        return lp_refine_balanced(g, labels, k, eps, key)
-    rounds = 1 if refiner == "djet" else 4
-    return jet_refine(g, labels, k, eps, key, rounds=rounds,
-                      patience=patience, max_inner=max_inner, gain=gain)
+    if var.mode == "lp":
+        return lp_refine_level(g, labels, k, eps, key, gain=gain)
+    return jet_refine(g, labels, k, eps, key, rounds=var.rounds,
+                      patience=patience, max_inner=max_inner, gain=gain,
+                      variant=var.name)
 
 
 def partition(
@@ -53,9 +53,12 @@ def partition(
 ) -> PartitionResult:
     """Full multilevel partition of ``g`` into ``k`` blocks.
 
+    ``refiner`` names a registered refinement variant (see module
+    docstring; unknown names raise ``ValueError`` listing the registry).
     ``gain`` selects the refinement gain backend ("jnp", "pallas" or
     "auto") — see ``repro.refine``; partitions are bit-identical across
     backends on integer-weight graphs."""
+    var = resolve_variant(refiner)
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
 
@@ -64,13 +67,13 @@ def partition(
     labels = initial_partition(coarsest, k, eps, k_init)
 
     key, sub = jax.random.split(key)
-    labels = _refine(coarsest, labels, k, eps, sub, refiner, patience,
+    labels = _refine(coarsest, labels, k, eps, sub, var, patience,
                      max_inner, gain)
 
     for fine, mapping in reversed(levels):
         labels = labels[mapping]  # project coarse labels to the finer level
         key, sub = jax.random.split(key)
-        labels = _refine(fine, labels, k, eps, sub, refiner, patience,
+        labels = _refine(fine, labels, k, eps, sub, var, patience,
                          max_inner, gain)
 
     return PartitionResult(

@@ -50,15 +50,35 @@ def jet_refine(
     max_inner: int = 64,
     gain: str = "jnp",
     interpret: bool | None = None,
+    variant: str = "jet",
 ) -> jax.Array:
     """d4xJet (rounds=4) / dJet (rounds=1) refinement at one level — one
     fused dispatch.  ``gain`` selects the gain backend ("jnp", "pallas" or
-    "auto"; the DESIGN.md §5 fallback applies automatically)."""
+    "auto"; the DESIGN.md §5 fallback applies automatically); ``variant``
+    the jet-family move-generation rule (``repro.refine.variants``)."""
     lmax = l_max(g, k, eps)
     return refine_single(
         g, labels, k, key, lmax, temperature_schedule(rounds),
         patience=patience, max_inner=max_inner, gain=gain,
-        interpret=interpret)
+        interpret=interpret, variant=variant)
+
+
+def lp_refine_level(
+    g: Graph,
+    labels: jax.Array,
+    k: int,
+    eps: float,
+    key: jax.Array,
+    gain: str = "jnp",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The ``lp`` variant at one level — the fused ``engine.lp_level``
+    program (LP rounds + rebalance finisher) over the single-device comm
+    backend, bit-identical to the distributed lp levels from one key."""
+    lmax = l_max(g, k, eps)
+    return refine_single(
+        g, labels, k, key, lmax, [0.0], gain=gain, interpret=interpret,
+        variant="lp")
 
 
 def lp_refine_balanced(

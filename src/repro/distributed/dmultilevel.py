@@ -31,6 +31,7 @@ halo layout is derived from each sharded level directly.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +50,10 @@ from repro.distributed.dgraph import (
     sharded_to_graph,
 )
 from repro.refine.drivers import (
-    make_lp_level_sharded,
     make_refine_level_halo,
     make_refine_level_sharded,
 )
+from repro.refine.variants import Variant, resolve_variant
 from repro.sharding.compat import make_mesh
 
 
@@ -63,6 +64,36 @@ class DPartitionResult:
     imbalance: float
     levels: int
     P: int
+    # phase wall times in seconds, only populated by dpartition(timing=True)
+    # (timing adds block_until_ready syncs at the phase boundaries, so it is
+    # opt-in; keys: coarsen_s, init_s, refine_s — see benchmarks/bench.py)
+    timings: dict | None = None
+
+
+class _PhaseTimer:
+    """Accumulates per-phase wall time around explicit sync points; when
+    disabled every call is a no-op (no syncs added to the V-cycle)."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+        self.acc: dict[str, float] = {}
+        self._t0 = 0.0
+
+    def start(self, sync=None):
+        if self.enabled:
+            if sync is not None:
+                jax.block_until_ready(sync)
+            self._t0 = time.perf_counter()
+
+    def stop(self, phase: str, sync=None):
+        if self.enabled:
+            if sync is not None:
+                jax.block_until_ready(sync)
+            self.acc[phase] = self.acc.get(phase, 0.0) + (
+                time.perf_counter() - self._t0)
+
+    def result(self) -> dict | None:
+        return dict(self.acc) if self.enabled else None
 
 
 def make_pe_mesh(P: int | None = None):
@@ -78,21 +109,20 @@ def _dl_max(sg: ShardedGraph, k: int, eps: float):
     return (1.0 + eps) * jnp.ceil(jnp.sum(sg.nw) / k)
 
 
-def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key, refiner,
-                     patience, max_inner, gain="jnp", hsg=None,
+def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key,
+                     var: Variant, patience, max_inner, gain="jnp", hsg=None,
                      halo_uniform="global"):
     """Refine one already-sharded level in place (labels stay sharded).
 
     The whole level is ONE fused dispatch (``repro.refine.drivers``): the
     temperature loop and the inner (Jet → rebalance → patience) loop run
-    device-resident, instead of one dispatch per round.  With ``hsg`` set,
-    the level runs under the interface-only halo protocol: labels convert to
-    the interface-first layout with a per-PE device gather, refine, and
-    convert back — still one dispatch for the level program."""
-    if refiner == "dlp":
-        run = make_lp_level_sharded(mesh, sg, k, gain=gain)
-        return run(lab_sh, key, lmax)
-    rounds = 1 if refiner == "djet" else 4
+    device-resident, instead of one dispatch per round.  ``var`` is the
+    resolved refinement variant — its move-generation rule (or the lp level
+    program) runs over whichever comm backend the level uses.  With ``hsg``
+    set, the level runs under the interface-only halo protocol: labels
+    convert to the interface-first layout with a per-PE device gather,
+    refine, and convert back — still one dispatch for the level program."""
+    taus = temperature_schedule(var.rounds)
     if hsg is not None:
         from repro.distributed.halo import (
             block_labels_from_halo,
@@ -100,25 +130,25 @@ def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key, refiner,
         )
 
         run = make_refine_level_halo(
-            mesh, hsg, k, rounds_taus=temperature_schedule(rounds),
+            mesh, hsg, k, rounds_taus=taus,
             patience=patience, max_inner=max_inner, gain=gain,
-            uniform_mode=halo_uniform)
+            uniform_mode=halo_uniform, variant=var.name)
         lab_h = run(block_labels_to_halo(hsg, lab_sh), key, lmax)
         return block_labels_from_halo(hsg, lab_h)
     run = make_refine_level_sharded(
-        mesh, sg, k, rounds_taus=temperature_schedule(rounds),
-        patience=patience, max_inner=max_inner, gain=gain)
+        mesh, sg, k, rounds_taus=taus,
+        patience=patience, max_inner=max_inner, gain=gain, variant=var.name)
     return run(lab_sh, key, lmax)
 
 
-def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
-                   max_inner, halo: bool = False, gain="jnp",
+def _drefine_level(mesh, g: Graph, labels, k, eps, key, var: Variant,
+                   patience, max_inner, halo: bool = False, gain="jnp",
                    halo_uniform="global"):
     """Host-path level refinement: shard the level graph, refine, gather."""
     P_ = mesh.devices.size
     lmax = l_max(g, k, eps)
 
-    if halo and refiner != "dlp":
+    if halo:
         # interface-only exchange fast path (§Perf cell 1, paper's ghost
         # protocol), same fused engine over the HaloComm backend
         from repro.distributed.halo import (
@@ -129,46 +159,52 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, refiner, patience,
 
         hsg, perm = shard_graph_halo(g, P_)
         lab_sh = halo_labels_to_sharded(hsg, perm, labels)
-        rounds = 1 if refiner == "djet" else 4
         run = make_refine_level_halo(
-            mesh, hsg, k, rounds_taus=temperature_schedule(rounds),
+            mesh, hsg, k, rounds_taus=temperature_schedule(var.rounds),
             patience=patience, max_inner=max_inner, gain=gain,
-            uniform_mode=halo_uniform)
+            uniform_mode=halo_uniform, variant=var.name)
         lab_sh = run(lab_sh, key, lmax)
         return halo_labels_from_sharded(hsg, perm, lab_sh)
 
     sg = shard_graph(g, P_)
     lab_sh = labels_to_sharded(sg, labels)
-    lab_sh = _drefine_sharded(mesh, sg, lab_sh, k, lmax, key, refiner,
+    lab_sh = _drefine_sharded(mesh, sg, lab_sh, k, lmax, key, var,
                               patience, max_inner, gain=gain)
     return labels_from_sharded(sg, lab_sh)
 
 
-def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, refiner,
+def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, var,
                              coarsen_until, patience, max_inner, halo, gain,
-                             halo_uniform):
+                             halo_uniform, timer):
     """Fallback: centralised coarsening, per-level re-sharded refinement."""
+    timer.start()
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                            coarsen_until=coarsen_until)
-    labels = initial_partition(coarsest, k, eps, k_init)
+    timer.stop("coarsen_s", coarsest.nw)
 
+    timer.start()
+    labels = initial_partition(coarsest, k, eps, k_init)
+    timer.stop("init_s", labels)
+
+    timer.start()
     key, sub = jax.random.split(key)
-    labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, refiner,
+    labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, var,
                             patience, max_inner, halo=halo, gain=gain,
                             halo_uniform=halo_uniform)
 
     for fine, mapping in reversed(levels):
         labels = labels[mapping]
         key, sub = jax.random.split(key)
-        labels = _drefine_level(mesh, fine, labels, k, eps, sub, refiner,
+        labels = _drefine_level(mesh, fine, labels, k, eps, sub, var,
                                 patience, max_inner, halo=halo, gain=gain,
                                 halo_uniform=halo_uniform)
+    timer.stop("refine_s", labels)
     return labels, len(levels) + 1
 
 
 def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
-                                refiner, coarsen_until, patience, max_inner,
-                                halo, gain, halo_uniform):
+                                var, coarsen_until, patience, max_inner,
+                                halo, gain, halo_uniform, timer):
     """On-device V-cycle: graph is sharded once; every level stays sharded.
 
     With halo=True the hierarchy emits device-derived halo metadata per
@@ -176,23 +212,27 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
     fully on-device halo V-cycle (no per-level host gather of the graph)."""
     P_ = mesh.devices.size
     sg0 = shard_graph(g, P_)
-    use_halo = halo and refiner != "dlp"
-    if use_halo:
+    timer.start(sg0.nw)
+    if halo:
         levels, coarsest, halos = dcoarsen_hierarchy(
             mesh, sg0, k, k_coarse, coarsen_until=coarsen_until, halo=True)
     else:
         levels, coarsest = dcoarsen_hierarchy(mesh, sg0, k, k_coarse,
                                               coarsen_until=coarsen_until)
         halos = [None] * (len(levels) + 1)
+    timer.stop("coarsen_s", coarsest.nw)
 
     # initial partitioning on the (small) centralised coarsest graph
+    timer.start()
     gc = sharded_to_graph(coarsest)
     labels = initial_partition(gc, k, eps, k_init)
     lab_sh = labels_to_sharded(coarsest, labels)
+    timer.stop("init_s", lab_sh)
 
+    timer.start()
     key, sub = jax.random.split(key)
     lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
-                              _dl_max(coarsest, k, eps), sub, refiner,
+                              _dl_max(coarsest, k, eps), sub, var,
                               patience, max_inner, gain=gain, hsg=halos[-1],
                               halo_uniform=halo_uniform)
 
@@ -201,9 +241,10 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
         lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
         key, sub = jax.random.split(key)
         lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
-                                  _dl_max(fine_sg, k, eps), sub, refiner,
+                                  _dl_max(fine_sg, k, eps), sub, var,
                                   patience, max_inner, gain=gain,
                                   hsg=halos[i], halo_uniform=halo_uniform)
+    timer.stop("refine_s", lab_sh)
 
     return labels_from_sharded(sg0, lab_sh), len(levels) + 1
 
@@ -222,13 +263,20 @@ def dpartition(
     halo: bool = False,
     gain: str = "jnp",
     halo_uniform: str = "global",
+    timing: bool = False,
 ) -> DPartitionResult:
     """Distributed multilevel partition; ``halo=True`` composes with either
     coarsening path (the halo layout is derived per level from the sharded
-    level itself under ``coarsen="sharded"``).  ``halo_uniform`` picks the
+    level itself under ``coarsen="sharded"``).  ``refiner`` names a
+    registered refinement variant (``repro.refine.variants``; unknown names
+    raise ``ValueError`` listing the registry).  ``halo_uniform`` picks the
     halo rebalance stream: ``"global"`` (default, the cross-backend
     determinism contract) or ``"fold"`` (O(n_local) memory for scale runs;
-    P-invariant but its own stream — see DESIGN.md §2)."""
+    P-invariant but its own stream — see DESIGN.md §2).  ``timing=True``
+    populates ``DPartitionResult.timings`` with per-phase wall seconds
+    (coarsen_s / init_s / refine_s) at the cost of phase-boundary syncs —
+    the benchmark harness's hook (benchmarks/bench.py)."""
+    var = resolve_variant(refiner)
     if coarsen is None:
         coarsen = "sharded"  # old auto default; halo no longer forces "host"
     if coarsen not in ("sharded", "host"):
@@ -236,15 +284,16 @@ def dpartition(
     mesh, P_ = make_pe_mesh(P)
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
+    timer = _PhaseTimer(timing)
 
     if coarsen == "host":
         labels, n_levels = _dpartition_host_coarsen(
-            mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform)
+            mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
+            patience, max_inner, halo, gain, halo_uniform, timer)
     else:
         labels, n_levels = _dpartition_sharded_coarsen(
-            mesh, g, k, eps, key, k_coarse, k_init, refiner, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform)
+            mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
+            patience, max_inner, halo, gain, halo_uniform, timer)
 
     return DPartitionResult(
         labels=labels,
@@ -252,4 +301,5 @@ def dpartition(
         imbalance=float(imbalance(g, labels, k)),
         levels=n_levels,
         P=P_,
+        timings=timer.result(),
     )

@@ -15,12 +15,15 @@ under any comm backend.
 from __future__ import annotations
 
 from functools import partial
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import PAD, Graph, to_padded_fast
 from repro.kernels.gain.kernel import LANE, gain_scoreboard_pallas, round_up
+
+if TYPE_CHECKING:  # runtime import is deferred: breaks the core↔refine cycle
+    from repro.core.graph import Graph
 
 _round_up = round_up  # single definition lives with the kernel
 
@@ -29,6 +32,8 @@ def pad_for_kernel(g: Graph, max_deg: int, tile_n: int = 256, deg_chunk: int = 1
     """Padded-adjacency arrays sized for the kernel: N → multiple of tile_n,
     D → multiple of deg_chunk.  Labels of neighbours are substituted by the
     caller per round; this returns neighbour *ids* + weights."""
+    from repro.core.graph import PAD, to_padded_fast
+
     d = _round_up(max(max_deg, 1), deg_chunk)
     nbr, nbr_w = to_padded_fast(g, d)
     n_pad = _round_up(g.n, tile_n)
@@ -55,6 +60,8 @@ def gain_scoreboard(
     ``nbr`` holds neighbour *ids*; the label gather happens here so one padded
     adjacency serves every round.
     """
+    from repro.core.graph import PAD
+
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_pad = nbr.shape[0]

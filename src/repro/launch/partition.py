@@ -10,6 +10,7 @@ import time
 
 from repro.core import partition
 from repro.graphs import BENCHMARK_SET, generate
+from repro.refine.variants import ALIASES, registered_variants
 
 
 def main():
@@ -17,7 +18,8 @@ def main():
     ap.add_argument("--graph", default="grid2d_64k", choices=sorted(BENCHMARK_SET))
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--eps", type=float, default=0.03)
-    ap.add_argument("--refiner", default="d4xjet", choices=("dlp", "djet", "d4xjet"))
+    ap.add_argument("--refiner", default="d4xjet",
+                    choices=sorted((*registered_variants(), *ALIASES)))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", type=int, default=0,
                     help="run refinement under shard_map with P forced host devices")

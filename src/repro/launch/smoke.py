@@ -1,0 +1,44 @@
+"""4-device distributed V-cycle smoke — run as ``python -m repro.launch.smoke``.
+
+The single smoke entry point shared by CI and local runs (scripts/check.sh
+used to inline this as a heredoc, which let the two drift): a sharded-
+coarsening d4xJet V-cycle on 4 forced host devices must produce a balanced
+multilevel partition.  Environment defaults are applied before jax import
+so a bare ``python -m repro.launch.smoke`` works anywhere; an existing
+``XLA_FLAGS`` is extended, not replaced.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
+
+def main() -> None:
+    import jax
+
+    from repro.distributed import dpartition
+    from repro.graphs import grid2d
+
+    print(f"smoke: jax {jax.__version__} "
+          f"backend={jax.default_backend()} devices={jax.device_count()}",
+          flush=True)
+    assert jax.device_count() >= 4, (
+        f"need >= 4 devices for the P=4 smoke, got {jax.device_count()} "
+        f"(XLA_FLAGS={os.environ.get('XLA_FLAGS')!r})")
+
+    r = dpartition(grid2d(32, 32), k=4, P=4, seed=0, refiner="d4xjet",
+                   max_inner=8, coarsen_until=64, coarsen="sharded")
+    assert r.P == 4 and r.levels >= 2, r
+    assert r.imbalance <= 0.031, r
+    print(f"ok: cut={r.cut} imbalance={r.imbalance:.4f} levels={r.levels}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,12 @@ from repro.refine.drivers import (  # noqa: F401
     refine_single,
     reset_counters,
 )
+from repro.refine.variants import (  # noqa: F401
+    Variant,
+    register,
+    registered_variants,
+    resolve_variant,
+)
 from repro.refine.gain import (  # noqa: F401
     PALLAS_MAX_DEG,
     PALLAS_MAX_K,

@@ -36,9 +36,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import PAD
-
-
 class EdgeView(NamedTuple):
     """Per-PE static view of one refinement level.
 
@@ -216,12 +213,16 @@ def halo_edge_view(src, dst_code, head_gid, ew, nw, my_gid, owned) -> EdgeView:
     """EdgeView of one PE of a halo-sharded level — the single home of the
     halo coordinate convention (head = halo code, live = head_gid != PAD,
     tie-break ids = explicit global ids)."""
+    from repro.core.graph import PAD  # deferred: breaks the core↔refine cycle
+
     return EdgeView(src=src, head=dst_code, live=head_gid != PAD, ew=ew,
                     head_tid=head_gid, my_tid=my_gid, nw=nw, owned=owned)
 
 
 def edge_view_from_graph(g) -> EdgeView:
     """Single-device EdgeView of a :class:`repro.core.graph.Graph`."""
+    from repro.core.graph import PAD  # deferred: breaks the core↔refine cycle
+
     live = g.col != PAD
     n = g.n
     ids = jnp.arange(n, dtype=jnp.int32)

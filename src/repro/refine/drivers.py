@@ -11,6 +11,11 @@ epochs — executes as a SINGLE compiled program per backend combination:
     (``halo.HaloShardedGraph`` layout);
   * :func:`make_lp_level_sharded`     — the fused dLP baseline level.
 
+Every factory takes ``variant=`` — a registered move-generation rule from
+``refine/variants.py`` (the name is part of the static cache key); lp-mode
+variants swap the level program for ``engine.lp_level`` under the same
+comm backend.
+
 The module keeps two counters for the no-per-round-dispatch contract:
 ``DISPATCH_COUNT`` increments once per level-refinement *call* and
 ``TRACE_COUNT`` once per *trace* — a V-cycle over L levels must show
@@ -31,7 +36,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.graph import PAD
 from repro.refine import engine
 from repro.refine.comm import (
     AllGatherComm,
@@ -42,6 +46,7 @@ from repro.refine.comm import (
     halo_edge_view,
 )
 from repro.refine.gain import make_gain, resolve_gain
+from repro.refine.variants import resolve_variant
 from repro.sharding.compat import shard_map
 
 DISPATCH_COUNT = 0   # level-refinement calls (python → device dispatches)
@@ -80,6 +85,8 @@ def graph_max_deg(g) -> int:
 
 @partial(jax.jit, static_argnames=("n_local",))
 def _sharded_degrees(src, dst, n_local: int):
+    from repro.core.graph import PAD  # deferred: breaks the core↔refine cycle
+
     live = (dst != PAD).astype(jnp.float32)
     deg = jax.vmap(
         lambda s, l: jax.ops.segment_sum(l, s, num_segments=n_local)
@@ -102,20 +109,27 @@ def _need_max_deg(gain: str) -> bool:
 # --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=(
-    "k", "patience", "max_inner", "gain_kind", "max_deg", "interpret"))
+    "k", "patience", "max_inner", "gain_kind", "max_deg", "interpret",
+    "variant"))
 def _refine_single_jit(g, labels, key, lmax, taus, *, k, patience, max_inner,
-                       gain_kind, max_deg, interpret):
+                       gain_kind, max_deg, interpret, variant):
     _count_trace("single")
     ev = edge_view_from_graph(g)
     cm = SingleComm(g.n)
     gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+    var = resolve_variant(variant)
+    if var.mode == "lp":
+        return engine.lp_level(cm, gb, ev, labels, key, lmax, k)
     return engine.refine_level(cm, gb, ev, labels, key, lmax, taus, k,
-                               patience, max_inner)
+                               patience, max_inner, move_fn=var.move)
 
 
 def refine_single(g, labels, k, key, lmax, taus, *, patience=12, max_inner=64,
-                  gain="jnp", interpret=None):
-    """Fused single-device level refinement (one dispatch)."""
+                  gain="jnp", interpret=None, variant="jet"):
+    """Fused single-device level refinement (one dispatch).  ``variant``
+    names a registered move-generation rule (``refine/variants.py``);
+    lp-mode variants ignore ``taus``/``patience``/``max_inner``."""
+    resolve_variant(variant)  # fail on a typo before compiling anything
     max_deg = graph_max_deg(g) if _need_max_deg(gain) else None
     gain_kind = resolve_gain(gain, k, max_deg)
     _count_dispatch("single")
@@ -123,7 +137,7 @@ def refine_single(g, labels, k, key, lmax, taus, *, patience=12, max_inner=64,
         g, labels, key, lmax, jnp.asarray(taus, jnp.float32),
         k=k, patience=patience, max_inner=max_inner, gain_kind=gain_kind,
         max_deg=max_deg if gain_kind == "pallas" else None,
-        interpret=interpret)
+        interpret=interpret, variant=variant)
 
 
 # --------------------------------------------------------------------------
@@ -131,6 +145,8 @@ def refine_single(g, labels, k, key, lmax, taus, *, patience=12, max_inner=64,
 # --------------------------------------------------------------------------
 
 def _sharded_edge_view(src, dst, ew, nw, owned, n_local: int) -> EdgeView:
+    from repro.core.graph import PAD  # deferred: breaks the core↔refine cycle
+
     pe = jax.lax.axis_index("pe")
     my_tid = pe * n_local + jnp.arange(n_local, dtype=jnp.int32)
     return EdgeView(src=src, head=dst, live=dst != PAD, ew=ew, head_tid=dst,
@@ -139,22 +155,26 @@ def _sharded_edge_view(src, dst, ew, nw, owned, n_local: int) -> EdgeView:
 
 @lru_cache(maxsize=128)
 def _sharded_level_fn(mesh, k, n_local, n_real, patience, max_inner,
-                      gain_kind, max_deg, interpret, mode):
+                      gain_kind, max_deg, interpret, variant):
+    var = resolve_variant(variant)
+    kind = "lp" if var.mode == "lp" else "sharded"
+
     def per_pe(src, dst, ew, nw, owned, gstart, labels, key, lmax, taus):
-        _count_trace("lp" if mode == "lp" else "sharded")
+        _count_trace(kind)
         ev = _sharded_edge_view(src[0], dst[0], ew[0], nw[0], owned[0],
                                 n_local)
         cm = AllGatherComm(gstart[0], n_local, n_real)
         gb = make_gain(gain_kind, ev, k, max_deg, interpret)
-        if mode == "lp":
+        if var.mode == "lp":
             out = engine.lp_level(cm, gb, ev, labels[0], key, lmax, k)
         else:
             out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus,
-                                      k, patience, max_inner)
+                                      k, patience, max_inner,
+                                      move_fn=var.move)
         return out[None]
 
     sh = P("pe", None)
-    return jax.jit(shard_map(
+    return kind, jax.jit(shard_map(
         per_pe, mesh=mesh,
         in_specs=(sh, sh, sh, sh, sh, P("pe"), sh, P(), P(), P()),
         out_specs=sh,
@@ -163,25 +183,27 @@ def _sharded_level_fn(mesh, k, n_local, n_real, patience, max_inner,
 
 def make_refine_level_sharded(mesh, sg, k, *, rounds_taus, patience=12,
                               max_inner=64, gain="jnp", interpret=None,
-                              mode="jet"):
+                              variant="jet"):
     """Fused level refinement over a :class:`ShardedGraph`.
 
     Returns ``run(lab_sh, key, lmax) -> lab_sh`` — one dispatch per call.
-    ``rounds_taus`` is the temperature vector (ignored by ``mode="lp"``).
+    ``rounds_taus`` is the temperature vector; ``variant`` names the
+    registered move-generation rule (lp-mode variants ignore the taus).
     """
     from repro.distributed.dgraph import owned_mask
 
+    resolve_variant(variant)
     max_deg = (sharded_max_deg(sg.src, sg.dst, sg.n_local)
                if _need_max_deg(gain) else None)
     gain_kind = resolve_gain(gain, k, max_deg)
-    fn = _sharded_level_fn(
+    kind, fn = _sharded_level_fn(
         mesh, k, sg.n_local, sg.n_real, patience, max_inner, gain_kind,
-        max_deg if gain_kind == "pallas" else None, interpret, mode)
+        max_deg if gain_kind == "pallas" else None, interpret, variant)
     owned = owned_mask(sg)
     taus = jnp.asarray(rounds_taus, jnp.float32)
 
     def run(lab_sh, key, lmax):
-        _count_dispatch("lp" if mode == "lp" else "sharded")
+        _count_dispatch(kind)
         return fn(sg.src, sg.dst, sg.ew, sg.nw, owned, sg.vtx_start, lab_sh,
                   key, jnp.float32(lmax), taus)
 
@@ -191,7 +213,7 @@ def make_refine_level_sharded(mesh, sg, k, *, rounds_taus, patience=12,
 def make_lp_level_sharded(mesh, sg, k, *, gain="jnp", interpret=None):
     return make_refine_level_sharded(
         mesh, sg, k, rounds_taus=[0.0], gain=gain, interpret=interpret,
-        mode="lp")
+        variant="lp")
 
 
 # --------------------------------------------------------------------------
@@ -200,7 +222,10 @@ def make_lp_level_sharded(mesh, sg, k, *, gain="jnp", interpret=None):
 
 @lru_cache(maxsize=128)
 def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
-                   max_inner, gain_kind, max_deg, interpret, uniform_mode):
+                   max_inner, gain_kind, max_deg, interpret, uniform_mode,
+                   variant):
+    var = resolve_variant(variant)
+
     def per_pe(src, dst_code, head_gid, ew, nw, my_gid, owned, inv_perm,
                gstart, labels, key, lmax, taus):
         _count_trace("halo")
@@ -209,8 +234,12 @@ def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
         cm = HaloComm(n_pe, h_local, n_local, n_real, gstart=gstart[0],
                       inv_perm=inv_perm[0], uniform_mode=uniform_mode)
         gb = make_gain(gain_kind, ev, k, max_deg, interpret)
-        out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus, k,
-                                  patience, max_inner)
+        if var.mode == "lp":
+            out = engine.lp_level(cm, gb, ev, labels[0], key, lmax, k)
+        else:
+            out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus,
+                                      k, patience, max_inner,
+                                      move_fn=var.move)
         return out[None]
 
     sh = P("pe", None)
@@ -223,20 +252,24 @@ def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
 
 def make_refine_level_halo(mesh, hsg, k, *, rounds_taus, patience=12,
                            max_inner=64, gain="jnp", interpret=None,
-                           uniform_mode="global"):
+                           uniform_mode="global", variant="jet"):
     """Fused level refinement over a :class:`HaloShardedGraph`.
 
     ``uniform_mode="global"`` (default) draws rebalance randomness in the
     shared global-vertex-space stream — the determinism-contract setting;
     ``"fold"`` keeps the O(n_local) per-gid fold-in stream for scale runs.
+    ``variant`` names the registered move-generation rule; lp-mode variants
+    run ``engine.lp_level`` over the halo protocol (interface-only
+    exchange applies to the LP baseline too).
     """
+    resolve_variant(variant)
     max_deg = (sharded_max_deg(hsg.src, hsg.head_gid, hsg.n_local)
                if _need_max_deg(gain) else None)
     gain_kind = resolve_gain(gain, k, max_deg)
     fn = _halo_level_fn(
         mesh, k, hsg.n_local, hsg.n_real, hsg.P, hsg.h_local, patience,
         max_inner, gain_kind, max_deg if gain_kind == "pallas" else None,
-        interpret, uniform_mode)
+        interpret, uniform_mode, variant)
     taus = jnp.asarray(rounds_taus, jnp.float32)
 
     def run(lab_sh, key, lmax):

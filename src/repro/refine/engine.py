@@ -6,6 +6,8 @@ times in the repo (``core/jet.py`` + ``core/rebalance.py`` single-device,
 ``distributed/djet.py`` BSP, ``distributed/halo.py`` interface-only):
 
   * :func:`jet_move`        — candidate set M + afterburner + apply/lock;
+  * :func:`afterburner_delta` — the assumed-state cut delta every variant's
+    move filter is built from (``refine/variants.py``);
   * :func:`prob_pass`       — Alg. 1 probabilistic bucket rebalancing;
   * :func:`greedy_epoch`    — the dKaMinPar greedy rebalancer (two-stage
     top-k candidate gather + redundantly replayed global move sequence);
@@ -84,18 +86,13 @@ def cut_of(cm, ev: EdgeView, labels):
 # Jet round: candidate set + afterburner (paper §2 "Jet Refinement")
 # --------------------------------------------------------------------------
 
-def jet_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
-    """One Jet round; returns (new_labels, moved mask)."""
-    lv_e = _head_labels(cm, ev, labels)
-    own, gain, target = gb.best(ev, lv_e, labels, None)
-
-    # candidate set M: negative gains admitted up to −⌊τ·conn_own⌋
-    threshold = -jnp.floor(tau * own)
-    cand = (gain >= threshold) & (~locked) & (target != labels)
-    cand &= jnp.isfinite(gain) & ev.owned
-
-    # afterburner: exchange (g(v), target, ∈M); u precedes v iff
-    # (g(u), −u) > (g(v), −v) in the virtual order
+def afterburner_delta(cm, ev: EdgeView, labels, lv_e, gain, target, cand):
+    """Assumed-state cut delta of every candidate move: exchange
+    (g(v), target, ∈M); u precedes v iff (g(u), −u) > (g(v), −v) in the
+    virtual order, and v re-evaluates its move assuming every preceding
+    candidate neighbour has already moved.  The single copy of the
+    afterburner arithmetic — every variant's move filter
+    (``refine/variants.py``) is a predicate over this delta."""
     gmask = jnp.where(cand, gain, NEG)
     gu = cm.lookup(ev, cm.exchange(gmask), gmask)
     tu = cm.lookup(ev, cm.exchange(target), target)
@@ -110,8 +107,28 @@ def jet_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
     lown = labels[ev.src]
     delta_e = w * ((assumed == tv).astype(w.dtype)
                    - (assumed == lown).astype(w.dtype))
-    delta = jax.ops.segment_sum(delta_e, ev.src, num_segments=ev.n_local)
+    return jax.ops.segment_sum(delta_e, ev.src, num_segments=ev.n_local)
 
+
+def candidate_set(ev: EdgeView, labels, own, gain, target, tau, locked=None):
+    """Candidate set M — the single copy of the admission rule: negative
+    gains admitted up to −⌊τ·conn_own⌋, finite-gain real moves of owned
+    slots only, optionally excluding ``locked`` vertices.  Variants AND
+    extra predicates onto the returned mask."""
+    threshold = -jnp.floor(tau * own)
+    cand = (gain >= threshold) & (target != labels)
+    cand &= jnp.isfinite(gain) & ev.owned
+    if locked is not None:
+        cand &= ~locked
+    return cand
+
+
+def jet_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
+    """One Jet round; returns (new_labels, moved mask)."""
+    lv_e = _head_labels(cm, ev, labels)
+    own, gain, target = gb.best(ev, lv_e, labels, None)
+    cand = candidate_set(ev, labels, own, gain, target, tau, locked)
+    delta = afterburner_delta(cm, ev, labels, lv_e, gain, target, cand)
     move = cand & (delta >= 0.0)
     return jnp.where(move, target, labels), move
 
@@ -254,9 +271,12 @@ def rebalance_loop(cm, gb, ev: EdgeView, labels, key, lmax, k: int,
 # --------------------------------------------------------------------------
 
 def jet_inner(cm, gb, ev: EdgeView, labels, tau, lmax, key, k: int,
-              patience: int, max_inner: int):
-    """One temperature round: repeat (jet_move → rebalance_loop) until
-    `patience` consecutive failures to improve the best balanced cut."""
+              patience: int, max_inner: int, move_fn=jet_move):
+    """One temperature round: repeat (move_fn → rebalance_loop) until
+    `patience` consecutive failures to improve the best balanced cut.
+
+    ``move_fn`` is the variant's move-generation function (the
+    ``refine/variants.py`` contract; default: the Jet rule)."""
 
     def cond(s):
         _, _, _, _, since, it, _ = s
@@ -265,7 +285,7 @@ def jet_inner(cm, gb, ev: EdgeView, labels, tau, lmax, key, k: int,
     def body(s):
         labels, locked, best_labels, best_cut, since, it, key = s
         key, k_reb = jax.random.split(key)
-        labels, moved = jet_move(cm, gb, ev, labels, locked, tau, k)
+        labels, moved = move_fn(cm, gb, ev, labels, locked, tau, k)
         labels, ov, _, _ = rebalance_loop(cm, gb, ev, labels, k_reb, lmax, k)
         cut = cut_of(cm, ev, labels)
         improved = (ov <= 0) & (cut < best_cut)
@@ -286,16 +306,17 @@ def jet_inner(cm, gb, ev: EdgeView, labels, tau, lmax, key, k: int,
 
 
 def refine_level(cm, gb, ev: EdgeView, labels, key, lmax, taus, k: int,
-                 patience: int, max_inner: int):
+                 patience: int, max_inner: int, move_fn=jet_move):
     """Whole-level d4xJet: the temperature rounds are a ``fori_loop`` over
     the (traced) ``taus`` vector, so the level is one compiled program —
-    O(1) dispatches instead of O(rounds · inner · epochs)."""
+    O(1) dispatches instead of O(rounds · inner · epochs).  ``move_fn``
+    selects the refinement variant's move-generation rule."""
 
     def round_body(i, carry):
         labels, key = carry
         key, sub = jax.random.split(key)
         labels = jet_inner(cm, gb, ev, labels, taus[i], lmax, sub, k,
-                           patience, max_inner)
+                           patience, max_inner, move_fn=move_fn)
         return labels, key
 
     labels, _ = jax.lax.fori_loop(0, taus.shape[0], round_body, (labels, key))

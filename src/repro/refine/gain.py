@@ -29,7 +29,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import PAD
 from repro.kernels.gain.kernel import LANE, gain_scoreboard_pallas
 from repro.kernels.gain.kernel import round_up as _round_up
 
@@ -140,6 +139,8 @@ class PallasGain:
         self.n_pad = n_pad
 
     def best(self, ev, lv_e, labels, capacity):
+        from repro.core.graph import PAD  # deferred: core↔refine cycle
+
         k_pad = _round_up(self.k, LANE)
         cap_k = (
             jnp.full((self.k,), jnp.inf, jnp.float32)

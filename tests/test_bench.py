@@ -1,0 +1,89 @@
+"""The bench harness contract (benchmarks/bench.py + common.py): the sweep
+produces cells that satisfy the BENCH_quality.json schema, and the
+validator actually rejects the failure modes CI's bench-smoke job gates on
+(missing keys, wrong types, NaN/inf metrics, version drift)."""
+
+import math
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(ROOT))
+
+from benchmarks import bench  # noqa: E402
+from benchmarks.common import (  # noqa: E402
+    BENCH_CELL_KEYS,
+    BENCH_SCHEMA_VERSION,
+    bench_graph,
+    validate_bench,
+)
+
+
+def _cell(**over):
+    cell = {
+        "graph": "grid2d_24", "variant": "jet", "p": 1, "k": 4,
+        "n": 576, "m": 2208, "cut": 86.0, "imbalance": 0.0278, "levels": 4,
+        "coarsen_us": 100.0, "init_us": 10.0, "refine_us": 200.0,
+        "total_us": 400.0, "dispatch_count": 8,
+        "dispatches": {"sharded": 4, "single": 4},
+    }
+    cell.update(over)
+    return cell
+
+
+def _doc(cells):
+    return {"schema_version": BENCH_SCHEMA_VERSION, "cells": cells}
+
+
+def test_validator_accepts_good_doc():
+    assert validate_bench(_doc([_cell()])) == []
+
+
+def test_validator_rejects_failure_modes():
+    assert validate_bench("nope")
+    assert validate_bench({"schema_version": BENCH_SCHEMA_VERSION})
+    assert validate_bench(_doc([]))
+    assert any("schema_version" in e
+               for e in validate_bench({"schema_version": 99,
+                                        "cells": [_cell()]}))
+    for key in BENCH_CELL_KEYS:
+        bad = _cell()
+        del bad[key]
+        assert any(key in e for e in validate_bench(_doc([bad]))), key
+    assert any("not finite" in e
+               for e in validate_bench(_doc([_cell(cut=math.nan)])))
+    assert any("not finite" in e
+               for e in validate_bench(_doc([_cell(refine_us=math.inf)])))
+    assert any("type" in e
+               for e in validate_bench(_doc([_cell(levels="4")])))
+    assert any("negative cut" in e
+               for e in validate_bench(_doc([_cell(cut=-1.0)])))
+    assert any("dispatches" in e
+               for e in validate_bench(_doc([_cell(dispatches={"x": 1.5})])))
+
+
+def test_bench_graph_lookup():
+    g = bench_graph("grid2d_24")
+    assert g.n == 576
+    with pytest.raises(ValueError, match="unknown bench graph"):
+        bench_graph("no_such_graph")
+
+
+def test_sweep_produces_schema_valid_cells():
+    """One real (tiny) sweep cell per variant family through the subprocess
+    runner — the exact code path CI's bench-smoke job exercises."""
+    cells, failures = bench.run_sweep(
+        ps=(1,), graphs=("grid2d_24",), variants=("jet", "lp"), k=4, seed=0,
+        max_inner=2, coarsen_until=64, timeout=1200)
+    assert not failures, failures
+    doc = _doc(cells)
+    assert validate_bench(doc) == [], validate_bench(doc)
+    assert {c["variant"] for c in cells} == {"jet", "lp"}
+    for c in cells:
+        assert c["dispatch_count"] > 0
+        assert c["refine_us"] > 0
+        assert c["levels"] >= 2
+    summary = bench.summarize(cells)
+    assert summary["jet"]["gmean_cut_ratio_vs_jet"] == pytest.approx(1.0)

@@ -1,0 +1,144 @@
+"""The refinement-variant registry (refine/variants.py) and its
+determinism contract: every registered variant replays the same move
+sequence across {gain: jnp, pallas-interpret} × {comm: single, all-gather,
+halo} × P ∈ {1, 8} from one seed — the same matrix the jet rule is pinned
+to in test_refine_matrix.py, one subprocess sweep per variant family.
+
+Plus the API-boundary contract: an unknown ``refiner=`` raises ValueError
+listing the registered variants at both ``partition`` and ``dpartition``
+(not deep in driver selection), and the paper-configuration aliases resolve
+to the same compiled rules as their canonical names."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.refine.variants import (
+    ALIASES,
+    Variant,
+    register,
+    registered_variants,
+    resolve_variant,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.graphs import grid2d
+from repro.core import partition
+from repro.distributed import dpartition
+from repro.refine.variants import registered_variants
+
+g = grid2d(24, 24)
+k = 4
+KW = dict(seed=0, max_inner=4, coarsen_until=64)
+
+out = {}
+for variant in registered_variants():
+    ref = np.asarray(partition(g, k=k, refiner=variant, **KW).labels)
+    cells = {
+        "single:P1:pallas": partition(g, k=k, refiner=variant, gain="pallas",
+                                      **KW).labels,
+        "allgather:P8:jnp": dpartition(g, k=k, P=8, refiner=variant,
+                                       **KW).labels,
+        "halo:P1:jnp": dpartition(g, k=k, P=1, refiner=variant, halo=True,
+                                  **KW).labels,
+        "halo:P8:pallas": dpartition(g, k=k, P=8, refiner=variant, halo=True,
+                                     gain="pallas", **KW).labels,
+    }
+    out[variant] = {name: bool(np.array_equal(ref, np.asarray(lab)))
+                    for name, lab in cells.items()}
+
+# alias identity: the paper-configuration names replay their canonical rule
+out["__aliases__"] = {
+    "d4xjet==jet": bool(np.array_equal(
+        np.asarray(partition(g, k=k, refiner="d4xjet", **KW).labels),
+        np.asarray(partition(g, k=k, refiner="jet", **KW).labels))),
+    "dlp==lp": bool(np.array_equal(
+        np.asarray(partition(g, k=k, refiner="dlp", **KW).labels),
+        np.asarray(partition(g, k=k, refiner="lp", **KW).labels))),
+}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
+
+
+def test_every_variant_bit_identical_across_backends(matrix):
+    """Per registered variant: gain × comm × P replays one move sequence."""
+    bad = [f"{variant}:{cell}"
+           for variant, cells in matrix.items() if variant != "__aliases__"
+           for cell, eq in cells.items() if not eq]
+    assert not bad, f"cells diverging from the variant's single:P1:jnp: {bad}"
+    assert set(matrix) - {"__aliases__"} == set(registered_variants())
+
+
+def test_aliases_replay_canonical_rules(matrix):
+    assert matrix["__aliases__"] == {"d4xjet==jet": True, "dlp==lp": True}
+
+
+# ---- registry + API-boundary behaviour (in-process, fast) -----------------
+
+def test_registry_contents():
+    assert registered_variants() == ("jet", "jet_h", "jetlp", "lp")
+    assert set(ALIASES) == {"d4xjet", "djet", "dlp"}
+    assert resolve_variant("d4xjet") == resolve_variant("jet")
+    assert resolve_variant("djet").rounds == 1
+    assert resolve_variant("djet").move is resolve_variant("jet").move
+    assert resolve_variant("dlp").mode == "lp"
+    for name in registered_variants():
+        v = resolve_variant(name)
+        assert v.name == name
+        assert (v.move is None) == (v.mode == "lp")
+
+
+def test_register_rejects_bad_variants():
+    with pytest.raises(ValueError, match="already registered"):
+        register(Variant("jet", "jet", lambda *a: None, 4))
+    with pytest.raises(ValueError, match="mode"):
+        register(Variant("new", "bogus-mode", lambda *a: None, 4))
+    with pytest.raises(ValueError, match="move function"):
+        register(Variant("new", "jet", None, 4))
+
+
+def _assert_lists_registry(err: ValueError):
+    msg = str(err)
+    for name in registered_variants():
+        assert name in msg, f"{name!r} missing from error: {msg}"
+    for alias in ALIASES:
+        assert alias in msg, f"alias {alias!r} missing from error: {msg}"
+
+
+def test_unknown_refiner_partition_raises_at_entry():
+    from repro.core import partition
+    from repro.graphs import grid2d
+
+    with pytest.raises(ValueError, match="unknown refiner 'nope'") as exc:
+        partition(grid2d(4, 4), k=2, refiner="nope")
+    _assert_lists_registry(exc.value)
+
+
+def test_unknown_refiner_dpartition_raises_at_entry():
+    from repro.distributed import dpartition
+    from repro.graphs import grid2d
+
+    with pytest.raises(ValueError, match="unknown refiner 'jet-lp'") as exc:
+        dpartition(grid2d(4, 4), k=2, P=1, refiner="jet-lp")
+    _assert_lists_registry(exc.value)
