@@ -55,10 +55,12 @@ for gname in cfg["graphs"]:
         t0 = time.perf_counter()
         r = dpartition(g, k=cfg["k"], P=cfg["p"], seed=cfg["seed"],
                        refiner=variant, max_inner=cfg["max_inner"],
-                       coarsen_until=cfg["coarsen_until"], timing=True)
+                       coarsen_until=cfg["coarsen_until"], timing=True,
+                       schedule=cfg["schedule"])
         total_s = time.perf_counter() - t0
         cells.append({
             "graph": gname, "variant": variant, "p": cfg["p"], "k": cfg["k"],
+            "schedule": cfg["schedule"],
             "n": int(g.n), "m": int(g.m),
             "cut": float(r.cut), "imbalance": float(r.imbalance),
             "levels": int(r.levels),
@@ -75,7 +77,7 @@ print("RESULT::" + json.dumps(cells))
 
 
 def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
-              timeout=3600):
+              timeout=3600, schedule="constant"):
     """Run the sweep, one subprocess per P; returns (cells, failures)."""
     cells, failures = [], []
     env = dict(os.environ, PYTHONPATH=os.pathsep.join([SRC, ROOT]),
@@ -83,7 +85,7 @@ def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
     for p in ps:
         cfg = {"p": p, "graphs": list(graphs), "variants": list(variants),
                "k": k, "seed": seed, "max_inner": max_inner,
-               "coarsen_until": coarsen_until}
+               "coarsen_until": coarsen_until, "schedule": schedule}
         try:
             proc = subprocess.run(
                 [sys.executable, "-c", CHILD, json.dumps(cfg)],
@@ -107,17 +109,20 @@ def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
 
 def summarize(cells, baseline="jet"):
     """Per-variant geometric-mean cut ratio vs the ``jet`` baseline over
-    the (graph, p) cells both completed — the headline trajectory number."""
+    the (graph, p, schedule) cells both completed — the headline trajectory
+    number."""
     from benchmarks.common import gmean
 
-    base = {(c["graph"], c["p"]): c["cut"] for c in cells
-            if c["variant"] == baseline}
+    def cell_key(c):
+        return (c["graph"], c["p"], c.get("schedule", "constant"))
+
+    base = {cell_key(c): c["cut"] for c in cells if c["variant"] == baseline}
     out = {}
     for variant in sorted({c["variant"] for c in cells}):
-        ratios = [c["cut"] / max(base[(c["graph"], c["p"])], 1e-9)
+        ratios = [c["cut"] / max(base[cell_key(c)], 1e-9)
                   for c in cells
-                  if c["variant"] == variant and (c["graph"], c["p"]) in base
-                  and base[(c["graph"], c["p"])] > 0]
+                  if c["variant"] == variant and cell_key(c) in base
+                  and base[cell_key(c)] > 0]
         if ratios:
             out[variant] = {"gmean_cut_ratio_vs_jet": gmean(ratios),
                             "cells": len(ratios)}
@@ -144,6 +149,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-inner", type=int, default=None,
                     help="inner-loop bound (default: smoke 6 / full 12)")
+    ap.add_argument("--schedule", default="constant",
+                    help="per-level tolerance schedule for every cell "
+                         "(repro.refine.schedule; the schedule column of "
+                         "BENCH_quality.json)")
     args = ap.parse_args(argv)
 
     variants = (tuple(args.variants.split(","))
@@ -151,6 +160,11 @@ def main(argv=None) -> int:
     for v in variants:
         from repro.refine.variants import resolve_variant
         resolve_variant(v)  # fail fast on a typo
+    from repro.refine.schedule import resolve_schedule
+    # fail fast on a typo AND canonicalize aliases (unconstrained-then-snap
+    # → snap): the string is recorded in every cell and keys the snapshot
+    # diff, so equivalent runs must produce comparable documents
+    args.schedule = resolve_schedule(args.schedule).mode
     ps = (tuple(int(x) for x in args.ps.split(","))
           if args.ps else (SMOKE_PS if args.smoke else FULL_PS))
     graphs = (tuple(args.graphs.split(","))
@@ -160,9 +174,11 @@ def main(argv=None) -> int:
     coarsen_until = 64 if args.smoke else None
 
     print(f"bench: variants={variants} ps={ps} graphs={graphs} "
-          f"k={args.k} max_inner={max_inner}", flush=True)
+          f"k={args.k} max_inner={max_inner} schedule={args.schedule}",
+          flush=True)
     cells, failures = run_sweep(ps, graphs, variants, args.k, args.seed,
-                                max_inner, coarsen_until)
+                                max_inner, coarsen_until,
+                                schedule=args.schedule)
 
     import jax
     import numpy as np
@@ -171,13 +187,16 @@ def main(argv=None) -> int:
         "smoke": bool(args.smoke),
         "config": {"variants": list(variants), "ps": list(ps),
                    "graphs": list(graphs), "k": args.k, "seed": args.seed,
-                   "max_inner": max_inner, "coarsen_until": coarsen_until},
+                   "max_inner": max_inner, "coarsen_until": coarsen_until,
+                   "schedule": args.schedule},
         "versions": {"jax": jax.__version__, "numpy": np.__version__,
                      "python": sys.version.split()[0]},
         "summary": summarize(cells),
         "cells": cells,
     }
-    violations = [] if not cells else validate_bench(doc)
+    # an empty sweep must flow through the validator too — "no cells" is a
+    # schema violation like any other, not a silently-accepted document
+    violations = validate_bench(doc)
 
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
@@ -197,9 +216,6 @@ def main(argv=None) -> int:
     for msg in failures:
         ok = False
         print(f"SWEEP FAILURE: {msg}", file=sys.stderr)
-    if not cells:
-        ok = False
-        print("SCHEMA VIOLATION: no cells produced", file=sys.stderr)
     for msg in violations:
         ok = False
         print(f"SCHEMA VIOLATION: {msg}", file=sys.stderr)

@@ -48,13 +48,16 @@ def bench_graph(name):
 
 # ---- BENCH_quality.json schema (benchmarks/README.md documents it) --------
 
-BENCH_SCHEMA_VERSION = 1
+# v2: + per-cell "schedule" column (the per-level tolerance schedule the
+# cell ran under — repro.refine.schedule)
+BENCH_SCHEMA_VERSION = 2
 
 # per-cell required keys -> allowed types; every numeric value must also be
 # finite (NaN/inf in any metric fails CI's bench-smoke job)
 BENCH_CELL_KEYS = {
     "graph": str,
     "variant": str,
+    "schedule": str,
     "p": int,
     "k": int,
     "n": int,
@@ -84,7 +87,10 @@ def validate_bench(doc) -> list[str]:
             f"expected {BENCH_SCHEMA_VERSION}")
     cells = doc.get("cells")
     if not isinstance(cells, list) or not cells:
-        return errs + ["cells missing/empty"]
+        # an empty results list is a failed run, never a valid document —
+        # callers must not special-case it around the validator
+        return errs + ["cells missing/empty: a bench document with no "
+                       "results is invalid"]
     for i, cell in enumerate(cells):
         if not isinstance(cell, dict):
             errs.append(f"cells[{i}] is {type(cell).__name__}")

@@ -1,9 +1,15 @@
 """Multilevel V-cycle driver: coarsen → initial partition → uncoarsen+refine.
 
 ``refiner`` names a registered refinement variant
-(``repro.refine.variants``): ``jet`` / ``jetlp`` / ``jet_h`` / ``lp``, plus
-the paper-configuration aliases ``d4xjet`` (= jet, 4 temperature rounds,
-the default), ``djet`` (= jet, 1 round) and ``dlp`` (= lp).
+(``repro.refine.variants``): ``jet`` / ``jetlp`` / ``jet_h`` / ``jet_v`` /
+``lp``, plus the paper-configuration aliases ``d4xjet`` (= jet, 4
+temperature rounds, the default), ``djet`` (= jet, 1 round), ``djet_v``
+(= jet_v, 1 round) and ``dlp`` (= lp).
+
+``schedule`` names a per-level imbalance-tolerance schedule
+(``repro.refine.schedule``): ``constant`` (default) / ``geometric`` /
+``snap`` — coarse levels refine against their own ``eps_l ≥ eps`` and only
+the finest level is held to the final ``eps``.
 """
 
 from __future__ import annotations
@@ -18,9 +24,19 @@ from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance
 from repro.core.refine import jet_refine, lp_refine_level
+from repro.refine.drivers import level_tolerances
+from repro.refine.schedule import ToleranceSchedule, resolve_schedule
 from repro.refine.variants import Variant, resolve_variant
 
 Refiner = str  # a registered variant or alias name — see repro.refine.variants
+
+
+def level_trace_entry(n, eps, imb) -> dict:
+    """The single home of the per-level trace record shape
+    (``PartitionResult.level_trace`` / ``DPartitionResult.level_trace``;
+    the P-invariance tests compare these dicts for exact equality across
+    paths, so every recorder must build them here)."""
+    return {"n": int(n), "eps": float(eps), "imbalance": float(imb)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +45,11 @@ class PartitionResult:
     cut: float
     imbalance: float
     levels: int
+    # per-level tolerances eps_l actually targeted, coarsest → finest
+    level_eps: tuple = ()
+    # per-level {n, eps, imbalance} after each level's refinement
+    # (coarsest → finest), populated by partition(trace_levels=True)
+    level_trace: tuple | None = None
 
 
 def _refine(g: Graph, labels, k, eps, key, var: Variant, patience: int,
@@ -50,6 +71,9 @@ def partition(
     patience: int = 12,
     max_inner: int = 64,
     gain: str = "jnp",
+    schedule: str | ToleranceSchedule = "constant",
+    eps_coarse: float | None = None,
+    trace_levels: bool = False,
 ) -> PartitionResult:
     """Full multilevel partition of ``g`` into ``k`` blocks.
 
@@ -57,28 +81,47 @@ def partition(
     docstring; unknown names raise ``ValueError`` listing the registry).
     ``gain`` selects the refinement gain backend ("jnp", "pallas" or
     "auto") — see ``repro.refine``; partitions are bit-identical across
-    backends on integer-weight graphs."""
+    backends on integer-weight graphs.  ``schedule`` names the per-level
+    imbalance-tolerance schedule (``repro.refine.schedule``); the initial
+    partition and the finest level always target the final ``eps``.
+    ``trace_levels=True`` records per-level imbalance after each level's
+    refinement in ``PartitionResult.level_trace`` (adds one host sync per
+    level — the property suite's hook)."""
     var = resolve_variant(refiner)
+    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
 
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse, coarsen_until=coarsen_until)
+    n_levels = len(levels) + 1
+    eps_l = level_tolerances(sched, eps, n_levels, k)
 
     labels = initial_partition(coarsest, k, eps, k_init)
 
-    key, sub = jax.random.split(key)
-    labels = _refine(coarsest, labels, k, eps, sub, var, patience,
-                     max_inner, gain)
+    trace: list[dict] = []
 
-    for fine, mapping in reversed(levels):
+    def _record(lvl_g, lab, e):
+        if trace_levels:
+            trace.append(level_trace_entry(lvl_g.n, e,
+                                           imbalance(lvl_g, lab, k)))
+
+    key, sub = jax.random.split(key)
+    labels = _refine(coarsest, labels, k, eps_l[0], sub, var, patience,
+                     max_inner, gain)
+    _record(coarsest, labels, eps_l[0])
+
+    for i, (fine, mapping) in enumerate(reversed(levels), start=1):
         labels = labels[mapping]  # project coarse labels to the finer level
         key, sub = jax.random.split(key)
-        labels = _refine(fine, labels, k, eps, sub, var, patience,
+        labels = _refine(fine, labels, k, eps_l[i], sub, var, patience,
                          max_inner, gain)
+        _record(fine, labels, eps_l[i])
 
     return PartitionResult(
         labels=labels,
         cut=float(edge_cut(g, labels)),
         imbalance=float(imbalance(g, labels, k)),
-        levels=len(levels) + 1,
+        levels=n_levels,
+        level_eps=eps_l,
+        level_trace=tuple(trace) if trace_levels else None,
     )

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from repro.core import coarsen as C
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
+from repro.core.multilevel import level_trace_entry
 from repro.core.partition import edge_cut, imbalance, l_max
 from repro.core.refine import temperature_schedule
 from repro.distributed.dcoarsen import dcoarsen_hierarchy, duncoarsen
@@ -50,9 +51,11 @@ from repro.distributed.dgraph import (
     sharded_to_graph,
 )
 from repro.refine.drivers import (
+    level_tolerances,
     make_refine_level_halo,
     make_refine_level_sharded,
 )
+from repro.refine.schedule import ToleranceSchedule, resolve_schedule
 from repro.refine.variants import Variant, resolve_variant
 from repro.sharding.compat import make_mesh
 
@@ -68,6 +71,11 @@ class DPartitionResult:
     # (timing adds block_until_ready syncs at the phase boundaries, so it is
     # opt-in; keys: coarsen_s, init_s, refine_s — see benchmarks/bench.py)
     timings: dict | None = None
+    # per-level tolerances eps_l actually targeted, coarsest → finest
+    level_eps: tuple = ()
+    # per-level {n, eps, imbalance} after each level's refinement
+    # (coarsest → finest), populated by dpartition(trace_levels=True)
+    level_trace: tuple | None = None
 
 
 class _PhaseTimer:
@@ -107,6 +115,15 @@ def _dl_max(sg: ShardedGraph, k: int, eps: float):
     """L_max from the sharded level — same value as l_max(g, k, eps) (total
     node weight is invariant under contraction)."""
     return (1.0 + eps) * jnp.ceil(jnp.sum(sg.nw) / k)
+
+
+def _dimbalance(sg: ShardedGraph, lab_sh, k: int) -> float:
+    """Imbalance of a sharded labelling — padding slots carry zero weight,
+    so they contribute nothing to the block weights."""
+    bw = jax.ops.segment_sum(sg.nw.reshape(-1),
+                             lab_sh.reshape(-1).astype(jnp.int32),
+                             num_segments=k)
+    return float(jnp.max(bw) / (jnp.sum(sg.nw) / k) - 1.0)
 
 
 def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key,
@@ -175,36 +192,48 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, var: Variant,
 
 def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, var,
                              coarsen_until, patience, max_inner, halo, gain,
-                             halo_uniform, timer):
+                             halo_uniform, timer, sched, trace_levels):
     """Fallback: centralised coarsening, per-level re-sharded refinement."""
     timer.start()
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                            coarsen_until=coarsen_until)
     timer.stop("coarsen_s", coarsest.nw)
+    n_levels = len(levels) + 1
+    eps_l = level_tolerances(sched, eps, n_levels, k)
 
     timer.start()
     labels = initial_partition(coarsest, k, eps, k_init)
     timer.stop("init_s", labels)
 
+    trace: list[dict] = []
+
+    def _record(lvl_g, lab, e):
+        if trace_levels:
+            trace.append(level_trace_entry(lvl_g.n, e,
+                                           imbalance(lvl_g, lab, k)))
+
     timer.start()
     key, sub = jax.random.split(key)
-    labels = _drefine_level(mesh, coarsest, labels, k, eps, sub, var,
+    labels = _drefine_level(mesh, coarsest, labels, k, eps_l[0], sub, var,
                             patience, max_inner, halo=halo, gain=gain,
                             halo_uniform=halo_uniform)
+    _record(coarsest, labels, eps_l[0])
 
-    for fine, mapping in reversed(levels):
+    for i, (fine, mapping) in enumerate(reversed(levels), start=1):
         labels = labels[mapping]
         key, sub = jax.random.split(key)
-        labels = _drefine_level(mesh, fine, labels, k, eps, sub, var,
+        labels = _drefine_level(mesh, fine, labels, k, eps_l[i], sub, var,
                                 patience, max_inner, halo=halo, gain=gain,
                                 halo_uniform=halo_uniform)
+        _record(fine, labels, eps_l[i])
     timer.stop("refine_s", labels)
-    return labels, len(levels) + 1
+    return labels, n_levels, eps_l, trace
 
 
 def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
                                 var, coarsen_until, patience, max_inner,
-                                halo, gain, halo_uniform, timer):
+                                halo, gain, halo_uniform, timer, sched,
+                                trace_levels):
     """On-device V-cycle: graph is sharded once; every level stays sharded.
 
     With halo=True the hierarchy emits device-derived halo metadata per
@@ -221,6 +250,8 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
                                               coarsen_until=coarsen_until)
         halos = [None] * (len(levels) + 1)
     timer.stop("coarsen_s", coarsest.nw)
+    n_levels = len(levels) + 1
+    eps_l = level_tolerances(sched, eps, n_levels, k)
 
     # initial partitioning on the (small) centralised coarsest graph
     timer.start()
@@ -229,24 +260,34 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
     lab_sh = labels_to_sharded(coarsest, labels)
     timer.stop("init_s", lab_sh)
 
+    trace: list[dict] = []
+
+    def _record(lvl_sg, lab, e):
+        if trace_levels:
+            trace.append(level_trace_entry(lvl_sg.n_real, e,
+                                           _dimbalance(lvl_sg, lab, k)))
+
     timer.start()
     key, sub = jax.random.split(key)
     lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
-                              _dl_max(coarsest, k, eps), sub, var,
+                              _dl_max(coarsest, k, eps_l[0]), sub, var,
                               patience, max_inner, gain=gain, hsg=halos[-1],
                               halo_uniform=halo_uniform)
+    _record(coarsest, lab_sh, eps_l[0])
 
     for i in reversed(range(len(levels))):
         fine_sg, map_sh, coarse_sg = levels[i]
         lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
         key, sub = jax.random.split(key)
+        depth = len(levels) - i  # 1 (coarsest-but-one) … n_levels-1 (finest)
         lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
-                                  _dl_max(fine_sg, k, eps), sub, var,
+                                  _dl_max(fine_sg, k, eps_l[depth]), sub, var,
                                   patience, max_inner, gain=gain,
                                   hsg=halos[i], halo_uniform=halo_uniform)
+        _record(fine_sg, lab_sh, eps_l[depth])
     timer.stop("refine_s", lab_sh)
 
-    return labels_from_sharded(sg0, lab_sh), len(levels) + 1
+    return labels_from_sharded(sg0, lab_sh), n_levels, eps_l, trace
 
 
 def dpartition(
@@ -264,6 +305,9 @@ def dpartition(
     gain: str = "jnp",
     halo_uniform: str = "global",
     timing: bool = False,
+    schedule: str | ToleranceSchedule = "constant",
+    eps_coarse: float | None = None,
+    trace_levels: bool = False,
 ) -> DPartitionResult:
     """Distributed multilevel partition; ``halo=True`` composes with either
     coarsening path (the halo layout is derived per level from the sharded
@@ -275,8 +319,19 @@ def dpartition(
     P-invariant but its own stream — see DESIGN.md §2).  ``timing=True``
     populates ``DPartitionResult.timings`` with per-phase wall seconds
     (coarsen_s / init_s / refine_s) at the cost of phase-boundary syncs —
-    the benchmark harness's hook (benchmarks/bench.py)."""
+    the benchmark harness's hook (benchmarks/bench.py).
+
+    ``schedule`` names the per-level imbalance-tolerance schedule
+    (``repro.refine.schedule``: ``constant`` / ``geometric`` / ``snap``) —
+    coarse levels rebalance against their own ``eps_l ≥ eps``, only the
+    finest level is held to the final ``eps``; the per-level value rides
+    into the fused level program's traced ``lmax`` scalar, so a
+    non-constant schedule adds no dispatches.  ``trace_levels=True``
+    records per-level {n, eps, imbalance} in
+    ``DPartitionResult.level_trace`` (one host sync per level — the
+    property suite's hook)."""
     var = resolve_variant(refiner)
+    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
     if coarsen is None:
         coarsen = "sharded"  # old auto default; halo no longer forces "host"
     if coarsen not in ("sharded", "host"):
@@ -287,13 +342,15 @@ def dpartition(
     timer = _PhaseTimer(timing)
 
     if coarsen == "host":
-        labels, n_levels = _dpartition_host_coarsen(
+        labels, n_levels, eps_l, trace = _dpartition_host_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform, timer)
+            patience, max_inner, halo, gain, halo_uniform, timer, sched,
+            trace_levels)
     else:
-        labels, n_levels = _dpartition_sharded_coarsen(
+        labels, n_levels, eps_l, trace = _dpartition_sharded_coarsen(
             mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform, timer)
+            patience, max_inner, halo, gain, halo_uniform, timer, sched,
+            trace_levels)
 
     return DPartitionResult(
         labels=labels,
@@ -302,4 +359,6 @@ def dpartition(
         levels=n_levels,
         P=P_,
         timings=timer.result(),
+        level_eps=eps_l,
+        level_trace=tuple(trace) if trace_levels else None,
     )

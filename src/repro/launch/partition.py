@@ -10,6 +10,7 @@ import time
 
 from repro.core import partition
 from repro.graphs import BENCHMARK_SET, generate
+from repro.refine.schedule import SCHEDULE_ALIASES, SCHEDULES, resolve_schedule
 from repro.refine.variants import ALIASES, registered_variants
 
 
@@ -20,12 +21,21 @@ def main():
     ap.add_argument("--eps", type=float, default=0.03)
     ap.add_argument("--refiner", default="d4xjet",
                     choices=sorted((*registered_variants(), *ALIASES)))
+    ap.add_argument("--schedule", default="constant",
+                    choices=sorted((*SCHEDULES, *SCHEDULE_ALIASES)),
+                    help="per-level imbalance-tolerance schedule "
+                         "(repro.refine.schedule)")
+    ap.add_argument("--eps-coarse", type=float, default=None,
+                    help="coarsest-level tolerance of the geometric schedule")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", type=int, default=0,
                     help="run refinement under shard_map with P forced host devices")
     ap.add_argument("--halo", action="store_true",
                     help="interface-only halo exchange (distributed fast path)")
     args = ap.parse_args()
+    # canonicalize aliases (unconstrained-then-snap → snap): the string is
+    # echoed in the output JSON, where it keys cross-run comparisons
+    args.schedule = resolve_schedule(args.schedule).mode
 
     if args.distributed:
         import os
@@ -38,17 +48,21 @@ def main():
         g = generate(args.graph)
         t0 = time.time()
         res = dpartition(g, k=args.k, P=args.distributed, eps=args.eps,
-                         seed=args.seed, refiner=args.refiner, halo=args.halo)
+                         seed=args.seed, refiner=args.refiner, halo=args.halo,
+                         schedule=args.schedule, eps_coarse=args.eps_coarse)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    P=res.P, sec=round(time.time() - t0, 2))
     else:
         g = generate(args.graph)
         t0 = time.time()
         res = partition(g, k=args.k, eps=args.eps, seed=args.seed,
-                        refiner=args.refiner)
+                        refiner=args.refiner, schedule=args.schedule,
+                        eps_coarse=args.eps_coarse)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    sec=round(time.time() - t0, 2))
-    out.update(graph=args.graph, n=g.n, m=g.m, k=args.k, refiner=args.refiner)
+    out.update(graph=args.graph, n=g.n, m=g.m, k=args.k,
+               refiner=args.refiner, schedule=args.schedule,
+               level_eps=[round(e, 6) for e in res.level_eps])
     print(json.dumps(out))
 
 

@@ -9,11 +9,17 @@ from repro.refine.comm import (  # noqa: F401
     edge_view_from_graph,
 )
 from repro.refine.drivers import (  # noqa: F401
+    level_tolerances,
     make_lp_level_sharded,
     make_refine_level_halo,
     make_refine_level_sharded,
     refine_single,
     reset_counters,
+)
+from repro.refine.schedule import (  # noqa: F401
+    SCHEDULES,
+    ToleranceSchedule,
+    resolve_schedule,
 )
 from repro.refine.variants import (  # noqa: F401
     Variant,

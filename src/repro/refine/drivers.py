@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.refine import engine
+from repro.refine.schedule import ToleranceSchedule, resolve_schedule
 from repro.refine.comm import (
     AllGatherComm,
     EdgeView,
@@ -73,6 +74,25 @@ def _count_trace(kind: str) -> None:
     global TRACE_COUNT
     TRACE_COUNT += 1
     TRACES[kind] = TRACES.get(kind, 0) + 1
+
+
+# --------------------------------------------------------------------------
+# per-level tolerance resolution (refine/schedule.py)
+# --------------------------------------------------------------------------
+
+def level_tolerances(schedule: str | ToleranceSchedule, eps: float,
+                     n_levels: int, k: int,
+                     eps_coarse: float | None = None) -> tuple[float, ...]:
+    """Resolve one V-cycle's per-level imbalance tolerances (index 0 =
+    coarsest … ``n_levels − 1`` = finest).
+
+    Each fused level program then receives its own static ``(taus, eps_l)``
+    pair: the τ vector stays the variant's temperature schedule, and the
+    level's ``L_max`` is computed from ``eps_l`` instead of the single
+    global tolerance.  ``eps_l`` is a host-side float feeding an
+    already-traced scalar argument, so a non-constant schedule adds no host
+    round-trips and no retraces."""
+    return resolve_schedule(schedule, eps_coarse).eps_levels(eps, n_levels, k)
 
 
 # --------------------------------------------------------------------------

@@ -86,20 +86,38 @@ def cut_of(cm, ev: EdgeView, labels):
 # Jet round: candidate set + afterburner (paper §2 "Jet Refinement")
 # --------------------------------------------------------------------------
 
-def afterburner_delta(cm, ev: EdgeView, labels, lv_e, gain, target, cand):
+def afterburner_delta(cm, ev: EdgeView, labels, lv_e, gain, target, cand,
+                      order: str = "gain"):
     """Assumed-state cut delta of every candidate move: exchange
     (g(v), target, ∈M); u precedes v iff (g(u), −u) > (g(v), −v) in the
     virtual order, and v re-evaluates its move assuming every preceding
     candidate neighbour has already moved.  The single copy of the
     afterburner arithmetic — every variant's move filter
-    (``refine/variants.py``) is a predicate over this delta."""
-    gmask = jnp.where(cand, gain, NEG)
-    gu = cm.lookup(ev, cm.exchange(gmask), gmask)
+    (``refine/variants.py``) is a predicate over this delta.
+
+    ``order`` picks the virtual order: ``"gain"`` (the Jet paper's
+    (gain desc, id asc) order) or ``"vertex"`` (plain global-vertex-id
+    order, the Jet_v flavour — the gain exchange is skipped).  The
+    per-round no-cut-increase guarantee is specific to the gain order
+    (the proof needs predecessors to have no smaller gain); the vertex
+    order trades it for one fewer exchange and relies on the level
+    driver's best-balanced tracking instead.  Both orders are
+    order-isomorphic to global vertex ids in every backend, so the
+    determinism contract holds for either."""
     tu = cm.lookup(ev, cm.exchange(target), target)
     cu = cm.lookup(ev, cm.exchange(cand), cand)
 
-    gv = gain[ev.src]
-    precede = cu & ((gu > gv) | ((gu == gv) & (ev.head_tid < ev.my_tid[ev.src])))
+    if order == "vertex":
+        precede = cu & (ev.head_tid < ev.my_tid[ev.src])
+    elif order == "gain":
+        gmask = jnp.where(cand, gain, NEG)
+        gu = cm.lookup(ev, cm.exchange(gmask), gmask)
+        gv = gain[ev.src]
+        precede = cu & ((gu > gv)
+                        | ((gu == gv) & (ev.head_tid < ev.my_tid[ev.src])))
+    else:
+        raise ValueError(f"afterburner order must be 'gain' or 'vertex', "
+                         f"got {order!r}")
     assumed = jnp.where(precede, tu, lv_e)
 
     w = jnp.where(ev.live, ev.ew, 0.0)

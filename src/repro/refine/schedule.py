@@ -1,0 +1,111 @@
+"""Per-level imbalance-tolerance schedules (DESIGN.md §2 "Tolerance
+schedule").
+
+The paper's unconstrained local search allows imbalance *during* refinement
+and restores it later; Jet realises this with a tolerance that tightens from
+the coarsest level to the finest, and dKaMinPar shows the per-level value
+must stay inside the fused level program to scale.  A
+:class:`ToleranceSchedule` maps (final ``eps``, level depth, level count) to
+the per-level tolerance ``eps_l`` the rebalancer targets at that level —
+``L_max(l) = (1 + eps_l)·⌈c(V)/k⌉``.  The value is a plain Python float
+resolved at V-cycle setup time (``drivers.level_tolerances``), so it rides
+into the already-traced ``lmax`` scalar of the fused level program: no new
+host round-trips, no retraces.
+
+Modes:
+
+  * ``constant``  — ``eps_l = eps`` at every level (the pre-schedule
+    behaviour, and the default).
+  * ``geometric`` — geometric interpolation from ``eps_coarse`` at the
+    coarsest level down to the final ``eps`` at the finest:
+    ``eps_l = eps · (eps_coarse/eps)^(d/(L−1))`` with ``d`` the depth above
+    the finest level.  The finest level always gets exactly ``eps``.
+  * ``snap``      — unconstrained-then-snap: every coarse level is
+    effectively unconstrained (``eps_l = k``, i.e. ``L_max ≥ c(V)`` so no
+    block can ever be overloaded and the rebalancer never fires), and only
+    the finest level snaps back to ``eps``.  ``unconstrained-then-snap``
+    is accepted as an alias.
+
+Determinism: ``eps_l`` is derived from (mode, eps, eps_coarse, depth, L, k)
+in double-precision host arithmetic — identical on every path for the same
+hierarchy — and the hierarchy itself is bit-identical across the coarsening
+paths, so the per-level ``L_max`` values agree across
+{gain} × {comm} × P (tests/test_schedule_property.py,
+tests/test_pinvariance.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+SCHEDULES = ("constant", "geometric", "snap")
+SCHEDULE_ALIASES = {"unconstrained-then-snap": "snap"}
+
+# geometric default for the coarsest level when the caller gives no
+# eps_coarse: hot enough that coarse levels genuinely wander (paper §2)
+DEFAULT_EPS_COARSE = 0.25
+
+
+class ToleranceSchedule(NamedTuple):
+    """A per-level imbalance-tolerance schedule.
+
+    ``eps_coarse`` is the coarsest-level tolerance of the ``geometric``
+    mode (``None`` → :data:`DEFAULT_EPS_COARSE`; always clamped to at
+    least the final ``eps``); the other modes ignore it.
+    """
+
+    mode: str = "constant"
+    eps_coarse: float | None = None
+
+    def eps_at(self, eps: float, depth: int, n_levels: int, k: int) -> float:
+        """Tolerance at one level; ``depth`` counts up from the finest
+        level (0) to the coarsest (``n_levels − 1``)."""
+        if not 0 <= depth < max(n_levels, 1):
+            raise ValueError(f"depth {depth} outside [0, {n_levels})")
+        if self.mode == "constant" or depth == 0 or n_levels <= 1:
+            return float(eps)
+        if self.mode == "geometric":
+            ec = DEFAULT_EPS_COARSE if self.eps_coarse is None else self.eps_coarse
+            ec = max(float(ec), float(eps))
+            frac = depth / (n_levels - 1)
+            if eps <= 0.0:
+                # geometric interpolation is undefined at eps = 0 (the
+                # ratio ec/eps diverges); fall back to the linear ramp,
+                # which keeps the exact endpoints and monotonicity
+                return float(eps + (ec - eps) * frac)
+            return float(eps * (ec / eps) ** frac)
+        if self.mode == "snap":
+            # L_max = (1 + k)·⌈c(V)/k⌉ ≥ k·⌈c(V)/k⌉ ≥ c(V): unconstrained
+            return float(k)
+        raise ValueError(f"unknown schedule mode {self.mode!r}")
+
+    def eps_levels(self, eps: float, n_levels: int, k: int) -> tuple[float, ...]:
+        """Per-level tolerances, index 0 = coarsest … ``n_levels − 1`` =
+        finest (the V-cycle's refinement order)."""
+        return tuple(self.eps_at(eps, n_levels - 1 - i, n_levels, k)
+                     for i in range(n_levels))
+
+
+def resolve_schedule(schedule: str | ToleranceSchedule,
+                     eps_coarse: float | None = None) -> ToleranceSchedule:
+    """Resolve a ``schedule=`` argument to a :class:`ToleranceSchedule`,
+    accepting a mode name (or alias) or an already-built schedule; raises
+    ``ValueError`` listing the registered modes — called eagerly by
+    ``partition``/``dpartition`` so a typo fails at the API boundary.
+
+    An explicitly-passed ``eps_coarse`` always wins: it is the API-level
+    knob, so it also overrides the field of an already-built schedule."""
+    if isinstance(schedule, ToleranceSchedule):
+        if schedule.mode not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule mode {schedule.mode!r}: "
+                f"modes are {list(SCHEDULES)}")
+        if eps_coarse is not None:
+            return schedule._replace(eps_coarse=eps_coarse)
+        return schedule
+    name = SCHEDULE_ALIASES.get(schedule, schedule)
+    if name not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}: modes are {list(SCHEDULES)} "
+            f"(aliases: {sorted(SCHEDULE_ALIASES)})")
+    return ToleranceSchedule(name, eps_coarse)

@@ -37,11 +37,18 @@ Search for Partitioning Irregular Graphs" — the JetLP family):
     level's mean owned vertex weight enter M only on strictly positive
     gain, so the rebalancer never has to haul a wandering heavy vertex
     back across blocks.
+  * ``jet_v`` — vertex-ordered Jet: the afterburner's virtual order is
+    plain global-vertex-id order instead of (gain desc, id asc), which
+    drops the per-round gain exchange (one fewer ``exchange`` per Jet
+    iteration) at the cost of the gain order's per-round
+    no-cut-increase guarantee (the level driver's best-balanced
+    tracking restores monotonicity at level granularity).
   * ``lp``    — the size-constrained label-propagation baseline
     (``engine.lp_level``; no temperature loop).
 
 Aliases keep the paper-configuration names working: ``d4xjet`` → ``jet``
-(4 temperature rounds), ``djet`` → ``jet`` with 1 round, ``dlp`` → ``lp``.
+(4 temperature rounds), ``djet`` → ``jet`` with 1 round, ``djet_v`` →
+``jet_v`` with 1 round, ``dlp`` → ``lp``.
 """
 
 from __future__ import annotations
@@ -110,6 +117,25 @@ def jet_h_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
     return jnp.where(move, target, labels), move
 
 
+def jet_v_move(cm, gb, ev: EdgeView, labels, locked, tau, k: int):
+    """Vertex-ordered Jet: identical to the Jet rule except the
+    afterburner's virtual order is plain global-vertex-id order
+    (``order="vertex"``), so the per-round gain exchange disappears.  The
+    gain order's per-round no-cut-increase guarantee does NOT transfer
+    (tests/test_schedule_property.py pins the distinction) — the level
+    stays monotone from a balanced start through ``jet_inner``'s
+    best-balanced tracking instead.  Vertex-id order is order-isomorphic
+    to global ids in every backend, so the determinism contract extends
+    for free."""
+    lv_e = engine._head_labels(cm, ev, labels)
+    own, gain, target = gb.best(ev, lv_e, labels, None)
+    cand = engine.candidate_set(ev, labels, own, gain, target, tau, locked)
+    delta = engine.afterburner_delta(cm, ev, labels, lv_e, gain, target, cand,
+                                     order="vertex")
+    move = cand & (delta >= 0.0)
+    return jnp.where(move, target, labels), move
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
@@ -132,6 +158,7 @@ def register(variant: Variant) -> Variant:
 JET = register(Variant("jet", "jet", engine.jet_move, rounds=4))
 JETLP = register(Variant("jetlp", "jet", jetlp_move, rounds=4))
 JET_H = register(Variant("jet_h", "jet", jet_h_move, rounds=4))
+JET_V = register(Variant("jet_v", "jet", jet_v_move, rounds=4))
 LP = register(Variant("lp", "lp", None, rounds=1))
 
 # paper-configuration aliases (not separate registry entries: `djet` is the
@@ -141,6 +168,7 @@ LP = register(Variant("lp", "lp", None, rounds=1))
 ALIASES: dict[str, Variant] = {
     "d4xjet": JET,
     "djet": JET._replace(rounds=1),
+    "djet_v": JET_V._replace(rounds=1),
     "dlp": LP,
 }
 

@@ -1,8 +1,11 @@
 """The bench harness contract (benchmarks/bench.py + common.py): the sweep
-produces cells that satisfy the BENCH_quality.json schema, and the
-validator actually rejects the failure modes CI's bench-smoke job gates on
-(missing keys, wrong types, NaN/inf metrics, version drift)."""
+produces cells that satisfy the BENCH_quality.json schema, the validator
+actually rejects the failure modes CI's bench-smoke job gates on (missing
+keys, wrong types, NaN/inf metrics, version drift, empty results), and a
+fresh smoke run stays within the pinned quality band of the committed
+snapshot (benchmarks/snapshots/)."""
 
+import json
 import math
 import os
 import sys
@@ -17,13 +20,18 @@ from benchmarks.common import (  # noqa: E402
     BENCH_CELL_KEYS,
     BENCH_SCHEMA_VERSION,
     bench_graph,
+    gmean,
     validate_bench,
 )
+
+SNAPSHOT = os.path.abspath(os.path.join(
+    ROOT, "benchmarks", "snapshots", "BENCH_smoke.json"))
 
 
 def _cell(**over):
     cell = {
-        "graph": "grid2d_24", "variant": "jet", "p": 1, "k": 4,
+        "graph": "grid2d_24", "variant": "jet", "schedule": "constant",
+        "p": 1, "k": 4,
         "n": 576, "m": 2208, "cut": 86.0, "imbalance": 0.0278, "levels": 4,
         "coarsen_us": 100.0, "init_us": 10.0, "refine_us": 200.0,
         "total_us": 400.0, "dispatch_count": 8,
@@ -64,6 +72,46 @@ def test_validator_rejects_failure_modes():
                for e in validate_bench(_doc([_cell(dispatches={"x": 1.5})])))
 
 
+def test_validator_rejects_empty_results():
+    """An empty results list is a failed run, never a valid document —
+    and bench.main routes every document through the validator (no
+    not-cells bypass), so an empty sweep exits non-zero."""
+    for doc in (_doc([]), {"schema_version": BENCH_SCHEMA_VERSION},
+                {"schema_version": BENCH_SCHEMA_VERSION, "cells": None}):
+        errs = validate_bench(doc)
+        assert errs, doc
+        assert any("missing/empty" in e for e in errs), errs
+
+
+def test_bench_main_fails_loudly_on_empty_sweep(monkeypatch, tmp_path,
+                                                capsys):
+    monkeypatch.setattr(bench, "run_sweep", lambda *a, **kw: ([], []))
+    rc = bench.main(["--smoke", "--out", str(tmp_path / "b.json")])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "SCHEMA VIOLATION" in err and "missing/empty" in err
+    # the (invalid) document is still written as evidence
+    assert json.load(open(tmp_path / "b.json"))["cells"] == []
+
+
+def test_bench_schedule_alias_canonicalized(monkeypatch, tmp_path):
+    """--schedule aliases are canonicalized before being recorded: the
+    string keys the snapshot diff and summarize(), so
+    'unconstrained-then-snap' and 'snap' runs must produce comparable
+    documents."""
+    captured = {}
+
+    def fake_sweep(*a, **kw):
+        captured.update(kw)
+        return ([], [])
+
+    monkeypatch.setattr(bench, "run_sweep", fake_sweep)
+    bench.main(["--smoke", "--schedule", "unconstrained-then-snap",
+                "--out", str(tmp_path / "b.json")])
+    assert captured["schedule"] == "snap"
+    assert json.load(open(tmp_path / "b.json"))["config"]["schedule"] == "snap"
+
+
 def test_bench_graph_lookup():
     g = bench_graph("grid2d_24")
     assert g.n == 576
@@ -82,8 +130,71 @@ def test_sweep_produces_schema_valid_cells():
     assert validate_bench(doc) == [], validate_bench(doc)
     assert {c["variant"] for c in cells} == {"jet", "lp"}
     for c in cells:
+        assert c["schedule"] == "constant"
         assert c["dispatch_count"] > 0
         assert c["refine_us"] > 0
         assert c["levels"] >= 2
     summary = bench.summarize(cells)
     assert summary["jet"]["gmean_cut_ratio_vs_jet"] == pytest.approx(1.0)
+
+
+# ---- snapshot regression (benchmarks/snapshots/) --------------------------
+
+# pinned band: a fresh run's per-cell cut, gmean'd over all compared cells,
+# may drift at most this factor from the committed snapshot before the test
+# (and CI's bench-smoke job, which runs it against the full fresh smoke
+# document via BENCH_FRESH) goes red
+SNAPSHOT_BAND = 1.05
+
+
+def test_snapshot_regression():
+    """Diff a fresh smoke run against the committed snapshot.
+
+    With BENCH_FRESH set (CI's bench-smoke job points it at the
+    BENCH_quality.json it just produced) the full fresh document is
+    diffed; without it, a reduced subset of the smoke matrix is re-run
+    in-process so the regression gate also rides in tier-1."""
+    with open(SNAPSHOT) as f:
+        snap = json.load(f)
+    assert validate_bench(snap) == [], "committed snapshot violates schema"
+    assert snap["smoke"] is True
+
+    fresh_path = os.environ.get("BENCH_FRESH")
+    if fresh_path:
+        with open(fresh_path) as f:
+            fresh_doc = json.load(f)
+        assert validate_bench(fresh_doc) == []
+        fresh = fresh_doc["cells"]
+    else:
+        # reduced subset — MUST use the snapshot's own smoke parameters
+        # (k/seed/max_inner/coarsen_until) so cuts are comparable
+        cfg = snap["config"]
+        fresh, failures = bench.run_sweep(
+            ps=(1,), graphs=("grid2d_24",), variants=("jet", "jetlp"),
+            k=cfg["k"], seed=cfg["seed"], max_inner=cfg["max_inner"],
+            coarsen_until=cfg["coarsen_until"], timeout=1200,
+            schedule=cfg.get("schedule", "constant"))
+        assert not failures, failures
+
+    def key(c):
+        return (c["graph"], c["variant"], c["p"], c["k"],
+                c.get("schedule", "constant"))
+
+    base = {key(c): c for c in snap["cells"]}
+    missing = [key(c) for c in fresh if key(c) not in base]
+    assert not missing, f"cells with no snapshot baseline: {missing}"
+    if fresh_path:
+        # full-document mode must also cover every snapshot cell — a cell
+        # silently dropped from the smoke grid would otherwise shrink the
+        # comparison without going red
+        dropped = [k for k in base if k not in {key(c) for c in fresh}]
+        assert not dropped, f"snapshot cells missing from fresh run: {dropped}"
+    ratios = [c["cut"] / max(base[key(c)]["cut"], 1e-9) for c in fresh]
+    assert ratios
+    g = gmean(ratios)
+    assert 1 / SNAPSHOT_BAND <= g <= SNAPSHOT_BAND, (
+        f"gmean cut ratio vs snapshot {g:.4f} outside "
+        f"[{1 / SNAPSHOT_BAND:.3f}, {SNAPSHOT_BAND:.3f}] "
+        f"(ratios: { {key(c): round(r, 4) for c, r in zip(fresh, ratios)} })")
+    for c in fresh:
+        assert c["imbalance"] <= base[key(c)]["imbalance"] + 0.05, key(c)

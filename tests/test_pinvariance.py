@@ -6,7 +6,10 @@ Property: from one seed, the partition is bit-identical at P = 1 and P = 8
 across the comm backends (all-gather BSP, interface-only halo over host
 coarsening, and the device-native halo × sharded-coarsen V-cycle — whose
 ragged last shard also exercises the device-derived interface permutation
-and halo slot map), and matches the single-device reference."""
+and halo slot map), and matches the single-device reference.  The same
+contract is pinned for the per-level tolerance schedule
+(schedule="geometric": the eps_l derivation must be P-invariant) and the
+jet_v vertex-ordered variant."""
 
 import json
 import os
@@ -48,6 +51,22 @@ for name, g in (("grid19x17", grid2d(19, 17)),
     l8 = np.asarray(dpartition(g, k=4, P=8, refiner="dlp", seed=0,
                                coarsen="host", coarsen_until=48).labels)
     rec["dlp_p_invariant"] = bool(np.array_equal(l1, l8))
+    # the per-level tolerance schedule and the jet_v variant over the same
+    # ragged split: the eps_l derivation (level count → per-level L_max)
+    # and the vertex-ordered afterburner must both be P-invariant
+    for tag, okw in (("sched_geometric", dict(schedule="geometric")),
+                     ("jet_v", dict(refiner="jet_v"))):
+        kw2 = {**KW, **okw}
+        ref2 = np.asarray(partition(g, k=4, **kw2).labels)
+        h1 = np.asarray(dpartition(g, k=4, P=1, halo=True,
+                                   coarsen="sharded", **kw2).labels)
+        h8 = np.asarray(dpartition(g, k=4, P=8, halo=True,
+                                   coarsen="sharded", **kw2).labels)
+        a8 = np.asarray(dpartition(g, k=4, P=8, coarsen="host",
+                                   **kw2).labels)
+        rec[f"{tag}_p1"] = bool(np.array_equal(ref2, h1))
+        rec[f"{tag}_p8"] = bool(np.array_equal(ref2, h8))
+        rec[f"{tag}_allgather_p8"] = bool(np.array_equal(ref2, a8))
     out[name] = rec
 print("RESULT::" + json.dumps(out))
 """
@@ -57,7 +76,7 @@ print("RESULT::" + json.dumps(out))
 def ragged():
     env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=2400)
+                          capture_output=True, text=True, timeout=3600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT::"):
@@ -75,3 +94,14 @@ def test_ragged_shard_p_invariant(ragged, comm):
 def test_ragged_shard_dlp_p_invariant(ragged):
     for name, rec in ragged.items():
         assert rec["dlp_p_invariant"], (name, rec)
+
+
+@pytest.mark.parametrize("tag", ["sched_geometric", "jet_v"])
+def test_ragged_shard_schedule_and_jet_v_p_invariant(ragged, tag):
+    """Per-level eps_l derivation (geometric schedule) and the jet_v
+    variant are P-invariant over ragged shards, on the device-native
+    halo × sharded V-cycle and the all-gather BSP path alike."""
+    for name, rec in ragged.items():
+        assert rec[f"{tag}_p1"], (name, rec)
+        assert rec[f"{tag}_p8"], (name, rec)
+        assert rec[f"{tag}_allgather_p8"], (name, rec)

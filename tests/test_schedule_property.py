@@ -1,0 +1,397 @@
+"""Partition invariants of the per-level tolerance schedule
+(repro.refine.schedule) and the Jet_v variant, across the
+schedule × variant × comm × P matrix.
+
+Three layers:
+
+  * schedule-resolution properties: mode shapes, monotonicity, exact final
+    eps, API-boundary errors — deterministic versions always run, and the
+    same properties are fuzzed with hypothesis when it is installed;
+  * engine-level properties (single-device, eager): one
+    afterburner-filtered move round — for jet, jet_v and jetlp — never
+    increases the cut, at any temperature; whole-V-cycle invariants
+    (labels in [0, k), per-level imbalance under its eps_l bound) on
+    random graphs;
+  * the deterministic matrix (one subprocess with 8 forced host devices):
+    for schedule ∈ {geometric, snap} × variant ∈ {jet, jet_v}, partitions
+    are bit-identical across {jnp, pallas-interpret} × {single, allgather,
+    halo} × P ∈ {1, 8}; per-level imbalance stays under that level's
+    eps_l-derived L_max while the finest level meets the final eps; and
+    the geometric schedule's coarse levels actually exceed the final eps
+    (the paper's unconstrained wandering — the ISSUE acceptance cell).
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.refine.schedule import (
+    DEFAULT_EPS_COARSE,
+    SCHEDULES,
+    ToleranceSchedule,
+    resolve_schedule,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# --------------------------------------------------------------------------
+# schedule resolution
+# --------------------------------------------------------------------------
+
+def test_resolve_schedule_api_boundary():
+    assert resolve_schedule("constant") == ToleranceSchedule("constant", None)
+    assert resolve_schedule("unconstrained-then-snap").mode == "snap"
+    sched = ToleranceSchedule("geometric", 0.5)
+    assert resolve_schedule(sched) is sched
+    with pytest.raises(ValueError, match="unknown schedule 'nope'") as exc:
+        resolve_schedule("nope")
+    for mode in SCHEDULES:
+        assert mode in str(exc.value)
+    with pytest.raises(ValueError, match="unknown schedule mode"):
+        resolve_schedule(ToleranceSchedule("bogus"))
+    with pytest.raises(ValueError):
+        ToleranceSchedule("geometric").eps_at(0.03, depth=5, n_levels=3, k=4)
+
+
+def check_schedule_shapes(eps, n_levels, k, ec):
+    """The mode-shape properties, shared by the deterministic grid and the
+    hypothesis fuzz: constant is flat; geometric interpolates from
+    eps_coarse down to *exactly* eps, monotone non-increasing; snap is
+    unconstrained (eps_l = k ⇒ L_max ≥ c(V)) everywhere but the finest."""
+    const = resolve_schedule("constant").eps_levels(eps, n_levels, k)
+    assert const == tuple([eps] * n_levels)
+
+    geo = resolve_schedule("geometric", ec).eps_levels(eps, n_levels, k)
+    assert len(geo) == n_levels
+    assert geo[-1] == eps  # finest level is exactly the final eps
+    assert all(a >= b - 1e-12 for a, b in zip(geo, geo[1:]))
+    ec_eff = max(DEFAULT_EPS_COARSE if ec is None else ec, eps)
+    assert all(eps - 1e-12 <= e <= ec_eff + 1e-12 for e in geo)
+    if n_levels > 1:
+        assert geo[0] == pytest.approx(ec_eff)
+
+    snap = resolve_schedule("snap").eps_levels(eps, n_levels, k)
+    assert snap[-1] == eps
+    assert snap[:-1] == tuple([float(k)] * (n_levels - 1))
+
+
+@pytest.mark.parametrize("eps", [0.005, 0.03, 0.2])
+@pytest.mark.parametrize("n_levels", [1, 2, 5])
+@pytest.mark.parametrize("ec", [None, 0.0, 0.5])
+def test_schedule_shapes_grid(eps, n_levels, ec):
+    check_schedule_shapes(eps, n_levels, k=4, ec=ec)
+
+
+def test_geometric_schedule_eps_zero():
+    """eps = 0 (perfect balance) must not crash the geometric mode — the
+    undefined ec/eps ratio falls back to the linear ramp with the exact
+    endpoints intact."""
+    levels = resolve_schedule("geometric", 0.3).eps_levels(0.0, 4, 4)
+    assert levels[-1] == 0.0
+    assert levels[0] == pytest.approx(0.3)
+    assert all(a >= b for a, b in zip(levels, levels[1:]))
+
+
+def test_explicit_eps_coarse_overrides_schedule_instance():
+    """eps_coarse= is the API-level knob: it wins over the field of an
+    already-built ToleranceSchedule instead of being silently ignored."""
+    sched = ToleranceSchedule("geometric")  # eps_coarse=None → default 0.25
+    got = resolve_schedule(sched, eps_coarse=0.5)
+    assert got.eps_coarse == 0.5
+    assert got.eps_levels(0.03, 3, 4)[0] == pytest.approx(0.5)
+    # without the explicit knob the instance passes through untouched
+    assert resolve_schedule(sched) is sched
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.floats(0.005, 0.2), st.integers(1, 12), st.integers(2, 16),
+           st.one_of(st.none(), st.floats(0.0, 1.0)))
+    @settings(max_examples=100, deadline=None)
+    def test_schedule_shapes_fuzzed(eps, n_levels, k, ec):
+        check_schedule_shapes(eps, n_levels, k, ec)
+
+
+# --------------------------------------------------------------------------
+# engine-level: the afterburner never increases the cut (any variant order)
+# --------------------------------------------------------------------------
+
+def make_random_graph(rng, max_n=24, max_m=80, unit_nw=False):
+    from repro.core.graph import from_coo
+
+    n = int(rng.integers(6, max_n + 1))
+    m = int(rng.integers(n, max_m + 1))
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.integers(1, 5, m).astype(np.float32)
+    keep = u != v
+    if keep.sum() == 0:
+        u, v, w = np.array([0]), np.array([1]), np.array([1.0], np.float32)
+        keep = np.array([True])
+    nw = (np.ones(n, np.float32) if unit_nw
+          else rng.integers(1, 4, n).astype(np.float32))
+    return from_coo(n, u[keep], v[keep], w[keep], nw=nw)
+
+
+def check_afterburner_round(variant, g, k, seed, tau):
+    """One move round of a gain-ordered jet-mode variant — candidate set +
+    afterburner, at any temperature — never makes the cut worse than the
+    pre-refinement cut (the assumed-state δ ≥ 0 guarantee).  The guarantee
+    is specific to the gain order: jet_v's vertex order trades it away and
+    is pinned by the level-granularity check below instead."""
+    from repro.refine import engine
+    from repro.refine.comm import SingleComm, edge_view_from_graph
+    from repro.refine.gain import make_gain
+    from repro.refine.variants import resolve_variant
+
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (g.n,), 0, k,
+                                dtype=jnp.int32)
+    ev = edge_view_from_graph(g)
+    cm = SingleComm(g.n)
+    gb = make_gain("jnp", ev, k)
+    cut0 = float(engine.cut_of(cm, ev, labels))
+    move = resolve_variant(variant).move
+    new, moved = move(cm, gb, ev, labels, jnp.zeros(g.n, bool),
+                      jnp.float32(tau), k)
+    cut1 = float(engine.cut_of(cm, ev, new))
+    assert cut1 <= cut0 + 1e-3
+    # moved mask covers exactly the changed slots
+    assert bool(jnp.all((new != labels) <= moved))
+
+
+@pytest.mark.parametrize("variant", ["jet", "jetlp", "jet_h"])
+@pytest.mark.parametrize("case", range(6))
+def test_afterburner_round_never_increases_cut(variant, case):
+    rng = np.random.default_rng(1000 + case)
+    g = make_random_graph(rng)
+    k = int(rng.integers(2, 6))
+    tau = float(rng.uniform(0.0, 1.0))
+    check_afterburner_round(variant, g, k, seed=case, tau=tau)
+
+
+def check_level_monotone_from_balanced(variant, g, k, seed):
+    """Level-granularity monotonicity — holds for EVERY jet-mode variant,
+    including jet_v (whose per-round guarantee is weaker): from a balanced
+    start, the fused level program never returns a worse cut, because
+    ``jet_inner`` tracks the best balanced partition seen."""
+    from repro.core.partition import edge_cut, l_max
+    from repro.core.refine import jet_refine
+
+    eps = 0.1
+    labels = jnp.arange(g.n, dtype=jnp.int32) % k  # balanced: unit weights
+    lmax = float(l_max(g, k, eps))
+    bw = np.bincount(np.asarray(labels), minlength=k).astype(float)
+    assert (bw <= lmax).all(), "test premise: start balanced"
+    cut0 = float(edge_cut(g, labels))
+    out = jet_refine(g, labels, k, eps, jax.random.PRNGKey(seed),
+                     rounds=2, max_inner=4, variant=variant)
+    assert float(edge_cut(g, out)) <= cut0 + 1e-3
+
+
+@pytest.mark.parametrize("variant", ["jet", "jet_v", "jetlp", "jet_h"])
+@pytest.mark.parametrize("case", range(2))
+def test_level_monotone_from_balanced(variant, case):
+    rng = np.random.default_rng(2000 + case)
+    g = make_random_graph(rng, unit_nw=True)
+    check_level_monotone_from_balanced(variant, g, k=int(rng.integers(2, 5)),
+                                       seed=case)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("variant", ["jet", "jetlp", "jet_h"])
+    @given(gseed=st.integers(0, 2**31), k=st.integers(2, 5),
+           seed=st.integers(0, 10_000), tau=st.floats(0.0, 1.0))
+    @settings(max_examples=15, deadline=None)
+    def test_afterburner_round_fuzzed(variant, gseed, k, seed, tau):
+        g = make_random_graph(np.random.default_rng(gseed))
+        check_afterburner_round(variant, g, k, seed, tau)
+
+    @pytest.mark.parametrize("variant", ["jet_v"])
+    @given(gseed=st.integers(0, 2**31), k=st.integers(2, 5),
+           seed=st.integers(0, 1_000))
+    @settings(max_examples=8, deadline=None)
+    def test_level_monotone_fuzzed(variant, gseed, k, seed):
+        g = make_random_graph(np.random.default_rng(gseed), unit_nw=True)
+        check_level_monotone_from_balanced(variant, g, k, seed)
+
+
+# --------------------------------------------------------------------------
+# whole-V-cycle invariants on random unit-weight graphs (single device)
+# --------------------------------------------------------------------------
+
+def check_partition_invariants(g, k, seed, sched):
+    """Labels in [0, k); per-level imbalance under its own eps_l-derived
+    L_max bound; finest level under the final eps bound.  Unit node
+    weights keep balance at (1+eps)·⌈n/k⌉ always feasible."""
+    from repro.core.multilevel import partition
+
+    eps = 0.1
+    res = partition(g, k=k, eps=eps, seed=seed, schedule=sched,
+                    coarsen_until=12, max_inner=4, trace_levels=True)
+    lab = np.asarray(res.labels)
+    assert ((lab >= 0) & (lab < k)).all()
+    assert len(res.level_eps) == res.levels == len(res.level_trace)
+    assert res.level_eps[-1] == eps
+    W = float(np.asarray(g.nw).sum())
+    for t in res.level_trace:
+        bound = (1 + t["eps"]) * math.ceil(W / k) * k / W - 1
+        assert t["imbalance"] <= bound + 1e-4, (sched, t, bound)
+
+
+@pytest.mark.parametrize("sched", ["constant", "geometric", "snap"])
+@pytest.mark.parametrize("case", range(2))
+def test_partition_invariants_under_schedule(sched, case):
+    rng = np.random.default_rng(7 + case)
+    g = make_random_graph(rng, max_n=20, max_m=60, unit_nw=True)
+    check_partition_invariants(g, k=int(rng.integers(2, 5)), seed=case,
+                               sched=sched)
+
+
+if HAVE_HYPOTHESIS:
+    @given(gseed=st.integers(0, 2**31), k=st.integers(2, 4),
+           seed=st.integers(0, 1_000),
+           sched=st.sampled_from(["constant", "geometric", "snap"]))
+    @settings(max_examples=5, deadline=None)
+    def test_partition_invariants_fuzzed(gseed, k, seed, sched):
+        g = make_random_graph(np.random.default_rng(gseed),
+                              max_n=20, max_m=60, unit_nw=True)
+        check_partition_invariants(g, k, seed, sched)
+
+
+# --------------------------------------------------------------------------
+# the deterministic schedule × variant × comm × P matrix (subprocess)
+# --------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.graphs import grid2d
+from repro.core import partition
+from repro.distributed import dpartition
+
+g = grid2d(24, 24)
+k = 4
+EPS = 0.03
+KW = dict(seed=0, eps=EPS, max_inner=4, coarsen_until=64)
+
+out = {"W": float(np.asarray(g.nw).sum()), "k": k, "eps": EPS}
+for sched in ("geometric", "snap"):
+    for variant in ("jet", "jet_v"):
+        skw = dict(schedule=sched, refiner=variant, **KW)
+        ref = partition(g, k=k, trace_levels=True, **skw)
+        cells = {
+            "single:P1:pallas": partition(g, k=k, gain="pallas",
+                                          **skw).labels,
+            "allgather:P8:jnp": dpartition(g, k=k, P=8, **skw).labels,
+            "halo:P1:jnp": dpartition(g, k=k, P=1, halo=True, **skw).labels,
+            "halo:P8:pallas": dpartition(g, k=k, P=8, halo=True,
+                                         gain="pallas", **skw).labels,
+        }
+        lab = np.asarray(ref.labels)
+        rec = {name: bool(np.array_equal(lab, np.asarray(x)))
+               for name, x in cells.items()}
+        rec["labels_in_range"] = bool(((lab >= 0) & (lab < k)).all())
+        rec["imbalance"] = float(ref.imbalance)
+        rec["level_eps"] = list(ref.level_eps)
+        rec["trace"] = list(ref.level_trace)
+        out[f"{sched}:{variant}"] = rec
+
+# the acceptance cell: dpartition(schedule="geometric") at P=8, with the
+# per-level trace coming from the sharded V-cycle itself
+d = dpartition(g, k=k, P=8, schedule="geometric", refiner="jet",
+               trace_levels=True, **KW)
+s = partition(g, k=k, schedule="geometric", refiner="jet",
+              trace_levels=True, **KW)
+out["dpartition_geometric"] = {
+    "imbalance": float(d.imbalance),
+    "level_eps": list(d.level_eps),
+    "trace": list(d.level_trace),
+    "trace_matches_single": d.level_trace == s.level_trace,
+}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=3600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            return json.loads(line[len("RESULT::"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")
+
+
+def _bound(eps_l, W, k):
+    """Imbalance implied by L_max(eps_l): max bw ≤ (1+eps_l)·⌈W/k⌉."""
+    return (1 + eps_l) * math.ceil(W / k) * k / W - 1 + 1e-5
+
+
+CONFIGS = ["geometric:jet", "geometric:jet_v", "snap:jet", "snap:jet_v"]
+
+
+@pytest.mark.parametrize("config", CONFIGS)
+def test_schedule_bit_identical_across_backends(config, matrix):
+    """schedule ≠ constant replays one move sequence across
+    {jnp, pallas-interpret} × {single, allgather, halo} × P ∈ {1, 8}."""
+    rec = matrix[config]
+    bad = [cell for cell in ("single:P1:pallas", "allgather:P8:jnp",
+                             "halo:P1:jnp", "halo:P8:pallas")
+           if not rec[cell]]
+    assert not bad, f"{config}: cells diverging from single:P1:jnp: {bad}"
+
+
+@pytest.mark.parametrize("config", CONFIGS)
+def test_schedule_level_invariants(config, matrix):
+    """Labels in [0, k); every level within its own eps_l bound; the
+    finest level within the final eps bound."""
+    rec = matrix[config]
+    W, k, eps = matrix["W"], matrix["k"], matrix["eps"]
+    assert rec["labels_in_range"]
+    assert len(rec["trace"]) == len(rec["level_eps"])
+    for t, eps_l in zip(rec["trace"], rec["level_eps"]):
+        assert t["eps"] == pytest.approx(eps_l)
+        assert t["imbalance"] <= _bound(eps_l, W, k), (config, t)
+    assert rec["trace"][-1]["imbalance"] <= _bound(eps, W, k)
+    assert rec["imbalance"] <= _bound(eps, W, k)
+
+
+def test_geometric_coarse_levels_exceed_final_eps(matrix):
+    """The point of the schedule (ISSUE acceptance): with
+    schedule="geometric" the coarse levels genuinely wander past the final
+    eps — while the finest level still meets it — on the single-device and
+    the P = 8 distributed paths alike."""
+    W, k, eps = matrix["W"], matrix["k"], matrix["eps"]
+    for key in ("geometric:jet", "dpartition_geometric"):
+        rec = matrix[key]
+        coarse = rec["trace"][:-1]
+        assert any(t["imbalance"] > eps for t in coarse), (key, rec["trace"])
+        assert rec["trace"][-1]["imbalance"] <= _bound(eps, W, k)
+        assert rec["imbalance"] <= _bound(eps, W, k)
+
+
+def test_dpartition_trace_matches_single_device(matrix):
+    """Per-level (n, eps_l, imbalance) of the P = 8 sharded V-cycle is
+    identical to the single-device reference — the eps_l derivation and
+    the refinement behind it are P-invariant."""
+    d = matrix["dpartition_geometric"]
+    g = matrix["geometric:jet"]
+    assert d["trace_matches_single"]
+    assert d["level_eps"] == g["level_eps"]

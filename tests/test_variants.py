@@ -97,11 +97,13 @@ def test_aliases_replay_canonical_rules(matrix):
 # ---- registry + API-boundary behaviour (in-process, fast) -----------------
 
 def test_registry_contents():
-    assert registered_variants() == ("jet", "jet_h", "jetlp", "lp")
-    assert set(ALIASES) == {"d4xjet", "djet", "dlp"}
+    assert registered_variants() == ("jet", "jet_h", "jet_v", "jetlp", "lp")
+    assert set(ALIASES) == {"d4xjet", "djet", "djet_v", "dlp"}
     assert resolve_variant("d4xjet") == resolve_variant("jet")
     assert resolve_variant("djet").rounds == 1
     assert resolve_variant("djet").move is resolve_variant("jet").move
+    assert resolve_variant("djet_v").rounds == 1
+    assert resolve_variant("djet_v").move is resolve_variant("jet_v").move
     assert resolve_variant("dlp").mode == "lp"
     for name in registered_variants():
         v = resolve_variant(name)
