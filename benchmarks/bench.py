@@ -6,12 +6,17 @@ subprocess per P, like the fig2 harness — and emits one schema-versioned
 JSON document so the repo's quality/perf trajectory has PR-over-PR data
 points.  Per cell: cut, imbalance, level count, coarsen/init/refine phase
 wall-µs (``dpartition(timing=True)``), and the engine's host-dispatch
-counters.  The document is validated against the schema in
+counters.  ``--batch N`` adds the request-batched engine grid
+(``partition_batch``, engine="batched" cells at B ∈ {1, N}): per-call
+latency percentiles (p50/p99 µs) and graphs/sec over a steady-state timing
+loop, with the one-dispatch-per-level-per-batch contract checked on every
+cell.  The document is validated against the schema in
 ``benchmarks/common.py`` before it is written; schema violations or any
 NaN/inf metric exit non-zero — which is what CI's ``bench-smoke`` job
 (``--smoke``: tiny grid, P ∈ {1, 4}) turns into a red check.
 
     PYTHONPATH=src:. python benchmarks/bench.py --smoke --out BENCH_quality.json
+    PYTHONPATH=src:. python benchmarks/bench.py --smoke --batch 4
     PYTHONPATH=src:. python benchmarks/bench.py               # full sweep
 
 See benchmarks/README.md for the schema and the CI artifact mapping.
@@ -60,7 +65,7 @@ for gname in cfg["graphs"]:
         total_s = time.perf_counter() - t0
         cells.append({
             "graph": gname, "variant": variant, "p": cfg["p"], "k": cfg["k"],
-            "schedule": cfg["schedule"],
+            "schedule": cfg["schedule"], "engine": "dpartition", "batch": 1,
             "n": int(g.n), "m": int(g.m),
             "cut": float(r.cut), "imbalance": float(r.imbalance),
             "levels": int(r.levels),
@@ -68,12 +73,114 @@ for gname in cfg["graphs"]:
             "init_us": r.timings.get("init_s", 0.0) * 1e6,
             "refine_us": r.timings.get("refine_s", 0.0) * 1e6,
             "total_us": total_s * 1e6,
+            # classic cells are one-shot (first call, compile included):
+            # the latency percentiles degenerate to the single sample
+            "graphs_per_sec": 1.0 / total_s if total_s > 0 else 0.0,
+            "p50_us": total_s * 1e6,
+            "p99_us": total_s * 1e6,
             "dispatch_count": int(drivers.DISPATCH_COUNT),
             "dispatches": dict(drivers.DISPATCHES),
         })
         print("CELL::" + cells[-1]["graph"] + "/" + variant, file=sys.stderr)
 print("RESULT::" + json.dumps(cells))
 """
+
+# Batched-engine child: one subprocess for the whole batch grid (the batched
+# engine is single-logical-device — no forced device count to vary).  Each
+# (graph, variant, B) cell replicates ONE request B times — the serving
+# fan-out pattern — warms the bucketed retrace cache with one call, then
+# times `iters` steady-state calls and reports per-call latency percentiles
+# + graphs/sec.  Replicated identical requests coalesce into one engine
+# slot (partition_batch's default), so the B>1 rate measures coalescing +
+# dispatch amortization; distinct-request batching amortizes dispatches
+# only.  The last timed call runs with reset counters so the
+# one-dispatch-per-level-per-batch contract is checked on every cell; a
+# violation exits 3 (a sweep failure, not a slow run).
+CHILD_BATCH = r"""
+import json, sys, time
+cfg = json.loads(sys.argv[1])
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+from benchmarks.common import bench_graph
+from repro.core import partition_batch
+from repro.refine import drivers
+
+cells = []
+for gname in cfg["graphs"]:
+    g = bench_graph(gname)
+    for variant in cfg["variants"]:
+        for b in cfg["batch_sizes"]:
+            gs = [g] * b
+            kw = dict(k=cfg["k"], seed=cfg["seed"], refiner=variant,
+                      max_inner=cfg["max_inner"],
+                      coarsen_until=cfg["coarsen_until"],
+                      schedule=cfg["schedule"])
+            res = partition_batch(gs, **kw)  # warmup: compile + cache fill
+            lat = []
+            for it in range(cfg["iters"]):
+                drivers.reset_counters()
+                t0 = time.perf_counter()
+                res = partition_batch(gs, **kw)
+                lat.append(time.perf_counter() - t0)
+            max_rungs = max(r.levels for r in res)
+            d_level = drivers.DISPATCHES.get("batched", 0)
+            d_init = drivers.DISPATCHES.get("batched_init", 0)
+            if d_level != max_rungs or d_init != 1:
+                print("DISPATCH CONTRACT VIOLATION: "
+                      f"{gname}/{variant}/B{b}: level dispatches={d_level} "
+                      f"(want {max_rungs}), init dispatches={d_init} (want 1)",
+                      file=sys.stderr)
+                sys.exit(3)
+            med_s = float(np.percentile(lat, 50))
+            cells.append({
+                "graph": gname, "variant": variant, "p": 1, "k": cfg["k"],
+                "schedule": cfg["schedule"], "engine": "batched", "batch": b,
+                "n": int(g.n), "m": int(g.m),
+                "cut": float(res[0].cut),
+                "imbalance": float(res[0].imbalance),
+                "levels": int(res[0].levels),
+                "coarsen_us": 0.0, "init_us": 0.0, "refine_us": 0.0,
+                "total_us": float(np.sum(lat)) * 1e6,
+                "graphs_per_sec": b / med_s if med_s > 0 else 0.0,
+                "p50_us": med_s * 1e6,
+                "p99_us": float(np.percentile(lat, 99)) * 1e6,
+                "dispatch_count": int(drivers.DISPATCH_COUNT),
+                "dispatches": dict(drivers.DISPATCHES),
+            })
+            print("CELL::" + gname + "/" + variant + "/B%d" % b,
+                  file=sys.stderr)
+print("RESULT::" + json.dumps(cells))
+"""
+
+
+def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
+                    schedule, batch_sizes, iters=5, timeout=3600):
+    """Run the batched-engine grid in one subprocess; returns
+    (cells, failures).  A dispatch-contract violation in any cell is a
+    sweep failure (child exit 3)."""
+    cells, failures = [], []
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join([SRC, ROOT]),
+               JAX_PLATFORMS="cpu")
+    cfg = {"graphs": list(graphs), "variants": list(variants), "k": k,
+           "seed": seed, "max_inner": max_inner,
+           "coarsen_until": coarsen_until, "schedule": schedule,
+           "batch_sizes": list(batch_sizes), "iters": iters}
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", CHILD_BATCH, json.dumps(cfg)],
+            env=env, capture_output=True, text=True, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return cells, [f"batch sweep: timed out after {timeout}s"]
+    if proc.returncode != 0:
+        return cells, [f"batch sweep: exit {proc.returncode}: "
+                       + proc.stderr[-2000:]]
+    got = [line for line in proc.stdout.splitlines()
+           if line.startswith("RESULT::")]
+    if not got:
+        return cells, [f"batch sweep: no RESULT line: {proc.stdout[-1000:]}"]
+    cells.extend(json.loads(got[0][len("RESULT::"):]))
+    return cells, failures
 
 
 def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
@@ -109,12 +216,13 @@ def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
 
 def summarize(cells, baseline="jet"):
     """Per-variant geometric-mean cut ratio vs the ``jet`` baseline over
-    the (graph, p, schedule) cells both completed — the headline trajectory
-    number."""
+    the (graph, p, schedule, engine, batch) cells both completed — the
+    headline trajectory number."""
     from benchmarks.common import gmean
 
     def cell_key(c):
-        return (c["graph"], c["p"], c.get("schedule", "constant"))
+        return (c["graph"], c["p"], c.get("schedule", "constant"),
+                c.get("engine", "dpartition"), c.get("batch", 1))
 
     base = {cell_key(c): c["cut"] for c in cells if c["variant"] == baseline}
     out = {}
@@ -153,7 +261,14 @@ def main(argv=None) -> int:
                     help="per-level tolerance schedule for every cell "
                          "(repro.refine.schedule; the schedule column of "
                          "BENCH_quality.json)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="also sweep the batched engine at B in {1, N} "
+                         "(engine='batched' cells; 0 = off)")
+    ap.add_argument("--batch-iters", type=int, default=5,
+                    help="steady-state timing iterations per batched cell")
     args = ap.parse_args(argv)
+    if args.batch < 0:
+        ap.error("--batch must be >= 0")
 
     variants = (tuple(args.variants.split(","))
                 if args.variants else registered_variants())
@@ -180,6 +295,16 @@ def main(argv=None) -> int:
                                 max_inner, coarsen_until,
                                 schedule=args.schedule)
 
+    batch_sizes = ()
+    if args.batch:
+        # B=1 rides along as the per-cell throughput baseline of the ratio
+        batch_sizes = (1, args.batch) if args.batch > 1 else (1,)
+        bcells, bfail = run_batch_sweep(
+            graphs, variants, args.k, args.seed, max_inner, coarsen_until,
+            args.schedule, batch_sizes, iters=args.batch_iters)
+        cells.extend(bcells)
+        failures.extend(bfail)
+
     import jax
     import numpy as np
     doc = {
@@ -188,7 +313,8 @@ def main(argv=None) -> int:
         "config": {"variants": list(variants), "ps": list(ps),
                    "graphs": list(graphs), "k": args.k, "seed": args.seed,
                    "max_inner": max_inner, "coarsen_until": coarsen_until,
-                   "schedule": args.schedule},
+                   "schedule": args.schedule,
+                   "batch_sizes": list(batch_sizes)},
         "versions": {"jax": jax.__version__, "numpy": np.__version__,
                      "python": sys.version.split()[0]},
         "summary": summarize(cells),
@@ -204,13 +330,32 @@ def main(argv=None) -> int:
     print(f"wrote {args.out} ({len(cells)} cells)")
 
     for c in cells:
-        print(f"  {c['graph']:12s} {c['variant']:6s} P{c['p']} "
+        eng = (f"B{c['batch']}" if c.get("engine") == "batched"
+               else f"P{c['p']}")
+        print(f"  {c['graph']:12s} {c['variant']:6s} {eng} "
               f"cut={c['cut']:9.1f} imb={c['imbalance']:.4f} "
-              f"levels={c['levels']} refine_us={c['refine_us']:.0f} "
+              f"levels={c['levels']} p50_us={c['p50_us']:.0f} "
+              f"g/s={c['graphs_per_sec']:.2f} "
               f"dispatches={c['dispatch_count']}")
     for variant, s in doc["summary"].items():
         print(f"  summary {variant:6s} gmean cut ratio vs jet: "
               f"{s['gmean_cut_ratio_vs_jet']:.4f} over {s['cells']} cells")
+    if args.batch > 1:
+        # batching throughput ratio: recorded, not gated (the snapshot diff
+        # tracks the trajectory; load-sensitive rates don't make CI red)
+        from benchmarks.common import gmean as _gmean
+        base = {(c["graph"], c["variant"]): c["graphs_per_sec"]
+                for c in cells
+                if c.get("engine") == "batched" and c["batch"] == 1}
+        ratios = [c["graphs_per_sec"] / max(base[(c["graph"], c["variant"])],
+                                            1e-9)
+                  for c in cells
+                  if c.get("engine") == "batched" and c["batch"] > 1
+                  and (c["graph"], c["variant"]) in base]
+        if ratios:
+            print(f"  batched throughput: B={args.batch} vs B=1 gmean "
+                  f"graphs_per_sec ratio {_gmean(ratios):.2f}x "
+                  f"over {len(ratios)} cells")
 
     ok = True
     for msg in failures:

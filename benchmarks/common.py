@@ -50,7 +50,13 @@ def bench_graph(name):
 
 # v2: + per-cell "schedule" column (the per-level tolerance schedule the
 # cell ran under — repro.refine.schedule)
-BENCH_SCHEMA_VERSION = 2
+# v3: + per-cell "engine" ("dpartition" classic / "batched" request-batched),
+# "batch" (B of the cell), and throughput columns "graphs_per_sec",
+# "p50_us", "p99_us" (per-call latency percentiles over the timing loop;
+# classic one-shot cells record total_us for both)
+BENCH_SCHEMA_VERSION = 3
+
+BENCH_ENGINES = ("dpartition", "batched")
 
 # per-cell required keys -> allowed types; every numeric value must also be
 # finite (NaN/inf in any metric fails CI's bench-smoke job)
@@ -58,8 +64,10 @@ BENCH_CELL_KEYS = {
     "graph": str,
     "variant": str,
     "schedule": str,
+    "engine": str,
     "p": int,
     "k": int,
+    "batch": int,
     "n": int,
     "m": int,
     "cut": (int, float),
@@ -69,15 +77,25 @@ BENCH_CELL_KEYS = {
     "init_us": (int, float),
     "refine_us": (int, float),
     "total_us": (int, float),
+    "graphs_per_sec": (int, float),
+    "p50_us": (int, float),
+    "p99_us": (int, float),
     "dispatch_count": int,
     "dispatches": dict,
 }
+
+# numeric columns that can never be negative — a negative phase timing or
+# rate is a measurement bug, not a fast run
+BENCH_NONNEGATIVE_KEYS = ("coarsen_us", "init_us", "refine_us", "total_us",
+                          "graphs_per_sec", "p50_us", "p99_us")
 
 
 def validate_bench(doc) -> list[str]:
     """Validate a BENCH_quality.json document; returns a list of violations
     (empty = valid).  Checked: schema version, top-level shape, per-cell
-    required keys/types, and finiteness of every numeric metric."""
+    required keys/types, finiteness of every numeric metric, and the
+    cross-field sanity rules (no negative timings/rates, p99 ≥ p50,
+    batch ≥ 1, known engine)."""
     errs: list[str] = []
     if not isinstance(doc, dict):
         return [f"document is {type(doc).__name__}, expected object"]
@@ -114,6 +132,27 @@ def validate_bench(doc) -> list[str]:
             errs.append(f"{where}: negative cut")
         if isinstance(cell.get("imbalance"), (int, float)) and cell["imbalance"] < 0:
             errs.append(f"{where}: negative imbalance")
+        # cross-field sanity (the latent-bug class this validator existed to
+        # catch but didn't: a negative phase timing or p99 < p50 passed the
+        # finite-float check and poisoned every downstream ratio)
+        for key in BENCH_NONNEGATIVE_KEYS:
+            v = cell.get(key)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and math.isfinite(v) and v < 0:
+                errs.append(f"{where}: negative timing {key}={v!r}")
+        p50, p99 = cell.get("p50_us"), cell.get("p99_us")
+        if (isinstance(p50, (int, float)) and isinstance(p99, (int, float))
+                and not isinstance(p50, bool) and not isinstance(p99, bool)
+                and math.isfinite(p50) and math.isfinite(p99) and p99 < p50):
+            errs.append(f"{where}: p99_us={p99!r} < p50_us={p50!r}")
+        if isinstance(cell.get("batch"), int) \
+                and not isinstance(cell.get("batch"), bool) \
+                and cell["batch"] < 1:
+            errs.append(f"{where}: batch={cell['batch']!r} < 1")
+        if isinstance(cell.get("engine"), str) \
+                and cell["engine"] not in BENCH_ENGINES:
+            errs.append(f"{where}: engine={cell['engine']!r} not in "
+                        f"{BENCH_ENGINES}")
     return errs
 
 

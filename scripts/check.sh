@@ -1,10 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full test suite plus a 4-device smoke of the distributed
 # V-cycle (sharded coarsening end-to-end under shard_map).
+#
+# --batch: the request-batched engine preflight instead (CI's batch-smoke
+# leg): the batched smoke sweep — bench.py checks the schema and the
+# one-dispatch-per-level-per-batch contract per cell — plus the
+# B=1-equivalence / batch-invariance suite and the bench-harness tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--batch" ]]; then
+  echo "== batched-engine preflight =="
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench.py --smoke --batch 4 \
+    --out "${BENCH_BATCH_OUT:-/tmp/BENCH_batch_smoke.json}"
+  python -m pytest -x -q tests/test_batch_parity.py tests/test_bench.py
+  echo "check.sh --batch: all green"
+  exit 0
+fi
 
 # Version echo first: when a matrix leg (e.g. the latest-jax canary) breaks,
 # the log says immediately which toolchain it broke under.

@@ -2,7 +2,7 @@
 # (Jet) + probabilistic rebalancing inside a multilevel graph partitioner.
 from repro.core.graph import PAD, Graph, from_coo, pad_graph, to_padded, to_padded_fast  # noqa: F401
 from repro.core.jet import jet_round  # noqa: F401
-from repro.core.multilevel import PartitionResult, partition  # noqa: F401
+from repro.core.multilevel import PartitionResult, partition, partition_batch  # noqa: F401
 from repro.core.partition import (  # noqa: F401
     best_moves,
     block_weights,

@@ -18,12 +18,26 @@ from repro.core.graph import Graph
 from repro.core.partition import edge_cut, l_max, total_overload
 
 
-@partial(jax.jit, static_argnames=("k",))
-def greedy_balanced_seed(nw: jax.Array, k: int, key: jax.Array) -> jax.Array:
-    """Assign vertices (heaviest first, random tie order) to the currently
-    lightest block — an LPT-style balanced seeding."""
+def greedy_seed_arith(nw: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """Traceable body of :func:`greedy_balanced_seed` — the ONE copy of the
+    seeding arithmetic, shared by the jitted solo entry point below and the
+    batched initial-partition program (``repro.refine.drivers``), so the
+    two paths are bit-identical by construction.
+
+    Assign vertices (heaviest first, random tie order) to the currently
+    lightest block — an LPT-style balanced seeding.
+
+    The tie-break noise is the engine's per-vertex ``tid_uniform`` stream
+    (a pure function of (key, id)), NOT a ``uniform(key, (n,))`` draw:
+    threefry is not prefix-stable across shapes, and the batched engine
+    runs this seeding on pad-to-bucket graphs — the noise must not change
+    when padding slots are appended (DESIGN.md §2).  Padding slots carry
+    nw = 0 and noise < 1e-3, so they sort strictly after every real vertex
+    (nw ≥ 1) and their zero-weight block additions are no-ops."""
+    from repro.refine.comm import tid_uniform
+
     n = nw.shape[0]
-    noise = jax.random.uniform(key, (n,), minval=0.0, maxval=1e-3)
+    noise = tid_uniform(key, jnp.arange(n, dtype=jnp.int32), maxval=1e-3)
     order = jnp.argsort(-(nw + noise))
 
     def body(i, carry):
@@ -38,6 +52,10 @@ def greedy_balanced_seed(nw: jax.Array, k: int, key: jax.Array) -> jax.Array:
     bw0 = jnp.zeros(k, dtype=jnp.float32)
     labels, _ = jax.lax.fori_loop(0, n, body, (labels0, bw0))
     return labels
+
+
+greedy_balanced_seed = partial(jax.jit, static_argnames=("k",))(
+    greedy_seed_arith)
 
 
 def initial_partition(

@@ -125,3 +125,168 @@ def partition(
         level_eps=eps_l,
         level_trace=tuple(trace) if trace_levels else None,
     )
+
+
+def _lmax_batch(nw_stack, eps_per_slot, k: int):
+    """(B,) per-slot L_max over a padded nw stack — element-for-element the
+    same fp32 ops as ``partition.l_max`` on the unpadded graph (padding
+    vertices weigh 0; integer fp32 sums are exact), so the batched engine
+    targets bit-identical balance bounds."""
+    one_plus = jnp.asarray([1.0 + e for e in eps_per_slot], jnp.float32)
+    return one_plus * jnp.ceil(jnp.sum(nw_stack, axis=1) / k)
+
+
+def partition_batch(
+    graphs,
+    k: int,
+    eps: float = 0.03,
+    seed: int = 0,
+    refiner: Refiner = "d4xjet",
+    coarsen_until: int | None = None,
+    patience: int = 12,
+    max_inner: int = 64,
+    gain: str = "jnp",
+    schedule: str | ToleranceSchedule = "constant",
+    eps_coarse: float | None = None,
+    trace_levels: bool = False,
+    seeds=None,
+    coalesce: bool = True,
+) -> list[PartitionResult]:
+    """Partition B graphs at once through the request-batched engine.
+
+    Coarsening stays a per-graph host loop (data-dependent level sizes),
+    but initial partitioning and every refinement level run as ONE compiled
+    dispatch for the whole batch: per uncoarsening rung (aligned from each
+    graph's coarsest level), the participating level graphs are padded to a
+    shared power-of-two bucket (``repro.graphs.batch``) and refined by the
+    ``vmap``-lifted level program (``drivers.make_refine_level_batched``),
+    memoised on the bucket key — so a stream of requests whose levels land
+    in the same buckets reuses compiled programs across calls.
+
+    Identical in-flight requests — the same :class:`Graph` *object* with
+    the same seed, the fan-out pattern batched serving exists for —
+    **coalesce** into one engine slot whose result every alias shares
+    (determinism makes the copies identical by construction, so computing
+    them separately would be pure waste).  ``coalesce=False`` forces one
+    slot per request; both paths return bit-identical results
+    (tests/test_batch_parity.py).
+
+    Every graph follows exactly the key chain and arithmetic of
+    :func:`partition` with the same ``seed`` (override per graph via
+    ``seeds``): the B=1 path is bit-identical to :func:`partition`, a
+    graph's labels are independent of its bucket mates, of the batch order,
+    and of the padding amount (tests/test_batch_parity.py).  Returns one
+    :class:`PartitionResult` per graph, in input order.
+    """
+    from repro.graphs.batch import bucket_size, from_graphs
+    from repro.refine.drivers import (
+        initial_partition_batched,
+        make_refine_level_batched,
+    )
+    from repro.core.refine import temperature_schedule
+
+    var = resolve_variant(refiner)
+    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
+    graphs = list(graphs)
+    if not graphs:
+        return []
+    if seeds is None:
+        seeds = [seed] * len(graphs)
+    seeds = list(seeds)
+    if len(seeds) != len(graphs):
+        raise ValueError(f"seeds has {len(seeds)} entries for "
+                         f"{len(graphs)} graphs")
+    taus = temperature_schedule(var.rounds) if var.mode != "lp" else [0.0]
+
+    # ---- request coalescing: identical requests share one engine slot ----
+    # keyed on (object identity, seed) — zero-cost and exact; equal-content
+    # but distinct Graph objects intentionally stay separate slots (batch
+    # invariance makes their results identical anyway)
+    slot_of, uniq, pairs = [], {}, []
+    for g, s in zip(graphs, seeds):
+        kk = (id(g), s) if coalesce else len(pairs)
+        if kk not in uniq:
+            uniq[kk] = len(pairs)
+            pairs.append((g, s))
+        slot_of.append(uniq[kk])
+
+    # ---- per-graph host coarsening, replaying partition()'s key chain ----
+    st = []
+    for g, s in pairs:
+        key = jax.random.PRNGKey(s)
+        k_coarse, k_init, key = jax.random.split(key, 3)
+        levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
+                                               coarsen_until=coarsen_until)
+        n_levels = len(levels) + 1
+        st.append({
+            "g": g, "key": key, "k_init": k_init,
+            # uncoarsening rungs: rung 0 = coarsest, rung j>0 = (fine,
+            # mapping) = reversed(levels)[j-1] — partition()'s loop order
+            "rungs": list(reversed(levels)), "coarsest": coarsest,
+            "n_levels": n_levels,
+            "eps_l": level_tolerances(sched, eps, n_levels, k),
+            "trace": [],
+        })
+
+    # ---- batched initial partitioning: B × 4 restarts, one dispatch ----
+    bg0 = from_graphs([s["coarsest"] for s in st])
+    labs, cuts, ovs = initial_partition_batched(
+        bg0, k, jnp.stack([s["k_init"] for s in st]),
+        _lmax_batch(bg0.nw, [eps] * len(st), k))
+    for i, s in enumerate(st):
+        best, best_cut = None, float("inf")
+        for r in range(labs.shape[1]):  # the solo first-best-balanced rule
+            if float(ovs[i, r]) <= 0 and float(cuts[i, r]) < best_cut:
+                best, best_cut = labs[i, r], float(cuts[i, r])
+        if best is None:  # all restarts imbalanced — take the last anyway
+            best = labs[i, -1]
+        s["labels"] = jnp.asarray(best[: s["coarsest"].n])
+
+    # ---- rung-aligned batched refinement: one dispatch per rung ----
+    max_rungs = max(s["n_levels"] for s in st)
+    for j in range(max_rungs):
+        part = [s for s in st if j < s["n_levels"]]
+        lvl_graphs = []
+        for s in part:
+            if j == 0:
+                s["lvl_g"] = s["coarsest"]
+            else:
+                fine, mapping = s["rungs"][j - 1]
+                s["labels"] = s["labels"][mapping]  # project to finer level
+                s["lvl_g"] = fine
+            lvl_graphs.append(s["lvl_g"])
+        bg = from_graphs(
+            lvl_graphs,
+            n_bucket=bucket_size(max(g.n for g in lvl_graphs), minimum=8),
+            m_bucket=bucket_size(max(g.m for g in lvl_graphs), minimum=16))
+        run = make_refine_level_batched(
+            bg, k, rounds_taus=taus, patience=patience, max_inner=max_inner,
+            gain=gain, variant=var.name)
+        keys = []
+        for s in part:
+            s["key"], sub = jax.random.split(s["key"])
+            keys.append(sub)
+        lab_in = jnp.stack([
+            jnp.pad(s["labels"], (0, bg.n - s["lvl_g"].n)) for s in part])
+        out = run(lab_in, jnp.stack(keys),
+                  _lmax_batch(bg.nw, [s["eps_l"][j] for s in part], k))
+        for i, s in enumerate(part):
+            s["labels"] = out[i, : s["lvl_g"].n]
+            if trace_levels:
+                s["trace"].append(level_trace_entry(
+                    s["lvl_g"].n, s["eps_l"][j],
+                    imbalance(s["lvl_g"], s["labels"], k)))
+
+    res_u = [
+        PartitionResult(
+            labels=s["labels"],
+            cut=float(edge_cut(s["g"], s["labels"])),
+            imbalance=float(imbalance(s["g"], s["labels"], k)),
+            levels=s["n_levels"],
+            level_eps=s["eps_l"],
+            level_trace=tuple(s["trace"]) if trace_levels else None,
+        )
+        for s in st
+    ]
+    # coalesced requests share the unique slot's (immutable) result
+    return [res_u[j] for j in slot_of]

@@ -1,3 +1,8 @@
+from repro.graphs.batch import (  # noqa: F401
+    BatchedGraph,
+    bucket_size,
+    from_graphs,
+)
 from repro.graphs.generators import (  # noqa: F401
     BENCHMARK_SET,
     chung_lu_powerlaw,

@@ -1,0 +1,114 @@
+"""Pad-to-bucket batching container (DESIGN.md §2, "Batched engine").
+
+A :class:`BatchedGraph` stacks B same-bucket :class:`repro.core.graph.Graph`
+pytrees along a leading batch axis so ONE compiled dispatch can refine all
+B graphs (``jax.vmap`` over the per-slot engine program).  Shapes are the
+*bucket* shapes — every graph is padded up to ``(n_bucket, m_bucket)`` with
+the standard inert entries (``pad_graph``): padding vertices carry weight 0
+and no edges, padding edge slots carry ``col == PAD`` / weight 0.  The real
+sizes ride along as traced ``(B,)`` vectors, so one compiled program serves
+every mix of real sizes that lands in the same bucket.
+
+Why padding preserves the arithmetic bit-for-bit (the masking contract):
+
+* every edge reduction weights by ``ew`` (0 on padding) or masks by
+  ``live = col != PAD`` — integer-valued fp32 sums are exact, so appending
+  zero terms cannot change a single bit of any gain / block weight / cut;
+* every vertex decision is gated by ``owned = arange(n_bucket) < n_real``
+  or by ``nw > 0`` — padding slots never enter candidate sets, never win a
+  tie-break (scores of −inf sort after every real vertex), never move;
+* per-vertex randomness is the ``tid_uniform`` fold-in stream, a pure
+  function of (key, global id) — unlike a ``uniform(key, (n,))`` draw it is
+  invariant under appending padding slots (threefry is not prefix-stable
+  across shapes).
+
+Hence a graph's refined labels do not depend on its bucket mates or on how
+much padding surrounds it — ``partition_batch``'s B=1 path is bit-identical
+to ``partition`` (pinned in tests/test_batch_parity.py).
+
+Bucket sizes are powers of two (min 8 vertices / 16 edge slots): the
+retrace cache in ``repro.refine.drivers`` is keyed on the bucket, so
+geometric bucketing bounds the number of distinct compiled programs at
+O(log n_max) per (k, variant, schedule, gain) configuration while wasting
+at most 2x slots on padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, pad_graph
+
+
+def bucket_size(x: int, minimum: int = 8) -> int:
+    """Smallest power of two ≥ max(x, minimum) — the pad-to-bucket rule."""
+    return max(int(minimum), 1 << max(0, int(np.ceil(np.log2(max(int(x), 1))))))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchedGraph:
+    """B same-bucket graphs stacked on a leading batch axis.
+
+    ``n`` / ``m`` are the static bucket shapes; ``n_real`` / ``m_real`` are
+    traced per-slot real sizes (so the compiled program is reused across
+    every batch whose graphs land in the same bucket).
+    """
+
+    row_ptr: jax.Array  # (B, n+1) int32
+    col: jax.Array      # (B, m)   int32, PAD on padding slots
+    src: jax.Array      # (B, m)   int32
+    ew: jax.Array       # (B, m)   float32, 0 on padding slots
+    nw: jax.Array       # (B, n)   float32, 0 on padding vertices
+    n_real: jax.Array   # (B,)     int32 — real vertex count per slot
+    m_real: jax.Array   # (B,)     int32 — real directed edge count per slot
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+    b: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def owned(self) -> jax.Array:
+        """(B, n) bool — real (non-padding) vertex slots."""
+        return jnp.arange(self.n, dtype=jnp.int32)[None, :] < self.n_real[:, None]
+
+    def slot(self, i: int) -> Graph:
+        """Slot ``i`` as a bucket-shaped (still padded) single Graph."""
+        return Graph(row_ptr=self.row_ptr[i], col=self.col[i], src=self.src[i],
+                     ew=self.ew[i], nw=self.nw[i], n=self.n, m=self.m)
+
+
+def from_graphs(graphs, n_bucket: int | None = None,
+                m_bucket: int | None = None) -> BatchedGraph:
+    """Stack ``graphs`` into one :class:`BatchedGraph`, padding every graph
+    to the shared bucket shape (defaults: :func:`bucket_size` of the batch
+    maxima)."""
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("from_graphs needs at least one graph")
+    if n_bucket is None:
+        n_bucket = bucket_size(max(g.n for g in graphs), minimum=8)
+    if m_bucket is None:
+        m_bucket = bucket_size(max(g.m for g in graphs), minimum=16)
+    if any(g.n > n_bucket or g.m > m_bucket for g in graphs):
+        raise ValueError(
+            f"graph exceeds bucket ({n_bucket}, {m_bucket}): "
+            f"{[(g.n, g.m) for g in graphs]}")
+    padded = [pad_graph(g, n_bucket, m_bucket) for g in graphs]
+    stack = lambda xs: jnp.stack(xs, axis=0)  # noqa: E731
+    return BatchedGraph(
+        row_ptr=stack([p.row_ptr for p in padded]),
+        col=stack([p.col for p in padded]),
+        src=stack([p.src for p in padded]),
+        ew=stack([p.ew for p in padded]),
+        nw=stack([p.nw for p in padded]),
+        n_real=jnp.asarray([g.n for g in graphs], jnp.int32),
+        m_real=jnp.asarray([int(np.asarray(g.edge_mask).sum()) for g in graphs],
+                           jnp.int32),
+        n=n_bucket,
+        m=m_bucket,
+        b=len(graphs),
+    )

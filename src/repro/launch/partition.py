@@ -32,12 +32,32 @@ def main():
                     help="run refinement under shard_map with P forced host devices")
     ap.add_argument("--halo", action="store_true",
                     help="interface-only halo exchange (distributed fast path)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="partition BATCH copies of --graph in one "
+                         "request-batched call (core.partition_batch; "
+                         "B=1 is bit-identical to the solo path)")
     args = ap.parse_args()
+    if args.batch and args.distributed:
+        ap.error("--batch and --distributed are mutually exclusive")
     # canonicalize aliases (unconstrained-then-snap → snap): the string is
     # echoed in the output JSON, where it keys cross-run comparisons
     args.schedule = resolve_schedule(args.schedule).mode
 
-    if args.distributed:
+    if args.batch:
+        from repro.core import partition_batch
+
+        g = generate(args.graph)
+        t0 = time.time()
+        results = partition_batch([g] * args.batch, k=args.k, eps=args.eps,
+                                  seed=args.seed, refiner=args.refiner,
+                                  schedule=args.schedule,
+                                  eps_coarse=args.eps_coarse)
+        sec = time.time() - t0
+        res = results[0]  # identical graphs + one seed → identical slots
+        out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
+                   batch=args.batch, sec=round(sec, 2),
+                   graphs_per_sec=round(args.batch / sec, 3))
+    elif args.distributed:
         import os
 
         os.environ["XLA_FLAGS"] = (

@@ -12,8 +12,9 @@ primitives, regardless of how the graph is laid out:
   * ``gather``    — concatenate a small per-PE vector on every PE (the
     greedy rebalancer's candidate records).
 
-plus two layout-aware helpers: ``uniform`` (per-vertex randomness drawn in
-*global* vertex space so decisions are P-invariant) and ``apply_moves``
+plus two layout-aware helpers: ``uniform`` (per-vertex randomness keyed on
+*global* vertex ids — :func:`tid_uniform` — so decisions are P-, padding-
+and batch-invariant) and ``apply_moves``
 (scatter the greedy rebalancer's replayed global move list back onto owned
 slots).  Three backends implement the protocol:
 
@@ -59,13 +60,35 @@ class EdgeView(NamedTuple):
         return self.nw.shape[0]
 
 
+def tid_uniform(key, tid, maxval: float = 1.0):
+    """THE per-vertex uniform stream of the refinement engine: one value per
+    *global vertex id*, ``u(v) = uniform(fold_in(key, v))``.
+
+    A pure function of ``(key, id)`` — unlike a ``uniform(key, (n,))`` draw
+    (threefry is not prefix-stable across shapes), the stream is invariant
+    under resharding, padding and batching: every backend (single device,
+    all-gather BSP, halo, and the vmapped pad-to-bucket batched engine)
+    reads the identical value for a given real vertex no matter how many
+    padding slots or batch neighbours surround it.  This is what lets
+    ``partition_batch``'s B=1 path be bit-identical to ``partition`` and a
+    graph's labels be independent of its bucket mates (DESIGN.md §2).
+    Formerly the halo backend's ``uniform_mode="fold"`` scale stream — now
+    the one canonical stream (the shape-dependent global draw is retired
+    from refinement; coarsening keeps its own, see ``global_uniform_full``).
+    """
+    u = jax.vmap(lambda v: jax.random.uniform(jax.random.fold_in(key, v)))(tid)
+    return u * maxval if maxval != 1.0 else u
+
+
 def global_uniform_full(key, n_real: int, tail: int):
     """The (n_real,) global-vertex-space uniform draw plus a zero tail for
     padding slots.  The draw shape must be exactly (n_real,) — threefry is
-    not prefix-stable across shapes — so every consumer (the comm backends
-    here, ``dcoarsen``'s clustering, the host path's ``uniform(key, (n,))``)
-    sees the same per-vertex stream.  This is the ONLY copy of the recipe;
-    ``distributed.djet`` re-exports it."""
+    not prefix-stable across shapes — so every consumer (``dcoarsen``'s
+    clustering and the host clustering path's ``uniform(key, (n,))``) sees
+    the same per-vertex stream.  This is the ONLY copy of the recipe;
+    ``distributed.djet`` re-exports it.  Refinement no longer uses it —
+    the engine's rebalance randomness is the shape-invariant
+    :func:`tid_uniform` stream."""
     return jnp.concatenate(
         [jax.random.uniform(key, (n_real,)), jnp.zeros((tail,), jnp.float32)]
     )
@@ -99,7 +122,9 @@ class SingleComm:
         return x
 
     def uniform(self, key, ev: EdgeView):
-        return jax.random.uniform(key, (self.n_real,))
+        # ev.my_tid == global ids on the single path (padding slots read the
+        # id-0 value; they are masked by ``owned`` / zero weight everywhere)
+        return tid_uniform(key, jnp.where(ev.owned, ev.my_tid, 0))
 
     def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
         idx = jnp.where(moved, tids, labels.shape[0])
@@ -133,9 +158,13 @@ class AllGatherComm:
         return jax.lax.all_gather(x, "pe", tiled=True)
 
     def uniform(self, key, ev: EdgeView):
-        # identical per-vertex stream at every P and on the single path
-        return global_uniform_slice(key, self.gstart, n_local=self.n_local,
-                                    n_real=self.n_real)
+        # fold on TRUE global ids (gstart + slot), not the gathered-layout
+        # my_tid (owner·n_local + offset): ranges are edge-balanced, so the
+        # layout id is only order-isomorphic to — not equal to — the global
+        # id, and it changes with P.  The owned prefix of each PE's range is
+        # contiguous in global ids, so gstart + slot is exact.
+        gid = self.gstart + jnp.arange(self.n_local, dtype=jnp.int32)
+        return tid_uniform(key, jnp.where(ev.owned, gid, 0))
 
     def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
         # tids are gathered-layout ids: owner·n_local + slot
@@ -151,10 +180,12 @@ class HaloComm:
 
     Heads are halo codes (< P·h_local → remote interface slot, else local
     slot + P·h_local); tie-break ids are explicit global ids.  ``uniform``
-    defaults to the same global-vertex-space stream as the other backends
-    (the determinism contract); ``mode="fold"`` keeps the O(n_local)
-    fold-in-per-gid stream for scale runs where materialising (n_real,)
-    per PE is the cost the halo variant exists to avoid.
+    is the canonical per-gid :func:`tid_uniform` stream — O(n_local) per
+    PE, which is exactly the scale property the halo variant exists for.
+    The old ``"global"``/``"fold"`` mode split is gone: the fold stream
+    became THE engine stream (the only one invariant under padding and
+    batching — DESIGN.md §2), so both spellings of ``uniform_mode`` are
+    still accepted and now identical.
     """
 
     kind = "halo"
@@ -188,12 +219,7 @@ class HaloComm:
         return jax.lax.all_gather(x, "pe", tiled=True)
 
     def uniform(self, key, ev: EdgeView):
-        gid = jnp.where(ev.owned, ev.my_tid, 0)
-        if self.uniform_mode == "fold":
-            return jax.vmap(
-                lambda v: jax.random.uniform(jax.random.fold_in(key, v))
-            )(gid)
-        return jax.random.uniform(key, (self.n_real,))[gid]
+        return tid_uniform(key, jnp.where(ev.owned, ev.my_tid, 0))
 
     def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
         # per-PE inverse-permutation gather, O(P·ncand): ownership of a

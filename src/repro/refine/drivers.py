@@ -237,6 +237,145 @@ def make_lp_level_sharded(mesh, sg, k, *, gain="jnp", interpret=None):
 
 
 # --------------------------------------------------------------------------
+# request-batched (pad-to-bucket + vmap) levels — DESIGN.md §2
+# --------------------------------------------------------------------------
+
+def _batched_edge_view(col, src, ew, nw, n_real, n_bucket: int) -> EdgeView:
+    """Per-slot EdgeView of one bucket slot: the single-device view with
+    ``owned`` restricted to the real prefix (padding slots carry nw = 0 /
+    PAD heads and are inert in every engine reduction — the masking
+    contract of ``repro.graphs.batch``)."""
+    from repro.core.graph import PAD  # deferred: breaks the core↔refine cycle
+
+    ids = jnp.arange(n_bucket, dtype=jnp.int32)
+    return EdgeView(src=src, head=col, live=col != PAD, ew=ew, head_tid=col,
+                    my_tid=ids, nw=nw, owned=ids < n_real)
+
+
+@lru_cache(maxsize=128)
+def _batched_level_fn(b, n_bucket, m_bucket, k, patience, max_inner,
+                      gain_kind, max_deg, interpret, variant):
+    """One compiled program refining B bucket slots at once: ``jax.vmap``
+    of the single-device level program over the batch axis.  Memoised on
+    the full bucket key ``(B, n_bucket, m_bucket, k, variant, taus-shape
+    statics, gain backend, …)`` so every batch landing in the same bucket
+    reuses the compiled dispatch."""
+    var = resolve_variant(variant)
+
+    def per_slot(col, src, ew, nw, n_real, labels, key, lmax, taus):
+        ev = _batched_edge_view(col, src, ew, nw, n_real, n_bucket)
+        cm = SingleComm(n_bucket)
+        gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+        if var.mode == "lp":
+            return engine.lp_level(cm, gb, ev, labels, key, lmax, k)
+        return engine.refine_level(cm, gb, ev, labels, key, lmax, taus, k,
+                                   patience, max_inner, move_fn=var.move)
+
+    @jax.jit
+    def fn(col, src, ew, nw, n_real, labels, keys, lmaxs, taus):
+        _count_trace("batched")
+        return jax.vmap(per_slot, in_axes=(0,) * 8 + (None,))(
+            col, src, ew, nw, n_real, labels, keys, lmaxs, taus)
+
+    return fn
+
+
+def batched_max_deg(bg) -> int:
+    """Static padded-adjacency width of a batch: the max degree over every
+    slot, rounded up to the Pallas kernel's degree-chunk multiple so nearby
+    batches share one cache entry (wider padding columns carry weight 0 —
+    exact zero adds, bit-identical gains)."""
+    deg = np.asarray(bg.row_ptr[:, 1:] - bg.row_ptr[:, :-1])
+    d = max(int(deg.max(initial=0)), 1)
+    return -(-d // 16) * 16
+
+
+def make_refine_level_batched(bg, k, *, rounds_taus, patience=12,
+                              max_inner=64, gain="jnp", interpret=None,
+                              variant="jet"):
+    """Fused level refinement over a :class:`repro.graphs.batch.BatchedGraph`.
+
+    Returns ``run(labels, keys, lmaxs) -> labels`` with ``labels`` (B, n),
+    ``keys`` (B,)-stacked PRNG keys and ``lmaxs`` (B,) per-slot balance
+    bounds — ONE dispatch refines all B slots.  Bit-identical per slot to
+    :func:`refine_single` on the unpadded graph (tests/test_batch_parity.py).
+    """
+    resolve_variant(variant)
+    max_deg = batched_max_deg(bg) if _need_max_deg(gain) else None
+    gain_kind = resolve_gain(gain, k, max_deg)
+    fn = _batched_level_fn(
+        bg.b, bg.n, bg.m, k, patience, max_inner, gain_kind,
+        max_deg if gain_kind == "pallas" else None, interpret, variant)
+    taus = jnp.asarray(rounds_taus, jnp.float32)
+
+    def run(labels, keys, lmaxs):
+        _count_dispatch("batched")
+        return fn(bg.col, bg.src, bg.ew, bg.nw, bg.n_real, labels, keys,
+                  jnp.asarray(lmaxs, jnp.float32), taus)
+
+    return run
+
+
+@lru_cache(maxsize=64)
+def _batched_init_fn(b, n_bucket, m_bucket, k, n_restarts):
+    """One compiled program running the full multi-restart initial
+    partitioning for B coarsest graphs: per slot, the exact restart chain
+    of ``repro.core.initial.initial_partition`` (greedy seed → 2-round Jet
+    refine per restart, identical key splits) unrolled inside the trace.
+    Returns stacked (B, R, n) labels plus (B, R) cuts / overloads; the
+    winner selection stays on the host (it is a float compare chain, bit-
+    identical to the solo path's)."""
+    from repro.core.initial import greedy_seed_arith
+    from repro.core.refine import temperature_schedule
+
+    var = resolve_variant("jet")
+    taus = jnp.asarray(temperature_schedule(2), jnp.float32)
+
+    def per_slot(col, src, ew, nw, n_real, key, lmax):
+        ev = _batched_edge_view(col, src, ew, nw, n_real, n_bucket)
+        cm = SingleComm(n_bucket)
+        gb = make_gain("jnp", ev, k, None, None)
+        labs, cuts, ovs = [], [], []
+        for _ in range(n_restarts):
+            key, k1, k2 = jax.random.split(key, 3)
+            labels = greedy_seed_arith(nw, k, k1)
+            labels = engine.refine_level(cm, gb, ev, labels, k2, lmax, taus,
+                                         k, 6, 24, move_fn=var.move)
+            labs.append(labels)
+            cuts.append(engine.cut_of(cm, ev, labels))
+            ovs.append(engine.overload_of(cm, ev, labels, k, lmax))
+        return (jnp.stack(labs), jnp.stack(cuts), jnp.stack(ovs))
+
+    @jax.jit
+    def fn(col, src, ew, nw, n_real, keys, lmaxs):
+        _count_trace("batched_init")
+        return jax.vmap(per_slot)(col, src, ew, nw, n_real, keys, lmaxs)
+
+    return fn
+
+
+def initial_partition_batched(bg, k, keys, lmaxs, n_restarts: int = 4):
+    """Multi-restart initial partitioning of B coarsest graphs in ONE
+    dispatch (B × ``n_restarts`` restart slots in one vmapped program).
+
+    Returns host arrays ``(labels (B, R, n), cuts (B, R), overloads
+    (B, R))``; the caller replays the solo path's winner rule per slot.
+    """
+    fn = _batched_init_fn(bg.b, bg.n, bg.m, k, n_restarts)
+    _count_dispatch("batched_init")
+    labs, cuts, ovs = fn(bg.col, bg.src, bg.ew, bg.nw, bg.n_real, keys,
+                         jnp.asarray(lmaxs, jnp.float32))
+    return np.asarray(labs), np.asarray(cuts), np.asarray(ovs)
+
+
+def batched_cache_info() -> dict:
+    """Introspection for tests/bench: per-factory lru_cache statistics of
+    the bucketed batched programs."""
+    return {"level": _batched_level_fn.cache_info()._asdict(),
+            "init": _batched_init_fn.cache_info()._asdict()}
+
+
+# --------------------------------------------------------------------------
 # halo (interface-only) levels
 # --------------------------------------------------------------------------
 

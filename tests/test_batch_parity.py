@@ -1,0 +1,258 @@
+"""The batched-engine equivalence contract (tentpole of the request-batched
+partitioning engine): ``partition_batch`` is the single-graph path lifted
+over a batch axis, NOT a reimplementation — so its results are pinned to
+``partition``'s bit-for-bit.
+
+  (a) B=1 is bit-identical to ``partition`` for every registered variant ×
+      tolerance schedule (and the pallas-interpret gain backend);
+  (b) a batch of identical graphs yields identical labels in every slot;
+  (c) a graph's labels are independent of batch order and of padding — the
+      same whether it shares a bucket with larger or smaller neighbours,
+      and whether the bucket is barely or vastly oversized;
+  (d) padded vertices never enter cut / imbalance accounting (the reported
+      metrics equal the metrics recomputed on the unpadded graph, and the
+      pad-to-bucket container masks padding with zero weights);
+
+plus a hypothesis fuzz of (b)+(c) over random graph mixes behind the
+existing ``importorskip`` pattern.  Heavy (full V-cycle) cases run once in
+module-scope fixtures and are asserted from multiple tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edge_cut, imbalance, partition, partition_batch
+from repro.core.graph import PAD
+from repro.graphs import BatchedGraph, bucket_size, chung_lu_powerlaw, from_graphs, grid2d
+from repro.refine import drivers
+from repro.refine.schedule import SCHEDULES
+from repro.refine.variants import registered_variants
+
+KW = dict(k=4, seed=0, max_inner=4, coarsen_until=48)
+
+
+def _labels(r):
+    return np.asarray(r.labels)
+
+
+# ---- (a) B=1 bit-identity across the full variant × schedule matrix ------
+
+@pytest.fixture(scope="module")
+def b1_matrix():
+    out = {}
+    for v in registered_variants():
+        for s in SCHEDULES:
+            g = grid2d(19, 17)  # ragged: 323 ∉ 8ℤ — bucket 512 pads 189 slots
+            solo = partition(g, refiner=v, schedule=s, **KW)
+            bat = partition_batch([g], refiner=v, schedule=s, **KW)[0]
+            out[(v, s)] = (solo, bat)
+    return out
+
+
+def test_b1_bit_identical_every_variant_and_schedule(b1_matrix):
+    bad = [ks for ks, (solo, bat) in b1_matrix.items()
+           if not np.array_equal(_labels(solo), _labels(bat))]
+    assert not bad, f"variant×schedule cells diverging from partition: {bad}"
+
+
+def test_b1_result_fields_identical(b1_matrix):
+    for ks, (solo, bat) in b1_matrix.items():
+        assert bat.cut == solo.cut, ks
+        assert bat.imbalance == solo.imbalance, ks
+        assert bat.levels == solo.levels, ks
+        assert bat.level_eps == solo.level_eps, ks
+
+
+def test_b1_bit_identical_pallas_interpret():
+    g = grid2d(19, 17)
+    solo = partition(g, gain="pallas", **KW)
+    bat = partition_batch([g], gain="pallas", **KW)[0]
+    assert np.array_equal(_labels(solo), _labels(bat))
+
+
+def test_b1_trace_levels_identical():
+    g = grid2d(19, 17)
+    solo = partition(g, trace_levels=True, **KW)
+    bat = partition_batch([g], trace_levels=True, **KW)[0]
+    assert bat.level_trace == solo.level_trace
+
+
+# ---- (b)+(c) batch invariants --------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixed_batch():
+    """One heavy run shared by the slot-equality / order / padding tests:
+    a mixed-size batch (two distinct graphs, one duplicated), its reversed
+    ordering, and the B=1 references.  coalesce=False so the duplicated
+    graph genuinely occupies two vmap slots — slot equality here pins the
+    engine's determinism, not the coalescing shortcut (which has its own
+    test)."""
+    g_small = grid2d(19, 17)                                # n = 323
+    g_large = chung_lu_powerlaw(n=437, avg_deg=6, seed=3)   # n = 437
+    fwd = partition_batch([g_large, g_small, g_small], coalesce=False, **KW)
+    rev = partition_batch([g_small, g_small, g_large], coalesce=False, **KW)
+    ref_small = partition_batch([g_small], **KW)[0]
+    ref_large = partition_batch([g_large], **KW)[0]
+    return {"g_small": g_small, "g_large": g_large, "fwd": fwd, "rev": rev,
+            "ref_small": ref_small, "ref_large": ref_large}
+
+
+def test_identical_graphs_identical_slots(mixed_batch):
+    fwd = mixed_batch["fwd"]
+    assert np.array_equal(_labels(fwd[1]), _labels(fwd[2]))
+
+
+def test_batch_order_independence(mixed_batch):
+    fwd, rev = mixed_batch["fwd"], mixed_batch["rev"]
+    assert np.array_equal(_labels(fwd[0]), _labels(rev[2]))
+    assert np.array_equal(_labels(fwd[1]), _labels(rev[0]))
+
+
+def test_padding_independence(mixed_batch):
+    """A graph's labels are unchanged whether it rides alone (small bucket)
+    or shares a bucket with a larger neighbour (more padding), and whether
+    the smaller or the larger graph sets the bucket."""
+    fwd = mixed_batch["fwd"]
+    assert np.array_equal(_labels(fwd[1]), _labels(mixed_batch["ref_small"]))
+    assert np.array_equal(_labels(fwd[0]), _labels(mixed_batch["ref_large"]))
+
+
+def test_oversized_bucket_independence():
+    """Forcing a vastly oversized bucket (4x the natural one) must not
+    change a single label — padding slots are inert at any amount."""
+    g = grid2d(9, 7)  # small so the oversized run stays cheap
+    ref = partition_batch([g], **KW)[0]
+
+    from repro.graphs import batch as B
+
+    orig = B.bucket_size
+    try:
+        B.bucket_size = lambda x, minimum=8: orig(x, minimum) * 4
+        wide = partition_batch([g], **KW)[0]
+    finally:
+        B.bucket_size = orig
+    assert np.array_equal(_labels(ref), _labels(wide))
+
+
+# ---- (d) padded vertices never enter the accounting ----------------------
+
+def test_metrics_match_unpadded_recompute(mixed_batch):
+    for r, gname in ((mixed_batch["fwd"][0], "g_large"),
+                     (mixed_batch["fwd"][1], "g_small")):
+        g = mixed_batch[gname]
+        assert r.cut == float(edge_cut(g, jnp.asarray(_labels(r))))
+        assert r.imbalance == float(imbalance(g, jnp.asarray(_labels(r)),
+                                              KW["k"]))
+        assert _labels(r).shape == (g.n,)  # padding slots never returned
+
+
+def test_batched_container_masks_padding():
+    g1, g2 = grid2d(5, 5), grid2d(4, 3)
+    bg = from_graphs([g1, g2])
+    assert isinstance(bg, BatchedGraph)
+    assert bg.b == 2 and bg.n == bucket_size(25) and bg.m == bucket_size(g1.m, 16)
+    owned = np.asarray(bg.owned)
+    assert owned.sum(axis=1).tolist() == [g1.n, g2.n]
+    nw = np.asarray(bg.nw)
+    col = np.asarray(bg.col)
+    ew = np.asarray(bg.ew)
+    for i, g in enumerate((g1, g2)):
+        assert (nw[i, g.n:] == 0).all()          # padding vertices weigh 0
+        assert (col[i, g.m:] == int(PAD)).all()  # padding edges are PAD
+        assert (ew[i, g.m:] == 0).all()          # ... with weight 0
+    with pytest.raises(ValueError, match="exceeds bucket"):
+        from_graphs([g1], n_bucket=8, m_bucket=8)
+    with pytest.raises(ValueError, match="at least one graph"):
+        from_graphs([])
+
+
+def test_one_dispatch_per_rung_per_batch(mixed_batch):
+    """The whole batch refines in max-levels dispatches of the batched
+    level program plus ONE batched-init dispatch — not per graph."""
+    g_small, g_large = mixed_batch["g_small"], mixed_batch["g_large"]
+    drivers.reset_counters()
+    res = partition_batch([g_large, g_small], **KW)
+    max_rungs = max(r.levels for r in res)
+    assert drivers.DISPATCHES.get("batched") == max_rungs
+    assert drivers.DISPATCHES.get("batched_init") == 1
+    assert drivers.DISPATCHES.get("single", 0) == 0
+    assert drivers.TRACES.get("batched", 0) <= drivers.DISPATCHES["batched"]
+
+
+def test_coalescing_matches_uncoalesced():
+    """Identical requests (same Graph object + seed) coalesce into one
+    engine slot by default; the shared result is bit-identical to the
+    uncoalesced run (one slot per request), and a different seed keeps its
+    own slot."""
+    g = grid2d(9, 7)
+    kw = {k: v for k, v in KW.items() if k != "seed"}
+    co = partition_batch([g, g, g], seeds=[0, 0, 3], **kw)
+    un = partition_batch([g, g, g], seeds=[0, 0, 3], coalesce=False, **kw)
+    for a, b in zip(co, un):
+        assert np.array_equal(_labels(a), _labels(b))
+        assert a.cut == b.cut and a.imbalance == b.imbalance
+    assert co[0] is co[1]      # aliases share the unique slot's result
+    assert co[0] is not co[2]  # different seed = different request
+
+
+def test_seeds_override_matches_solo():
+    g = grid2d(9, 7)
+    kw = {k: v for k, v in KW.items() if k != "seed"}
+    res = partition_batch([g, g], seeds=[0, 3], **kw)
+    assert np.array_equal(_labels(res[0]), _labels(partition(g, seed=0, **kw)))
+    assert np.array_equal(_labels(res[1]), _labels(partition(g, seed=3, **kw)))
+    with pytest.raises(ValueError, match="seeds has"):
+        partition_batch([g, g], seeds=[0], **kw)
+    assert partition_batch([], **KW) == []
+
+
+# ---- hypothesis fuzz: slot-equality + padding independence ----------------
+
+def test_batch_invariants_fuzz():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def graph_mix(draw):
+        """2-3 small random graphs, at least two of them identical."""
+        rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+        gs = []
+        for _ in range(draw(st.integers(1, 2))):
+            w = draw(st.integers(3, 7))
+            h = draw(st.integers(3, 7))
+            gs.append(grid2d(w, h))
+        n = draw(st.integers(8, 24))
+        from repro.core.graph import from_coo
+        m = draw(st.integers(n, 3 * n))
+        u = rng.integers(0, n, m)
+        v = rng.integers(0, n, m)
+        keep = u != v
+        if keep.sum() == 0:
+            u, v, keep = np.array([0]), np.array([1]), np.array([True])
+        gs.append(from_coo(n, u[keep], v[keep]))
+        dup = gs[draw(st.integers(0, len(gs) - 1))]
+        order = draw(st.permutations(list(range(len(gs) + 1))))
+        return gs + [dup], order, gs.index(dup)
+
+    @given(graph_mix(), st.integers(0, 50))
+    @settings(max_examples=8, deadline=None)
+    def fuzz(mix, seed):
+        gs, order, dup_i = mix
+        # coalesce=False: the duplicated object must agree slot-by-slot
+        # through the vmapped engine, not via the coalescing shortcut
+        kw = dict(k=3, seed=seed, max_inner=2, coarsen_until=16,
+                  coalesce=False)
+        res = partition_batch(gs, **kw)
+        # duplicated graph → identical slots
+        assert np.array_equal(_labels(res[dup_i]), _labels(res[-1]))
+        # batch order independence
+        perm = partition_batch([gs[i] for i in order], **kw)
+        for j, i in enumerate(order):
+            assert np.array_equal(_labels(perm[j]), _labels(res[i]))
+        # padding independence: each slot equals its own B=1 run
+        for i, g in enumerate(gs):
+            solo = partition_batch([g], **kw)[0]
+            assert np.array_equal(_labels(res[i]), _labels(solo))
+            assert res[i].cut == solo.cut
+
+    fuzz()

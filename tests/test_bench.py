@@ -31,10 +31,11 @@ SNAPSHOT = os.path.abspath(os.path.join(
 def _cell(**over):
     cell = {
         "graph": "grid2d_24", "variant": "jet", "schedule": "constant",
-        "p": 1, "k": 4,
+        "engine": "dpartition", "p": 1, "k": 4, "batch": 1,
         "n": 576, "m": 2208, "cut": 86.0, "imbalance": 0.0278, "levels": 4,
         "coarsen_us": 100.0, "init_us": 10.0, "refine_us": 200.0,
-        "total_us": 400.0, "dispatch_count": 8,
+        "total_us": 400.0, "graphs_per_sec": 2500.0,
+        "p50_us": 400.0, "p99_us": 410.0, "dispatch_count": 8,
         "dispatches": {"sharded": 4, "single": 4},
     }
     cell.update(over)
@@ -70,6 +71,32 @@ def test_validator_rejects_failure_modes():
                for e in validate_bench(_doc([_cell(cut=-1.0)])))
     assert any("dispatches" in e
                for e in validate_bench(_doc([_cell(dispatches={"x": 1.5})])))
+
+
+def test_validator_rejects_cross_field_nonsense():
+    """The latent-bug class the validator previously let through: a negative
+    phase timing or p99 < p50 is finite and well-typed but physically
+    impossible — it must fail the document, not poison downstream ratios."""
+    assert any("negative timing refine_us" in e
+               for e in validate_bench(_doc([_cell(refine_us=-3.0)])))
+    assert any("negative timing coarsen_us" in e
+               for e in validate_bench(_doc([_cell(coarsen_us=-0.1)])))
+    assert any("negative timing graphs_per_sec" in e
+               for e in validate_bench(_doc([_cell(graphs_per_sec=-1.0)])))
+    assert any("negative timing p50_us" in e
+               for e in validate_bench(_doc([_cell(p50_us=-5.0,
+                                                   p99_us=-5.0)])))
+    assert any("p99_us" in e and "< p50_us" in e
+               for e in validate_bench(_doc([_cell(p50_us=500.0,
+                                                   p99_us=400.0)])))
+    assert any("batch" in e
+               for e in validate_bench(_doc([_cell(batch=0)])))
+    assert any("engine" in e
+               for e in validate_bench(_doc([_cell(engine="warp")])))
+    # equal percentiles (one-shot classic cells) remain valid
+    assert validate_bench(_doc([_cell(p50_us=400.0, p99_us=400.0)])) == []
+    # zero timings are measurements, not bugs
+    assert validate_bench(_doc([_cell(init_us=0.0)])) == []
 
 
 def test_validator_rejects_empty_results():
@@ -138,6 +165,29 @@ def test_sweep_produces_schema_valid_cells():
     assert summary["jet"]["gmean_cut_ratio_vs_jet"] == pytest.approx(1.0)
 
 
+def test_batch_sweep_produces_schema_valid_cells():
+    """One real batched-engine grid through the subprocess runner (the CI
+    batch-smoke code path): schema-valid cells, recorded throughput columns,
+    and the child's dispatch-contract check passing."""
+    cells, failures = bench.run_batch_sweep(
+        graphs=("grid2d_24",), variants=("jet",), k=4, seed=0,
+        max_inner=2, coarsen_until=64, schedule="constant",
+        batch_sizes=(1, 2), iters=2, timeout=1200)
+    assert not failures, failures
+    doc = _doc(cells)
+    assert validate_bench(doc) == [], validate_bench(doc)
+    assert [(c["engine"], c["batch"]) for c in cells] == \
+        [("batched", 1), ("batched", 2)]
+    for c in cells:
+        assert c["graphs_per_sec"] > 0
+        assert c["p99_us"] >= c["p50_us"] > 0
+        assert c["dispatches"].get("batched", 0) == c["levels"]
+        assert c["dispatches"].get("batched_init", 0) == 1
+    # identical graph + seed in every slot → B must not change quality
+    assert cells[0]["cut"] == cells[1]["cut"]
+    assert cells[0]["imbalance"] == cells[1]["imbalance"]
+
+
 # ---- snapshot regression (benchmarks/snapshots/) --------------------------
 
 # pinned band: a fresh run's per-cell cut, gmean'd over all compared cells,
@@ -177,8 +227,18 @@ def test_snapshot_regression():
         assert not failures, failures
 
     def key(c):
+        # engine+batch are part of the identity: a classic P=1 cell and a
+        # batched B=1 cell of the same graph/variant are different
+        # measurements and must not collide in the diff
         return (c["graph"], c["variant"], c["p"], c["k"],
-                c.get("schedule", "constant"))
+                c.get("schedule", "constant"),
+                c.get("engine", "dpartition"), c.get("batch", 1))
+
+    # throughput columns are RECORDED in every snapshot cell (trajectory
+    # data) but never gated — rates are load-sensitive; quality (cut) gates
+    for c in snap["cells"]:
+        assert math.isfinite(c["graphs_per_sec"]), key(c)
+        assert c["p99_us"] >= c["p50_us"] >= 0, key(c)
 
     base = {key(c): c for c in snap["cells"]}
     missing = [key(c) for c in fresh if key(c) not in base]

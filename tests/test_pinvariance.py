@@ -9,7 +9,9 @@ ragged last shard also exercises the device-derived interface permutation
 and halo slot map), and matches the single-device reference.  The same
 contract is pinned for the per-level tolerance schedule
 (schedule="geometric": the eps_l derivation must be P-invariant) and the
-jet_v vertex-ordered variant."""
+jet_v vertex-ordered variant — and extends to the batched engine: the same
+ragged instances, alone (B=1) or sharing one mixed-size bucket (B=3),
+match the reference through both gain backends (batch-invariance)."""
 
 import json
 import os
@@ -68,7 +70,29 @@ for name, g in (("grid19x17", grid2d(19, 17)),
         rec[f"{tag}_p8"] = bool(np.array_equal(ref2, h8))
         rec[f"{tag}_allgather_p8"] = bool(np.array_equal(ref2, a8))
     out[name] = rec
-print("RESULT::" + json.dumps(out))
+
+# the batched engine over the same ragged graphs: B=1, and a mixed-size
+# B=3 bucket (both graphs + a duplicated slot, every n ∉ 8ℤ so the bucket
+# itself is ragged) must replay the single-device reference bit-for-bit
+# through both gain backends
+from repro.core import partition_batch
+g_a = grid2d(19, 17)
+g_b = chung_lu_powerlaw(n=437, avg_deg=6, seed=3)
+ref_a = np.asarray(partition(g_a, k=4, **KW).labels)
+ref_b = np.asarray(partition(g_b, k=4, **KW).labels)
+brec = {}
+for gk in ("jnp", "pallas"):
+    b1 = np.asarray(partition_batch([g_a], k=4, gain=gk, **KW)[0].labels)
+    mixed = partition_batch([g_b, g_a, g_a], k=4, gain=gk, **KW)
+    brec[f"b1_{gk}"] = bool(np.array_equal(ref_a, b1))
+    brec[f"b3_slot_large_{gk}"] = bool(
+        np.array_equal(ref_b, np.asarray(mixed[0].labels)))
+    brec[f"b3_slot_ragged_{gk}"] = bool(
+        np.array_equal(ref_a, np.asarray(mixed[1].labels)))
+    brec[f"b3_dup_slots_{gk}"] = bool(
+        np.array_equal(np.asarray(mixed[1].labels),
+                       np.asarray(mixed[2].labels)))
+print("RESULT::" + json.dumps({"graphs": out, "batched": brec}))
 """
 
 
@@ -86,13 +110,13 @@ def ragged():
 
 @pytest.mark.parametrize("comm", ["allgather", "halo", "halo_sharded"])
 def test_ragged_shard_p_invariant(ragged, comm):
-    for name, rec in ragged.items():
+    for name, rec in ragged["graphs"].items():
         assert rec[f"{comm}_p1"], (name, rec)
         assert rec[f"{comm}_p8"], (name, rec)
 
 
 def test_ragged_shard_dlp_p_invariant(ragged):
-    for name, rec in ragged.items():
+    for name, rec in ragged["graphs"].items():
         assert rec["dlp_p_invariant"], (name, rec)
 
 
@@ -101,7 +125,20 @@ def test_ragged_shard_schedule_and_jet_v_p_invariant(ragged, tag):
     """Per-level eps_l derivation (geometric schedule) and the jet_v
     variant are P-invariant over ragged shards, on the device-native
     halo × sharded V-cycle and the all-gather BSP path alike."""
-    for name, rec in ragged.items():
+    for name, rec in ragged["graphs"].items():
         assert rec[f"{tag}_p1"], (name, rec)
         assert rec[f"{tag}_p8"], (name, rec)
         assert rec[f"{tag}_allgather_p8"], (name, rec)
+
+
+@pytest.mark.parametrize("gk", ["jnp", "pallas"])
+def test_ragged_batched_bucket_matches_reference(ragged, gk):
+    """Batch-invariance over the same ragged instances: B=1 and every slot
+    of a mixed-size ragged bucket (323- and 437-vertex graphs sharing a
+    512 bucket) replay the single-device reference bit-for-bit, through
+    both gain backends; duplicated slots agree exactly."""
+    rec = ragged["batched"]
+    assert rec[f"b1_{gk}"], rec
+    assert rec[f"b3_slot_large_{gk}"], rec
+    assert rec[f"b3_slot_ragged_{gk}"], rec
+    assert rec[f"b3_dup_slots_{gk}"], rec

@@ -4,11 +4,13 @@ partitions from one seed across the full backend matrix
     {gain: jnp, pallas-interpret} × {comm: single, all-gather, halo}
                                   × {P: 1, 8} × {coarsen: sharded, host}
 
-plus the fused round-loop contract — each refinement level executes as a
-single compiled device-resident program (one dispatch per level, no
-per-round Python dispatch) on the all-gather AND the halo protocol — and
-the pinned ``uniform_mode="fold"`` halo rebalance stream: its own stream
-(allowed to diverge from the global one), but self-consistent across P."""
+plus the vmap-lifted batched engine ({gain} × B ∈ {1, 3}, incl. a ragged
+mixed-size bucket) and the fused round-loop contract — each refinement
+level executes as a single compiled device-resident program (one dispatch
+per level on the all-gather AND the halo protocol; one dispatch per level
+per BATCH on the batched engine) — and the ``uniform_mode="fold"`` halo
+rebalance stream, which is now THE engine stream (``tid_uniform``):
+P-invariant and identical under both mode spellings."""
 
 import json
 import os
@@ -79,13 +81,34 @@ labels["halo:P1:hostcoarsen:jnp"] = np.asarray(
 labels["halo:P8:hostcoarsen:jnp"] = np.asarray(
     dpartition(g, k=k, P=8, halo=True, coarsen="host", **KW).labels)
 
-# pinned fold-mode contract: the O(n_local) fold-in-per-gid rebalance stream
-# is its own stream (it may diverge from the global-vertex-space one) but
-# must be self-consistent across P from one seed
+# pinned fold-mode contract: since the fold stream became THE engine
+# stream, both uniform_mode spellings are identical — P-invariant AND
+# bit-identical to the default halo run
 fold1 = np.asarray(
     dpartition(g, k=k, P=1, halo=True, halo_uniform="fold", **KW).labels)
 fold8 = np.asarray(
     dpartition(g, k=k, P=8, halo=True, halo_uniform="fold", **KW).labels)
+
+# batched-engine cells: the vmap-lifted driver replays the same move
+# sequence as the single path through both gain backends, at B=1 and as a
+# slot of a mixed-size B=3 bucket holding a ragged graph (n = 323 ∉ 8ℤ)
+from repro.core import partition_batch
+g_r = grid2d(19, 17)  # ragged: n = 323
+for gk in ("jnp", "pallas"):
+    labels[f"batched:B1:{gk}"] = np.asarray(
+        partition_batch([g], k=k, gain=gk, **KW)[0].labels)
+drivers.reset_counters()
+rb = partition_batch([g, g_r, g_r], k=k, gain="jnp", **KW)
+counts["batched_levels_max"] = max(r.levels for r in rb)
+counts["batched_dispatches"] = drivers.DISPATCHES.get("batched", 0)
+counts["batched_traces"] = drivers.TRACES.get("batched", 0)
+counts["batched_init_dispatches"] = drivers.DISPATCHES.get("batched_init", 0)
+counts["batched_run_single_dispatches"] = drivers.DISPATCHES.get("single", 0)
+labels["batched:B3:slot0:jnp"] = np.asarray(rb[0].labels)
+ragged_slots_equal = bool(np.array_equal(np.asarray(rb[1].labels),
+                                         np.asarray(rb[2].labels)))
+ragged_matches_solo = bool(np.array_equal(
+    np.asarray(rb[1].labels), np.asarray(partition(g_r, k=k, **KW).labels)))
 
 ref_name = "single:P1:jnp"
 ref = labels[ref_name]
@@ -95,6 +118,8 @@ out = {
     "counts": counts,
     "fold_p_invariant": bool(np.array_equal(fold1, fold8)),
     "fold_matches_global": bool(np.array_equal(fold8, labels["halo:P8:jnp"])),
+    "ragged_slots_equal": ragged_slots_equal,
+    "ragged_matches_solo": ragged_matches_solo,
 }
 print("RESULT::" + json.dumps(out))
 """
@@ -114,11 +139,12 @@ def matrix():
 
 def test_full_backend_matrix_bit_identical(matrix):
     """Every gain × comm × P × coarsening combination replays the same move
-    sequence — including the device-native halo V-cycle and its host-coarsen
-    fallback."""
+    sequence — including the device-native halo V-cycle, its host-coarsen
+    fallback, and the vmap-lifted batched engine (B=1 and as a slot of a
+    mixed-size bucket)."""
     bad = [name for name, eq in matrix["equal"].items() if not eq]
     assert not bad, f"combinations diverging from single:P1:jnp: {bad}"
-    assert len(matrix["equal"]) == 14
+    assert len(matrix["equal"]) == 17
 
 
 def test_each_level_is_one_dispatch(matrix):
@@ -143,8 +169,27 @@ def test_halo_level_is_one_dispatch(matrix):
 
 
 def test_fold_stream_p_invariant(matrix):
-    """uniform_mode="fold" (the O(n_local) halo scale stream) is pinned:
-    self-consistent across P — it intentionally trades cross-backend
-    bit-identity with the global stream for O(n_local) memory, so equality
-    with the global-stream partition is NOT asserted (DESIGN.md §2)."""
+    """The fold stream (per-gid ``tid_uniform``) became THE engine stream,
+    so ``uniform_mode="fold"`` is P-invariant AND bit-identical to the
+    default halo run — the two spellings are now the same backend
+    (DESIGN.md §2)."""
     assert matrix["fold_p_invariant"]
+    assert matrix["fold_matches_global"]
+
+
+def test_batched_level_is_one_dispatch(matrix):
+    """The batched engine keeps the fused-loop contract per BATCH, not per
+    graph: a mixed-size B=3 batch refines in max-levels batched dispatches
+    plus ONE batched-init dispatch, with no single-device level programs."""
+    c = matrix["counts"]
+    assert c["batched_dispatches"] == c["batched_levels_max"], c
+    assert c["batched_traces"] <= c["batched_dispatches"], c
+    assert c["batched_init_dispatches"] == 1, c
+    assert c["batched_run_single_dispatches"] == 0, c
+
+
+def test_batched_ragged_bucket_slots(matrix):
+    """Inside the mixed bucket the duplicated ragged graph (n = 323 ∉ 8ℤ)
+    lands in identical slots, each bit-identical to its own solo run."""
+    assert matrix["ragged_slots_equal"]
+    assert matrix["ragged_matches_solo"]
