@@ -51,7 +51,9 @@ os.environ["XLA_FLAGS"] = (
 from benchmarks.common import bench_graph
 from repro.distributed import dpartition
 from repro.refine import drivers
+from repro.roofline import partition_phase_model, phase_roofline
 
+comm = "halo" if cfg["halo"] else ("single" if cfg["p"] == 1 else "allgather")
 cells = []
 for gname in cfg["graphs"]:
     g = bench_graph(gname)
@@ -61,11 +63,22 @@ for gname in cfg["graphs"]:
         r = dpartition(g, k=cfg["k"], P=cfg["p"], seed=cfg["seed"],
                        refiner=variant, max_inner=cfg["max_inner"],
                        coarsen_until=cfg["coarsen_until"], timing=True,
-                       schedule=cfg["schedule"])
+                       schedule=cfg["schedule"], halo=cfg["halo"],
+                       gain=cfg["gain"])
         total_s = time.perf_counter() - t0
+        # achieved-vs-peak per phase (schema v4): the analytic useful-work
+        # floor of each phase over its measured wall seconds, against the
+        # --hw preset's peaks (repro.roofline)
+        model = partition_phase_model(int(g.n), int(g.m), cfg["k"],
+                                      int(r.levels), rounds=cfg["max_inner"])
+        roof = {ph: phase_roofline(model[ph]["flops"], model[ph]["bytes"],
+                                   r.timings.get(ph + "_s", 0.0),
+                                   hw=cfg["hw"])
+                for ph in ("coarsen", "init", "refine")}
         cells.append({
             "graph": gname, "variant": variant, "p": cfg["p"], "k": cfg["k"],
             "schedule": cfg["schedule"], "engine": "dpartition", "batch": 1,
+            "comm": comm, "gain": cfg["gain"],
             "n": int(g.n), "m": int(g.m),
             "cut": float(r.cut), "imbalance": float(r.imbalance),
             "levels": int(r.levels),
@@ -80,6 +93,7 @@ for gname in cfg["graphs"]:
             "p99_us": total_s * 1e6,
             "dispatch_count": int(drivers.DISPATCH_COUNT),
             "dispatches": dict(drivers.DISPATCHES),
+            "roofline": roof,
         })
         print("CELL::" + cells[-1]["graph"] + "/" + variant, file=sys.stderr)
 print("RESULT::" + json.dumps(cells))
@@ -105,6 +119,7 @@ import numpy as np
 from benchmarks.common import bench_graph
 from repro.core import partition_batch
 from repro.refine import drivers
+from repro.roofline import partition_phase_model, phase_roofline
 
 cells = []
 for gname in cfg["graphs"]:
@@ -133,9 +148,19 @@ for gname in cfg["graphs"]:
                       file=sys.stderr)
                 sys.exit(3)
             med_s = float(np.percentile(lat, 50))
+            # batched cells have no phase boundaries (one fused program):
+            # roofline reports the whole-model floor over per-call p50
+            model = partition_phase_model(int(g.n), int(g.m), cfg["k"],
+                                          int(res[0].levels),
+                                          rounds=cfg["max_inner"])
+            roof = {"total": phase_roofline(
+                b * sum(t["flops"] for t in model.values()),
+                b * sum(t["bytes"] for t in model.values()),
+                med_s, hw=cfg["hw"])}
             cells.append({
                 "graph": gname, "variant": variant, "p": 1, "k": cfg["k"],
                 "schedule": cfg["schedule"], "engine": "batched", "batch": b,
+                "comm": "single", "gain": "jnp",
                 "n": int(g.n), "m": int(g.m),
                 "cut": float(res[0].cut),
                 "imbalance": float(res[0].imbalance),
@@ -147,6 +172,7 @@ for gname in cfg["graphs"]:
                 "p99_us": float(np.percentile(lat, 99)) * 1e6,
                 "dispatch_count": int(drivers.DISPATCH_COUNT),
                 "dispatches": dict(drivers.DISPATCHES),
+                "roofline": roof,
             })
             print("CELL::" + gname + "/" + variant + "/B%d" % b,
                   file=sys.stderr)
@@ -155,7 +181,7 @@ print("RESULT::" + json.dumps(cells))
 
 
 def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
-                    schedule, batch_sizes, iters=5, timeout=3600):
+                    schedule, batch_sizes, iters=5, timeout=3600, hw="v5e"):
     """Run the batched-engine grid in one subprocess; returns
     (cells, failures).  A dispatch-contract violation in any cell is a
     sweep failure (child exit 3)."""
@@ -165,7 +191,7 @@ def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
     cfg = {"graphs": list(graphs), "variants": list(variants), "k": k,
            "seed": seed, "max_inner": max_inner,
            "coarsen_until": coarsen_until, "schedule": schedule,
-           "batch_sizes": list(batch_sizes), "iters": iters}
+           "batch_sizes": list(batch_sizes), "iters": iters, "hw": hw}
     try:
         proc = subprocess.run(
             [sys.executable, "-c", CHILD_BATCH, json.dumps(cfg)],
@@ -184,15 +210,19 @@ def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
 
 
 def run_sweep(ps, graphs, variants, k, seed, max_inner, coarsen_until,
-              timeout=3600, schedule="constant"):
-    """Run the sweep, one subprocess per P; returns (cells, failures)."""
+              timeout=3600, schedule="constant", halo=False, gain="jnp",
+              hw="v5e"):
+    """Run the sweep, one subprocess per P; returns (cells, failures).
+    ``halo``/``gain`` pick the comm and kernel backends of every cell
+    (the v4 comm/gain columns); ``hw`` names the roofline preset."""
     cells, failures = [], []
     env = dict(os.environ, PYTHONPATH=os.pathsep.join([SRC, ROOT]),
                JAX_PLATFORMS="cpu")
     for p in ps:
         cfg = {"p": p, "graphs": list(graphs), "variants": list(variants),
                "k": k, "seed": seed, "max_inner": max_inner,
-               "coarsen_until": coarsen_until, "schedule": schedule}
+               "coarsen_until": coarsen_until, "schedule": schedule,
+               "halo": bool(halo), "gain": gain, "hw": hw}
         try:
             proc = subprocess.run(
                 [sys.executable, "-c", CHILD, json.dumps(cfg)],
@@ -221,8 +251,9 @@ def summarize(cells, baseline="jet"):
     from benchmarks.common import gmean
 
     def cell_key(c):
-        return (c["graph"], c["p"], c.get("schedule", "constant"),
-                c.get("engine", "dpartition"), c.get("batch", 1))
+        return (c["graph"], c["p"], c["k"], c.get("schedule", "constant"),
+                c.get("engine", "dpartition"), c.get("batch", 1),
+                c.get("comm", "single"), c.get("gain", "jnp"))
 
     base = {cell_key(c): c["cut"] for c in cells if c["variant"] == baseline}
     out = {}
@@ -266,6 +297,17 @@ def main(argv=None) -> int:
                          "(engine='batched' cells; 0 = off)")
     ap.add_argument("--batch-iters", type=int, default=5,
                     help="steady-state timing iterations per batched cell")
+    ap.add_argument("--hw", default="v5e",
+                    help="roofline hardware preset for the per-phase "
+                         "achieved-vs-peak fractions (repro.roofline "
+                         "HW_PRESETS; the brief's target v5e by default)")
+    ap.add_argument("--ks", default=None,
+                    help="comma-separated extra k values swept as "
+                         "jet/P=1 cells on the first graph (default: "
+                         "8,16 in smoke mode — the widened snapshot grid)")
+    ap.add_argument("--no-wide", action="store_true",
+                    help="skip the widened grid (extra-k + halo-backend "
+                         "cells) even in smoke mode")
     args = ap.parse_args(argv)
     if args.batch < 0:
         ap.error("--batch must be >= 0")
@@ -289,11 +331,35 @@ def main(argv=None) -> int:
     coarsen_until = 64 if args.smoke else None
 
     print(f"bench: variants={variants} ps={ps} graphs={graphs} "
-          f"k={args.k} max_inner={max_inner} schedule={args.schedule}",
+          f"k={args.k} max_inner={max_inner} schedule={args.schedule} "
+          f"hw={args.hw}",
           flush=True)
     cells, failures = run_sweep(ps, graphs, variants, args.k, args.seed,
                                 max_inner, coarsen_until,
-                                schedule=args.schedule)
+                                schedule=args.schedule, hw=args.hw)
+
+    # widened grid (v4): extra-k cells + halo-backend cells ride along in
+    # smoke mode so the committed snapshot covers the k axis and both halo
+    # kernel backends (jnp reference vs the fused Pallas kernel)
+    extra_ks = (tuple(int(x) for x in args.ks.split(","))
+                if args.ks else ((8, 16) if args.smoke else ()))
+    wide_variant = "jet" if "jet" in variants else variants[0]
+    if not args.no_wide:
+        for kk in extra_ks:
+            c2, f2 = run_sweep((ps[0],), (graphs[0],), (wide_variant,),
+                               kk, args.seed, max_inner, coarsen_until,
+                               schedule=args.schedule, hw=args.hw)
+            cells.extend(c2)
+            failures.extend(f2)
+        if args.smoke:
+            halo_p = max(ps)
+            for gkind in ("jnp", "pallas"):
+                c3, f3 = run_sweep((halo_p,), graphs, (wide_variant,),
+                                   args.k, args.seed, max_inner,
+                                   coarsen_until, schedule=args.schedule,
+                                   halo=True, gain=gkind, hw=args.hw)
+                cells.extend(c3)
+                failures.extend(f3)
 
     batch_sizes = ()
     if args.batch:
@@ -301,7 +367,7 @@ def main(argv=None) -> int:
         batch_sizes = (1, args.batch) if args.batch > 1 else (1,)
         bcells, bfail = run_batch_sweep(
             graphs, variants, args.k, args.seed, max_inner, coarsen_until,
-            args.schedule, batch_sizes, iters=args.batch_iters)
+            args.schedule, batch_sizes, iters=args.batch_iters, hw=args.hw)
         cells.extend(bcells)
         failures.extend(bfail)
 
@@ -314,7 +380,9 @@ def main(argv=None) -> int:
                    "graphs": list(graphs), "k": args.k, "seed": args.seed,
                    "max_inner": max_inner, "coarsen_until": coarsen_until,
                    "schedule": args.schedule,
-                   "batch_sizes": list(batch_sizes)},
+                   "batch_sizes": list(batch_sizes),
+                   "extra_ks": list(extra_ks) if not args.no_wide else [],
+                   "hw": args.hw},
         "versions": {"jax": jax.__version__, "numpy": np.__version__,
                      "python": sys.version.split()[0]},
         "summary": summarize(cells),
@@ -332,7 +400,8 @@ def main(argv=None) -> int:
     for c in cells:
         eng = (f"B{c['batch']}" if c.get("engine") == "batched"
                else f"P{c['p']}")
-        print(f"  {c['graph']:12s} {c['variant']:6s} {eng} "
+        print(f"  {c['graph']:12s} {c['variant']:6s} {eng} k={c['k']:<2d} "
+              f"{c['comm']:9s}/{c['gain']:6s} "
               f"cut={c['cut']:9.1f} imb={c['imbalance']:.4f} "
               f"levels={c['levels']} p50_us={c['p50_us']:.0f} "
               f"g/s={c['graphs_per_sec']:.2f} "

@@ -54,9 +54,18 @@ def bench_graph(name):
 # "batch" (B of the cell), and throughput columns "graphs_per_sec",
 # "p50_us", "p99_us" (per-call latency percentiles over the timing loop;
 # classic one-shot cells record total_us for both)
-BENCH_SCHEMA_VERSION = 3
+# v4: + per-cell "comm" (refinement comm backend: single/allgather/halo),
+# "gain" (gain/halo kernel backend axis: jnp/pallas), and "roofline" — a
+# {phase: {flops, bytes, flops_frac, bw_frac}} map of achieved-vs-peak
+# fractions per timed phase (repro.roofline.partition_phase_model over the
+# measured phase seconds, against the --hw preset's peaks)
+BENCH_SCHEMA_VERSION = 4
 
 BENCH_ENGINES = ("dpartition", "batched")
+BENCH_COMMS = ("single", "allgather", "halo")
+BENCH_GAINS = ("jnp", "pallas")
+
+ROOFLINE_PHASE_KEYS = ("flops", "bytes", "flops_frac", "bw_frac")
 
 # per-cell required keys -> allowed types; every numeric value must also be
 # finite (NaN/inf in any metric fails CI's bench-smoke job)
@@ -65,6 +74,8 @@ BENCH_CELL_KEYS = {
     "variant": str,
     "schedule": str,
     "engine": str,
+    "comm": str,
+    "gain": str,
     "p": int,
     "k": int,
     "batch": int,
@@ -82,6 +93,7 @@ BENCH_CELL_KEYS = {
     "p99_us": (int, float),
     "dispatch_count": int,
     "dispatches": dict,
+    "roofline": dict,
 }
 
 # numeric columns that can never be negative — a negative phase timing or
@@ -153,6 +165,118 @@ def validate_bench(doc) -> list[str]:
                 and cell["engine"] not in BENCH_ENGINES:
             errs.append(f"{where}: engine={cell['engine']!r} not in "
                         f"{BENCH_ENGINES}")
+        if isinstance(cell.get("comm"), str) \
+                and cell["comm"] not in BENCH_COMMS:
+            errs.append(f"{where}: comm={cell['comm']!r} not in "
+                        f"{BENCH_COMMS}")
+        if isinstance(cell.get("gain"), str) \
+                and cell["gain"] not in BENCH_GAINS:
+            errs.append(f"{where}: gain={cell['gain']!r} not in "
+                        f"{BENCH_GAINS}")
+        rf = cell.get("roofline")
+        if isinstance(rf, dict):
+            if not rf:
+                errs.append(f"{where}: roofline is empty — every cell must "
+                            f"record at least one timed phase")
+            for phase, terms in rf.items():
+                if not isinstance(terms, dict):
+                    errs.append(f"{where}: roofline[{phase!r}] is "
+                                f"{type(terms).__name__}, expected object")
+                    continue
+                for tk in ROOFLINE_PHASE_KEYS:
+                    tv = terms.get(tk)
+                    if isinstance(tv, bool) or not isinstance(tv, (int, float)) \
+                            or not math.isfinite(tv) or tv < 0:
+                        errs.append(
+                            f"{where}: roofline[{phase!r}][{tk!r}]={tv!r} "
+                            f"must be a finite non-negative number")
+    return errs
+
+
+# ---- KERNEL_bench.json schema (benchmarks/kernel_bench.py emits it) -------
+
+KERNEL_BENCH_SCHEMA_VERSION = 1
+
+KERNEL_BENCH_KERNELS = ("gain", "halo")
+KERNEL_BENCH_SOURCES = ("default", "tuned", "sweep")
+
+KERNEL_CELL_KEYS = {
+    "kernel": str,
+    "shape": str,
+    "n": int,
+    "d": int,
+    "k": int,
+    "backend": str,
+    "source": str,
+    "config": dict,
+    "us": (int, float),
+}
+
+
+def validate_kernel_bench(doc) -> list[str]:
+    """Validate a KERNEL_bench.json document (the kernel-smoke CI gate);
+    returns violations (empty = valid).  Checked: schema version, per-cell
+    keys/types, positive finite timings, known kernel/source names, tile
+    configs of positive ints, and — when present — the per-shape ``wins``
+    entries (default-vs-best timings with a consistent speedup ratio)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"document is {type(doc).__name__}, expected object"]
+    if doc.get("schema_version") != KERNEL_BENCH_SCHEMA_VERSION:
+        errs.append(f"schema_version={doc.get('schema_version')!r}, "
+                    f"expected {KERNEL_BENCH_SCHEMA_VERSION}")
+    if not isinstance(doc.get("backend"), str):
+        errs.append(f"backend={doc.get('backend')!r} must be a string")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        return errs + ["cells missing/empty: a kernel-bench document with "
+                       "no results is invalid"]
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            errs.append(f"cells[{i}] is {type(cell).__name__}")
+            continue
+        where = f"cells[{i}] ({cell.get('kernel')}/{cell.get('shape')})"
+        for key, types in KERNEL_CELL_KEYS.items():
+            if key not in cell:
+                errs.append(f"{where}: missing {key!r}")
+                continue
+            v = cell[key]
+            if isinstance(v, bool) or not isinstance(v, types):
+                errs.append(f"{where}: {key}={v!r} has type "
+                            f"{type(v).__name__}, expected {types}")
+        us = cell.get("us")
+        if isinstance(us, (int, float)) and not isinstance(us, bool) \
+                and (not math.isfinite(us) or us <= 0):
+            errs.append(f"{where}: us={us!r} must be finite and positive")
+        if isinstance(cell.get("kernel"), str) \
+                and cell["kernel"] not in KERNEL_BENCH_KERNELS:
+            errs.append(f"{where}: kernel={cell['kernel']!r} not in "
+                        f"{KERNEL_BENCH_KERNELS}")
+        if isinstance(cell.get("source"), str) \
+                and cell["source"] not in KERNEL_BENCH_SOURCES:
+            errs.append(f"{where}: source={cell['source']!r} not in "
+                        f"{KERNEL_BENCH_SOURCES}")
+        if isinstance(cell.get("config"), dict):
+            for ck, cv in cell["config"].items():
+                if ck == "us":
+                    continue  # autotune tables carry the measured time
+                if isinstance(cv, bool) or not isinstance(cv, int) or cv <= 0:
+                    errs.append(f"{where}: config[{ck!r}]={cv!r} must be a "
+                                f"positive int")
+    wins = doc.get("wins", {})
+    if not isinstance(wins, dict):
+        errs.append(f"wins={wins!r} must be an object")
+    else:
+        for name, w in wins.items():
+            if not isinstance(w, dict):
+                errs.append(f"wins[{name!r}] is {type(w).__name__}")
+                continue
+            for key in ("default_us", "best_us", "speedup"):
+                v = w.get(key)
+                if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                        or not math.isfinite(v) or v <= 0:
+                    errs.append(f"wins[{name!r}][{key!r}]={v!r} must be "
+                                f"finite and positive")
     return errs
 
 

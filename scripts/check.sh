@@ -9,6 +9,9 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# shared runtime hygiene (tcmalloc, TF log level, TPU-gated XLA flags)
+source scripts/run_env.sh
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--batch" ]]; then

@@ -1,0 +1,42 @@
+# Runtime hygiene shared by every repo entry point — check.sh, the CI jobs
+# and the bench harnesses all `source` this (olmax / HomebrewNLP-Jax run.sh
+# lineage).  Rules:
+#
+#   * additive only: appends to XLA_FLAGS and never overrides a variable
+#     the caller already exported (forced host-device counts in tests/CI
+#     must win);
+#   * never sets JAX_ENABLE_X64 — fp64 would break the fp32-exactness
+#     determinism contract (DESIGN.md §3);
+#   * every knob is guarded: a container without tcmalloc or a TPU gets a
+#     no-op, not a broken interpreter (this XLA CPU build hard-aborts on
+#     unknown XLA_FLAGS, so TPU-only flags are gated on a TPU actually
+#     being present).
+
+# faster malloc when the container ships it; skipped silently otherwise
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for _repro_tcmalloc in \
+      /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+      /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+      /usr/lib/libtcmalloc.so.4; do
+    if [ -f "$_repro_tcmalloc" ]; then
+      export LD_PRELOAD="$_repro_tcmalloc"
+      # silence tcmalloc's large-alloc warnings for graph-sized buffers
+      export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+      break
+    fi
+  done
+  unset _repro_tcmalloc
+fi
+
+# quiet TF/XLA C++ logging (dataset + compilation chatter)
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# TPU-only flags: step markers at the outer while loop make per-level
+# profiles/rooflines attributable.  The CPU XLA build rejects the flag
+# (hard abort at import), so gate on a TPU being visible.
+if [ -e /dev/accel0 ] || [ -n "${TPU_NAME:-}" ]; then
+  case " ${XLA_FLAGS:-} " in
+    *"--xla_step_marker_location="*) : ;;
+    *) export XLA_FLAGS="--xla_step_marker_location=1${XLA_FLAGS:+ $XLA_FLAGS}" ;;
+  esac
+fi

@@ -25,7 +25,20 @@ from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance
 from repro.core.refine import jet_refine, lp_refine_level
 from repro.refine.drivers import level_tolerances
-from repro.refine.schedule import ToleranceSchedule, resolve_schedule
+from repro.refine.schedule import (
+    ToleranceSchedule,
+    resolve_schedule,
+    weight_frac,
+)
+
+
+def _level_w_fracs(sched, ordered_nws):
+    """Coarsest-first per-level ``w_max/c(V)`` fractions for the
+    ``adaptive`` schedule — ``None`` for every other mode so non-adaptive
+    V-cycles add no host syncs at setup."""
+    if sched.mode != "adaptive":
+        return None
+    return tuple(weight_frac(nw) for nw in ordered_nws)
 from repro.refine.variants import Variant, resolve_variant
 
 Refiner = str  # a registered variant or alias name — see repro.refine.variants
@@ -94,7 +107,9 @@ def partition(
 
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse, coarsen_until=coarsen_until)
     n_levels = len(levels) + 1
-    eps_l = level_tolerances(sched, eps, n_levels, k)
+    w_fracs = _level_w_fracs(
+        sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
+    eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
     labels = initial_partition(coarsest, k, eps, k_init)
 
@@ -218,13 +233,16 @@ def partition_batch(
         levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                                coarsen_until=coarsen_until)
         n_levels = len(levels) + 1
+        w_fracs = _level_w_fracs(
+            sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
         st.append({
             "g": g, "key": key, "k_init": k_init,
             # uncoarsening rungs: rung 0 = coarsest, rung j>0 = (fine,
             # mapping) = reversed(levels)[j-1] — partition()'s loop order
             "rungs": list(reversed(levels)), "coarsest": coarsest,
             "n_levels": n_levels,
-            "eps_l": level_tolerances(sched, eps, n_levels, k),
+            "eps_l": level_tolerances(sched, eps, n_levels, k,
+                                      w_fracs=w_fracs),
             "trace": [],
         })
 

@@ -55,6 +55,7 @@ from repro.refine.drivers import (
     make_refine_level_halo,
     make_refine_level_sharded,
 )
+from repro.core.multilevel import _level_w_fracs
 from repro.refine.schedule import ToleranceSchedule, resolve_schedule
 from repro.refine.variants import Variant, resolve_variant
 from repro.sharding.compat import make_mesh
@@ -141,17 +142,16 @@ def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key,
     refine, and convert back — still one dispatch for the level program."""
     taus = temperature_schedule(var.rounds)
     if hsg is not None:
-        from repro.distributed.halo import (
-            block_labels_from_halo,
-            block_labels_to_halo,
-        )
-
+        # relayout=True fuses the halo↔block label conversions into the
+        # level program itself (repro.refine.drivers._halo_level_fn): the
+        # run takes and returns block-layout labels and the permutation
+        # gathers compile into the one level dispatch — the old standalone
+        # block_labels_to_halo/from_halo dispatches are gone from this path
         run = make_refine_level_halo(
             mesh, hsg, k, rounds_taus=taus,
             patience=patience, max_inner=max_inner, gain=gain,
-            uniform_mode=halo_uniform, variant=var.name)
-        lab_h = run(block_labels_to_halo(hsg, lab_sh), key, lmax)
-        return block_labels_from_halo(hsg, lab_h)
+            uniform_mode=halo_uniform, variant=var.name, relayout=True)
+        return run(lab_sh, key, lmax)
     run = make_refine_level_sharded(
         mesh, sg, k, rounds_taus=taus,
         patience=patience, max_inner=max_inner, gain=gain, variant=var.name)
@@ -199,7 +199,9 @@ def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, var,
                                            coarsen_until=coarsen_until)
     timer.stop("coarsen_s", coarsest.nw)
     n_levels = len(levels) + 1
-    eps_l = level_tolerances(sched, eps, n_levels, k)
+    w_fracs = _level_w_fracs(
+        sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
+    eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
     timer.start()
     labels = initial_partition(coarsest, k, eps, k_init)
@@ -251,7 +253,13 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
         halos = [None] * (len(levels) + 1)
     timer.stop("coarsen_s", coarsest.nw)
     n_levels = len(levels) + 1
-    eps_l = level_tolerances(sched, eps, n_levels, k)
+    # per-level w_max/c(V) from the sharded nw slices (padding weighs 0, so
+    # the fraction matches the host hierarchy's bit-for-bit); coarsest
+    # first, then levels[i][0] fine graphs walking the refinement order
+    w_fracs = _level_w_fracs(
+        sched, [coarsest.nw] + [levels[i][0].nw
+                                for i in reversed(range(len(levels)))])
+    eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
     # initial partitioning on the (small) centralised coarsest graph
     timer.start()

@@ -268,16 +268,36 @@ def halo_labels_from_sharded(sg: HaloShardedGraph, perm: np.ndarray, lab_sh):
     return jnp.asarray(out)
 
 
-def block_labels_to_halo(hsg: HaloShardedGraph, lab_sh):
+def block_labels_to_halo(hsg: HaloShardedGraph, lab_sh, *,
+                         kernel: str = "jnp", interpret: bool | None = None):
     """(P, n_local) block-layout labels → halo (interface-first) layout.
 
     A per-PE gather through ``perm_loc`` — device-resident, this is how
-    ``duncoarsen`` output flows straight into the halo level program."""
+    ``duncoarsen`` output flows straight into the halo level program.
+    ``kernel="pallas"`` routes the gather through the VMEM relayout kernel
+    (``repro.kernels.halo.relayout``) — same values, it only moves labels.
+    The sharded V-cycle no longer calls this between dispatches: the
+    conversion is fused *into* the level program
+    (``drivers.make_refine_level_halo(relayout=True)``); this standalone
+    entry serves the host paths, benchmarks and tests."""
+    if kernel == "pallas":
+        from repro.kernels.halo import relayout
+
+        return jax.vmap(lambda x, p: relayout(x, p, interpret=interpret))(
+            lab_sh, hsg.perm_loc)
     return jnp.take_along_axis(lab_sh, hsg.perm_loc, axis=1)
 
 
-def block_labels_from_halo(hsg: HaloShardedGraph, lab_h):
-    """Halo layout → (P, n_local) block layout (per-PE scatter, on device)."""
+def block_labels_from_halo(hsg: HaloShardedGraph, lab_h, *,
+                           kernel: str = "jnp", interpret: bool | None = None):
+    """Halo layout → (P, n_local) block layout.  The scatter through
+    ``perm_loc`` is the gather through ``inv_perm`` (the permutation is
+    total), which is how the kernel path renders it."""
+    if kernel == "pallas":
+        from repro.kernels.halo import relayout
+
+        return jax.vmap(lambda x, p: relayout(x, p, interpret=interpret))(
+            lab_h, hsg.inv_perm)
     rows = jnp.arange(hsg.P, dtype=jnp.int32)[:, None]
     return jnp.zeros_like(lab_h).at[rows, hsg.perm_loc].set(lab_h)
 

@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: fused halo move application + label relayout.
+
+The halo refinement hot path ends every greedy-rebalance epoch with
+"apply the replayed global move list to my owned slots" and brackets every
+level with "permute labels between block layout and the interface-first
+halo layout".  The XLA rendering is a chain of gathers/scatters
+(``HaloComm.apply_moves``: range test → ``inv_perm`` gather → scatter;
+``block_labels_to_halo``/``from_halo``: ``take_along_axis``), each a
+separate HBM round trip.
+
+This kernel replaces the chain with VMEM-resident passes:
+
+  * **move application** (``halo_apply_pallas``) — a dense gid-compare:
+    labels and per-slot global ids stream through VMEM in (TILE_N, 1)
+    tiles while the whole move list (ncand ≤ a few thousand ids) stays
+    resident as (1, C) lane vectors; CAND_CHUNK candidates are compared
+    per step.  Slot i takes ``tgts[j]`` iff ``moved[j] ∧ tids[j] ==
+    gid[i]``.  This is *equivalent* to the range-test + inverse-
+    permutation formulation because (a) a non-owned slot carries
+    ``gid = PAD`` which matches no real move id, and (b) the engine's
+    move list contains each global id at most once (candidates are
+    per-owned-vertex and every vertex is owned by exactly one PE), so
+    the max-select over matches returns the unique target.
+  * **relayout** (``halo_gather_pallas``) — the permutation gather
+    ``out[i] = x[perm[i]]`` with ``x`` VMEM-resident and the permutation
+    streamed in tiles.  Both layout directions are gathers
+    (``from_halo`` through ``inv_perm``).
+  * **fused entry** (``halo_fused_pallas``) — relayout-in + move
+    application in ONE ``pallas_call``: block-layout labels in, updated
+    halo-layout labels out, no intermediate HBM round trip.
+
+All outputs are int32 — the kernels move labels, never weights — so
+"bit-identical" here is exact integer equality, and the jnp references in
+``ref.py`` are the oracles the determinism matrix pins against.
+
+VMEM budget per program instance (TILE_N=256, C≤8192, int32): label/gid
+tiles 2 KiB each, move list 3·32 KiB, compare matrix TILE_N×CAND_CHUNK×4 =
+128 KiB (CAND_CHUNK=128) — far inside the envelope; the gather kernels
+additionally hold the whole (1, N) source vector, which bounds them to
+n_local ≤ ~1M (``ops.HALO_MAX_N``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gain.kernel import round_up
+
+I32_MIN = jnp.iinfo(jnp.int32).min
+PAD_I32 = jnp.iinfo(jnp.int32).max  # == repro.core.graph.PAD (pinned in tests)
+
+
+def _apply_body(gid, tid_ref, tgt_ref, mov_ref, init, *, cand_chunk: int):
+    """Shared fori_loop over candidate chunks: dense gid-compare select.
+
+    ``gid`` is the (TILE_N, 1) per-slot global id, ``init`` the (TILE_N, 1)
+    incumbent labels; returns labels with matched moves applied.
+    """
+    c_tot = tid_ref.shape[1]
+
+    def body(c, lab):
+        sl = pl.ds(c * cand_chunk, cand_chunk)
+        t = tid_ref[:1, sl]                    # (1, CC) move ids
+        g = tgt_ref[:1, sl]                    # (1, CC) move targets
+        mv = mov_ref[:1, sl] != 0              # (1, CC) accepted mask
+        m = mv & (t != PAD_I32) & (gid == t)   # (T, CC) match matrix
+        hit = jnp.max(m.astype(jnp.int32), axis=1, keepdims=True) > 0
+        val = jnp.max(jnp.where(m, g, I32_MIN), axis=1, keepdims=True)
+        return jnp.where(hit, val, lab)
+
+    return jax.lax.fori_loop(0, c_tot // cand_chunk, body, init)
+
+
+def _apply_kernel(lab_ref, gid_ref, tid_ref, tgt_ref, mov_ref, out_ref, *,
+                  cand_chunk: int):
+    out_ref[:, :] = _apply_body(
+        gid_ref[:, :1], tid_ref, tgt_ref, mov_ref, lab_ref[:, :1],
+        cand_chunk=cand_chunk)
+
+
+def _gather_kernel(x_ref, perm_ref, out_ref):
+    x = x_ref[0, :]            # whole (N,) source vector, VMEM-resident
+    out_ref[:, :] = x[perm_ref[:, 0]][:, None]
+
+
+def _fused_kernel(lab_ref, perm_ref, gid_ref, tid_ref, tgt_ref, mov_ref,
+                  out_ref, *, cand_chunk: int):
+    x = lab_ref[0, :]
+    base = x[perm_ref[:, 0]][:, None]          # relayout-in (block → halo)
+    out_ref[:, :] = _apply_body(
+        gid_ref[:, :1], tid_ref, tgt_ref, mov_ref, base,
+        cand_chunk=cand_chunk)
+
+
+def _pad_moves(tids, tgts, moved, cand_chunk: int):
+    c = tids.shape[0]
+    c_pad = round_up(max(c, 1), cand_chunk)
+    pad = c_pad - c
+    tids = jnp.pad(tids.astype(jnp.int32), (0, pad),
+                   constant_values=int(PAD_I32))
+    tgts = jnp.pad(tgts.astype(jnp.int32), (0, pad))
+    mov = jnp.pad(moved.astype(jnp.int32), (0, pad))
+    return tids[None, :], tgts[None, :], mov[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_n", "cand_chunk", "interpret"))
+def halo_apply_pallas(labels, gid, tids, tgts, moved, *, tile_n: int = 256,
+                      cand_chunk: int = 128, interpret: bool = False):
+    """Apply a replayed global move list to owned halo slots.
+
+    ``labels``/``gid`` are (n,) halo-layout labels and per-slot global ids
+    (``PAD`` on non-owned slots); ``tids``/``tgts``/``moved`` the (c,)
+    gathered move records.  Returns the (n,) updated labels.
+    """
+    n = labels.shape[0]
+    n_pad = round_up(max(n, 1), tile_n)
+    lab = jnp.pad(labels.astype(jnp.int32), (0, n_pad - n))
+    gid_p = jnp.pad(gid.astype(jnp.int32), (0, n_pad - n),
+                    constant_values=int(PAD_I32))
+    tid2, tgt2, mov2 = _pad_moves(tids, tgts, moved, cand_chunk)
+    c_pad = tid2.shape[1]
+
+    row = lambda i: (i, 0)
+    whole = lambda i: (0, 0)
+    out = pl.pallas_call(
+        functools.partial(_apply_kernel, cand_chunk=cand_chunk),
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, 1), row),
+            pl.BlockSpec((tile_n, 1), row),
+            pl.BlockSpec((1, c_pad), whole),
+            pl.BlockSpec((1, c_pad), whole),
+            pl.BlockSpec((1, c_pad), whole),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), row),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(lab[:, None], gid_p[:, None], tid2, tgt2, mov2)
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def halo_gather_pallas(x, perm, *, tile_n: int = 256, interpret: bool = False):
+    """Permutation gather ``out[i] = x[perm[i]]`` (label relayout).
+
+    ``x`` is kept whole in VMEM; ``perm`` streams in (tile_n, 1) tiles.
+    Out-of-range permutation entries are the caller's bug (the layout
+    permutations are total by construction).
+    """
+    n = x.shape[0]
+    n_pad = round_up(max(n, 1), tile_n)
+    x_p = jnp.pad(x.astype(jnp.int32), (0, n_pad - n))
+    perm_p = jnp.pad(perm.astype(jnp.int32), (0, n_pad - n))
+
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(x_p[None, :], perm_p[:, None])
+    return out[:n, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_n", "cand_chunk", "interpret"))
+def halo_fused_pallas(lab_block, perm_loc, gid, tids, tgts, moved, *,
+                      tile_n: int = 256, cand_chunk: int = 128,
+                      interpret: bool = False):
+    """Relayout-in + move application in one pass: block-layout labels →
+    updated halo-layout labels, no intermediate HBM round trip."""
+    n = lab_block.shape[0]
+    n_pad = round_up(max(n, 1), tile_n)
+    lab = jnp.pad(lab_block.astype(jnp.int32), (0, n_pad - n))
+    perm_p = jnp.pad(perm_loc.astype(jnp.int32), (0, n_pad - n))
+    gid_p = jnp.pad(gid.astype(jnp.int32), (0, n_pad - n),
+                    constant_values=int(PAD_I32))
+    tid2, tgt2, mov2 = _pad_moves(tids, tgts, moved, cand_chunk)
+    c_pad = tid2.shape[1]
+
+    row = lambda i: (i, 0)
+    whole = lambda i: (0, 0)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, cand_chunk=cand_chunk),
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), whole),
+            pl.BlockSpec((tile_n, 1), row),
+            pl.BlockSpec((tile_n, 1), row),
+            pl.BlockSpec((1, c_pad), whole),
+            pl.BlockSpec((1, c_pad), whole),
+            pl.BlockSpec((1, c_pad), whole),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), row),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(lab[None, :], perm_p[:, None], gid_p[:, None], tid2, tgt2, mov2)
+    return out[:n, 0]

@@ -191,8 +191,10 @@ class HaloComm:
     kind = "halo"
 
     def __init__(self, P: int, h_local: int, n_local: int, n_real: int,
-                 gstart, inv_perm, uniform_mode: str = "global"):
+                 gstart, inv_perm, uniform_mode: str = "global",
+                 kernel: str = "jnp", interpret: bool | None = None):
         assert uniform_mode in ("global", "fold"), uniform_mode
+        assert kernel in ("jnp", "pallas"), kernel
         self.P = P
         self.h_local = h_local
         self.n_local = n_local
@@ -201,6 +203,11 @@ class HaloComm:
         self.gstart = gstart      # global id of this PE's first owned vertex
         self.inv_perm = inv_perm  # (n_local,) block-layout slot → halo slot
         self.uniform_mode = uniform_mode
+        # move-application backend: "pallas" routes apply_moves through the
+        # fused gid-compare kernel (repro.kernels.halo); the caller resolves
+        # the envelope (kernels.halo.resolve_halo), this flag is final
+        self.kernel = kernel
+        self.interpret = interpret
 
     def exchange(self, x):
         return jax.lax.all_gather(x[: self.h_local], "pe", tiled=True)
@@ -222,6 +229,17 @@ class HaloComm:
         return tid_uniform(key, jnp.where(ev.owned, ev.my_tid, 0))
 
     def apply_moves(self, ev: EdgeView, labels, tids, tgts, moved):
+        if self.kernel == "pallas":
+            # fused VMEM pass (repro.kernels.halo): a dense gid-compare of
+            # the whole move list against this PE's per-slot global ids —
+            # bit-identical to the gather/scatter path below because
+            # non-owned slots carry gid = PAD (match nothing) and the
+            # engine's move list names each global id at most once
+            # (tests/test_halo_kernel.py pins the equivalence)
+            from repro.kernels.halo import apply_moves as _halo_apply
+
+            return _halo_apply(labels, ev.my_tid, tids, tgts, moved,
+                               interpret=self.interpret)
         # per-PE inverse-permutation gather, O(P·ncand): ownership of a
         # global move id is a range test against this PE's contiguous block,
         # its halo slot one gather through inv_perm.  (Replaces the old

@@ -82,7 +82,8 @@ def _count_trace(kind: str) -> None:
 
 def level_tolerances(schedule: str | ToleranceSchedule, eps: float,
                      n_levels: int, k: int,
-                     eps_coarse: float | None = None) -> tuple[float, ...]:
+                     eps_coarse: float | None = None,
+                     w_fracs=None) -> tuple[float, ...]:
     """Resolve one V-cycle's per-level imbalance tolerances (index 0 =
     coarsest … ``n_levels − 1`` = finest).
 
@@ -91,8 +92,11 @@ def level_tolerances(schedule: str | ToleranceSchedule, eps: float,
     level's ``L_max`` is computed from ``eps_l`` instead of the single
     global tolerance.  ``eps_l`` is a host-side float feeding an
     already-traced scalar argument, so a non-constant schedule adds no host
-    round-trips and no retraces."""
-    return resolve_schedule(schedule, eps_coarse).eps_levels(eps, n_levels, k)
+    round-trips and no retraces.  ``w_fracs`` is the coarsest-first
+    sequence of per-level ``w_max/c(V)`` fractions the ``adaptive`` mode
+    consumes (``schedule.weight_frac``); other modes ignore it."""
+    return resolve_schedule(schedule, eps_coarse).eps_levels(
+        eps, n_levels, k, w_fracs)
 
 
 # --------------------------------------------------------------------------
@@ -382,36 +386,67 @@ def batched_cache_info() -> dict:
 @lru_cache(maxsize=128)
 def _halo_level_fn(mesh, k, n_local, n_real, n_pe, h_local, patience,
                    max_inner, gain_kind, max_deg, interpret, uniform_mode,
-                   variant):
+                   variant, halo_kind, relayout):
+    """``halo_kind`` selects the move-application backend of
+    :class:`HaloComm` (the fused Pallas gid-compare kernel vs the XLA
+    gather/scatter path — same switch as the gain backend, resolved by the
+    caller).  ``relayout=True`` fuses the halo↔block label relayout into
+    the level program: the program takes *block-layout* labels, permutes
+    them to the interface-first layout in-trace (a gather through
+    ``perm_loc``), refines, and permutes back through ``inv_perm`` — the
+    layout conversions compile into the one level dispatch instead of
+    standing alone as separate ``take_along_axis`` dispatches."""
     var = resolve_variant(variant)
 
     def per_pe(src, dst_code, head_gid, ew, nw, my_gid, owned, inv_perm,
-               gstart, labels, key, lmax, taus):
+               perm_loc, gstart, labels, key, lmax, taus):
         _count_trace("halo")
         ev = halo_edge_view(src[0], dst_code[0], head_gid[0], ew[0], nw[0],
                             my_gid[0], owned[0])
         cm = HaloComm(n_pe, h_local, n_local, n_real, gstart=gstart[0],
-                      inv_perm=inv_perm[0], uniform_mode=uniform_mode)
+                      inv_perm=inv_perm[0], uniform_mode=uniform_mode,
+                      kernel=halo_kind, interpret=interpret)
         gb = make_gain(gain_kind, ev, k, max_deg, interpret)
+        lab = labels[0]
+        if relayout:
+            lab = _halo_relayout(lab, perm_loc[0], halo_kind, interpret)
         if var.mode == "lp":
-            out = engine.lp_level(cm, gb, ev, labels[0], key, lmax, k)
+            out = engine.lp_level(cm, gb, ev, lab, key, lmax, k)
         else:
-            out = engine.refine_level(cm, gb, ev, labels[0], key, lmax, taus,
+            out = engine.refine_level(cm, gb, ev, lab, key, lmax, taus,
                                       k, patience, max_inner,
                                       move_fn=var.move)
+        if relayout:
+            out = _halo_relayout(out, inv_perm[0], halo_kind, interpret)
         return out[None]
 
     sh = P("pe", None)
     return jax.jit(shard_map(
         per_pe, mesh=mesh,
-        in_specs=(sh, sh, sh, sh, sh, sh, sh, sh, P("pe"), sh, P(), P(), P()),
+        in_specs=(sh, sh, sh, sh, sh, sh, sh, sh, sh, P("pe"), sh, P(), P(),
+                  P()),
         out_specs=sh,
     ))
 
 
+def _halo_relayout(lab, perm, halo_kind: str, interpret):
+    """One direction of the per-PE label relayout, ``out[i] = lab[perm[i]]``
+    — both directions are gathers (block → halo through ``perm_loc``,
+    halo → block through ``inv_perm``; the old scatter formulation of
+    ``block_labels_from_halo`` is the same map since the permutations are
+    total).  Values are identical under either backend — a gather moves
+    labels, it computes nothing."""
+    if halo_kind == "pallas":
+        from repro.kernels.halo import relayout
+
+        return relayout(lab, perm, interpret=interpret)
+    return lab[perm]
+
+
 def make_refine_level_halo(mesh, hsg, k, *, rounds_taus, patience=12,
                            max_inner=64, gain="jnp", interpret=None,
-                           uniform_mode="global", variant="jet"):
+                           uniform_mode="global", variant="jet",
+                           relayout=False):
     """Fused level refinement over a :class:`HaloShardedGraph`.
 
     ``uniform_mode="global"`` (default) draws rebalance randomness in the
@@ -420,21 +455,33 @@ def make_refine_level_halo(mesh, hsg, k, *, rounds_taus, patience=12,
     ``variant`` names the registered move-generation rule; lp-mode variants
     run ``engine.lp_level`` over the halo protocol (interface-only
     exchange applies to the LP baseline too).
+
+    ``gain`` also selects the halo *move-application* backend: under
+    ``"pallas"``/``"auto"`` the greedy rebalancer's move scatter runs
+    through the fused gid-compare kernel (``repro.kernels.halo``, its own
+    VMEM envelope — oversize shapes fall back to the XLA path), so the
+    existing backend matrix exercises both renderings with no extra axis.
+    ``relayout=True`` makes ``run`` take and return *block-layout* labels,
+    fusing the halo↔block conversions into the level program (the sharded
+    V-cycle's setting); the default keeps the halo-layout interface.
     """
+    from repro.kernels.halo import resolve_halo
+
     resolve_variant(variant)
     max_deg = (sharded_max_deg(hsg.src, hsg.head_gid, hsg.n_local)
                if _need_max_deg(gain) else None)
     gain_kind = resolve_gain(gain, k, max_deg)
+    halo_kind = resolve_halo(gain, hsg.n_local, hsg.P * engine.GREEDY_NCAND)
     fn = _halo_level_fn(
         mesh, k, hsg.n_local, hsg.n_real, hsg.P, hsg.h_local, patience,
         max_inner, gain_kind, max_deg if gain_kind == "pallas" else None,
-        interpret, uniform_mode, variant)
+        interpret, uniform_mode, variant, halo_kind, relayout)
     taus = jnp.asarray(rounds_taus, jnp.float32)
 
     def run(lab_sh, key, lmax):
         _count_dispatch("halo")
         return fn(hsg.src, hsg.dst_code, hsg.head_gid, hsg.ew, hsg.nw,
-                  hsg.my_gid, hsg.owned, hsg.inv_perm, hsg.gstart, lab_sh,
-                  key, jnp.float32(lmax), taus)
+                  hsg.my_gid, hsg.owned, hsg.inv_perm, hsg.perm_loc,
+                  hsg.gstart, lab_sh, key, jnp.float32(lmax), taus)
 
     return run

@@ -99,15 +99,27 @@ class PallasGain:
 
     kind = "pallas"
 
-    def __init__(self, ev, k: int, max_deg: int, tile_n: int = 256,
-                 deg_chunk: int = 16, interpret: bool | None = None):
+    def __init__(self, ev, k: int, max_deg: int, tile_n: int | None = None,
+                 deg_chunk: int | None = None, interpret: bool | None = None):
         self.k = k
-        self.tile_n = tile_n
-        self.deg_chunk = deg_chunk
         self.interpret = (
             jax.default_backend() != "tpu" if interpret is None else interpret
         )
         n_loc = ev.n_local
+        # tile parameters left None resolve from the committed autotune
+        # table (kernels/tune.py) — a trace-time, per-process-deterministic
+        # lookup, so the drivers' lru_cache keys need not carry tile config
+        # and bucket-cache keys stay stable.  Tiles never change results
+        # (padding rows/columns are inert), only speed.
+        if tile_n is None or deg_chunk is None:
+            from repro.kernels.tune import backend_name, lookup
+
+            cfg = lookup("gain", n=n_loc, d=max(int(max_deg), 1), k=k,
+                         backend=backend_name(self.interpret))
+            tile_n = cfg["tile_n"] if tile_n is None else tile_n
+            deg_chunk = cfg["deg_chunk"] if deg_chunk is None else deg_chunk
+        self.tile_n = tile_n
+        self.deg_chunk = deg_chunk
         m = ev.src.shape[0]
         d = _round_up(max(int(max_deg), 1), deg_chunk)
         n_pad = _round_up(max(n_loc, 1), tile_n)
@@ -164,11 +176,14 @@ class PallasGain:
 
 
 def make_gain(kind: str, ev, k: int, max_deg: int | None = None,
-              interpret: bool | None = None, tile_n: int = 256,
-              deg_chunk: int = 16):
+              interpret: bool | None = None, tile_n: int | None = None,
+              deg_chunk: int | None = None):
     """Instantiate the gain backend for one level, applying the fallback
     rule.  ``max_deg`` is the true maximum degree of the level (a static,
-    setup-time scalar — it sizes the padded adjacency)."""
+    setup-time scalar — it sizes the padded adjacency).  ``tile_n``/
+    ``deg_chunk`` left ``None`` (the production setting) resolve from the
+    committed autotune table; explicit values always win (the tile-sweep
+    parity tests' hook)."""
     kind = resolve_gain(kind, k, max_deg)
     if kind == "pallas":
         return PallasGain(ev, k, max_deg, tile_n=tile_n, deg_chunk=deg_chunk,

@@ -1,1 +1,11 @@
-from repro.roofline.analysis import HW_V5E, analyze_compiled, parse_collective_bytes  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    HW_CPU,
+    HW_PRESETS,
+    HW_V5E,
+    HW_V5P,
+    analyze_compiled,
+    parse_collective_bytes,
+    partition_phase_model,
+    phase_roofline,
+    resolve_hw,
+)

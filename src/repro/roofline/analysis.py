@@ -18,13 +18,18 @@ collective-permute, weighted by the ring-algorithm wire factor:
     all-to-all      1.0
     collective-permute 1.0
 
-Hardware constants are TPU v5e (the brief's target): 197 bf16 TFLOP/s,
-819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants default to TPU v5e (the brief's target): 197 bf16
+TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.  Every entry point takes an
+``hw=`` override — a preset name from :data:`HW_PRESETS` or a dict with
+the three ``peak_flops``/``hbm_bw``/``ici_bw`` keys, validated eagerly by
+:func:`resolve_hw` (a missing key or non-positive value fails with the
+offending field named, instead of a KeyError deep in the ratio math).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 from typing import Any
 
@@ -34,11 +39,62 @@ HW_V5E = {
     "ici_bw": 50e9,         # B/s per link
 }
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+HW_V5P = {
+    "peak_flops": 459e12,
+    "hbm_bw": 2765e9,
+    "ici_bw": 100e9,
 }
+
+# interpret-mode runs on this container have no meaningful peak, but the
+# bench schema wants finite fractions: one nominal server core
+HW_CPU = {
+    "peak_flops": 100e9,
+    "hbm_bw": 20e9,
+    "ici_bw": 10e9,
+}
+
+HW_PRESETS = {"v5e": HW_V5E, "v5p": HW_V5P, "cpu": HW_CPU}
+
+HW_KEYS = ("peak_flops", "hbm_bw", "ici_bw")
+
+
+def resolve_hw(hw) -> dict:
+    """Resolve/validate an ``hw=`` argument: ``None`` → v5e, a preset name
+    from :data:`HW_PRESETS`, or a dict carrying all of :data:`HW_KEYS` as
+    positive finite numbers.  Raises ``ValueError`` naming the defect."""
+    if hw is None:
+        return dict(HW_V5E)
+    if isinstance(hw, str):
+        if hw not in HW_PRESETS:
+            raise ValueError(
+                f"unknown hw preset {hw!r}; presets are {sorted(HW_PRESETS)}")
+        return dict(HW_PRESETS[hw])
+    if not isinstance(hw, dict):
+        raise ValueError(f"hw must be None, a preset name or a dict, "
+                         f"got {type(hw).__name__}")
+    for key in HW_KEYS:
+        v = hw.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or not math.isfinite(v) or v <= 0:
+            raise ValueError(
+                f"hw[{key!r}]={v!r} invalid: every of {HW_KEYS} must be a "
+                f"positive finite number")
+    return dict(hw)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "tf32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "f8e3m4": 1, "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1,
+}
+
+# a token that *looks like* an HLO element type (so an unknown one is a
+# table gap to fix, not sharding/annotation noise like "devices=[2,1]")
+_DTYPE_LIKE = re.compile(r"^(?:pred|bf16|tf32|[sufc]\d+|f8e\w+|f4e\w+)$")
 
 _COLL_FACTORS = {
     "all-gather": 1.0,
@@ -63,7 +119,14 @@ def _shape_bytes(shape_str: str) -> int:
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in _DTYPE_BYTES:
-            continue
+            if _DTYPE_LIKE.match(dt):
+                # a real element type the table doesn't know: silently
+                # skipping it would under-count wire bytes — fail loudly
+                raise ValueError(
+                    f"HLO element type {dt!r} (in {shape_str!r}) missing "
+                    f"from the roofline dtype table — add its byte width "
+                    f"to repro.roofline.analysis._DTYPE_BYTES")
+            continue  # annotation noise (e.g. sharding devices=[...])
         n = 1
         if dims:
             for d in dims.split(","):
@@ -123,8 +186,8 @@ class Roofline:
 
 
 def analyze_compiled(compiled, n_chips: int, model_flops: float,
-                     hw: dict[str, float] = HW_V5E,
-                     body_scale: float = 1.0) -> Roofline:
+                     hw=None, body_scale: float = 1.0) -> Roofline:
+    hw = resolve_hw(hw)
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older jax returns [dict]
         cost = cost[0]
@@ -170,6 +233,62 @@ def analyze_compiled(compiled, n_chips: int, model_flops: float,
         peak_fraction=peak_fraction,
         mem_per_device=mem,
     )
+
+
+def partition_phase_model(n: int, m: int, k: int, levels: int,
+                          rounds: float = 6.0) -> dict[str, dict[str, float]]:
+    """Analytic lower-bound work model for the three partition phases.
+
+    The multilevel hierarchy is geometric, so totals over all levels are
+    ≈ 2× the finest level (n_tot ≈ 2n, m_tot ≈ 2m directed edge slots).
+    Per phase, counting each mandatory touch of the edge/vertex arrays
+    once:
+
+      coarsen — one matching sweep plus one contraction, both streaming
+                the edge list: 4·m_tot flops, 12 B/edge + 8 B/vertex.
+      init    — label propagation on the coarsest graph (m_c ≈ m/2^(L−1)),
+                ~8 sweeps across restarts.
+      refine  — ``rounds`` engine rounds per level; each scores every edge
+                (segment-sum or scoreboard: ≈2 flops/edge) and argmaxes an
+                (n, k) connectivity row.
+
+    These are *useful-work floors*, not fitted costs: dividing by measured
+    wall time gives an achieved-vs-peak fraction that is ≤ the true
+    hardware utilisation, which is exactly the conservative direction a
+    roofline gate wants."""
+    n_tot, m_tot = 2.0 * n, 2.0 * m
+    shrink = 2 ** max(int(levels) - 1, 0)
+    n_c, m_c = max(n / shrink, 1.0), max(m / shrink, 1.0)
+    r = float(rounds)
+    return {
+        "coarsen": {
+            "flops": 4.0 * m_tot,
+            "bytes": 12.0 * m_tot + 8.0 * n_tot,
+        },
+        "init": {
+            "flops": 8.0 * (m_c + n_c * k),
+            "bytes": 8.0 * (4.0 * m_c + 4.0 * n_c * k),
+        },
+        "refine": {
+            "flops": r * (2.0 * m_tot + n_tot * k),
+            "bytes": r * (8.0 * m_tot + 4.0 * n_tot * k),
+        },
+    }
+
+
+def phase_roofline(flops: float, nbytes: float, seconds: float,
+                   hw=None) -> dict[str, float]:
+    """Achieved-vs-peak fractions for one timed phase: useful flops and
+    bytes (e.g. from :func:`partition_phase_model`) over measured seconds,
+    against the resolved hardware's peaks."""
+    hw = resolve_hw(hw)
+    s = max(float(seconds), 1e-12)
+    return {
+        "flops": float(flops),
+        "bytes": float(nbytes),
+        "flops_frac": (float(flops) / s) / hw["peak_flops"],
+        "bw_frac": (float(nbytes) / s) / hw["hbm_bw"],
+    }
 
 
 def model_flops_for(cfg, shape) -> float:

@@ -28,15 +28,23 @@ SNAPSHOT = os.path.abspath(os.path.join(
     ROOT, "benchmarks", "snapshots", "BENCH_smoke.json"))
 
 
+def _roof_phase(flops=1e6, nbytes=1e5):
+    return {"flops": flops, "bytes": nbytes,
+            "flops_frac": 1e-4, "bw_frac": 1e-3}
+
+
 def _cell(**over):
     cell = {
         "graph": "grid2d_24", "variant": "jet", "schedule": "constant",
-        "engine": "dpartition", "p": 1, "k": 4, "batch": 1,
+        "engine": "dpartition", "comm": "single", "gain": "jnp",
+        "p": 1, "k": 4, "batch": 1,
         "n": 576, "m": 2208, "cut": 86.0, "imbalance": 0.0278, "levels": 4,
         "coarsen_us": 100.0, "init_us": 10.0, "refine_us": 200.0,
         "total_us": 400.0, "graphs_per_sec": 2500.0,
         "p50_us": 400.0, "p99_us": 410.0, "dispatch_count": 8,
         "dispatches": {"sharded": 4, "single": 4},
+        "roofline": {"coarsen": _roof_phase(), "init": _roof_phase(),
+                     "refine": _roof_phase()},
     }
     cell.update(over)
     return cell
@@ -97,6 +105,78 @@ def test_validator_rejects_cross_field_nonsense():
     assert validate_bench(_doc([_cell(p50_us=400.0, p99_us=400.0)])) == []
     # zero timings are measurements, not bugs
     assert validate_bench(_doc([_cell(init_us=0.0)])) == []
+
+
+def test_validator_rejects_bad_v4_columns():
+    """Schema v4 columns: comm/gain must name known backends; roofline must
+    be a non-empty {phase: terms} map of finite non-negative numbers."""
+    assert any("comm" in e
+               for e in validate_bench(_doc([_cell(comm="carrier-pigeon")])))
+    assert any("gain" in e
+               for e in validate_bench(_doc([_cell(gain="cuda")])))
+    assert any("roofline" in e
+               for e in validate_bench(_doc([_cell(roofline={})])))
+    bad = _cell()
+    bad["roofline"] = {"refine": {"flops": 1.0, "bytes": 1.0,
+                                  "flops_frac": math.nan, "bw_frac": 0.0}}
+    assert any("flops_frac" in e for e in validate_bench(_doc([bad])))
+    bad["roofline"] = {"refine": {"flops": -1.0, "bytes": 1.0,
+                                  "flops_frac": 0.0, "bw_frac": 0.0}}
+    assert any("flops" in e for e in validate_bench(_doc([bad])))
+    bad["roofline"] = {"refine": "fast"}
+    assert any("roofline" in e for e in validate_bench(_doc([bad])))
+    # every comm/gain backend and any phase naming is accepted
+    for comm in ("single", "allgather", "halo"):
+        assert validate_bench(_doc([_cell(comm=comm)])) == []
+    for gain in ("jnp", "pallas"):
+        assert validate_bench(_doc([_cell(gain=gain)])) == []
+    assert validate_bench(_doc([_cell(roofline={"total": _roof_phase()})])) \
+        == []
+
+
+def test_kernel_bench_validator():
+    """validate_kernel_bench accepts the real document shape and rejects
+    the gating failure modes (bad kernel/source names, non-positive
+    timings, broken config values, inconsistent wins)."""
+    from benchmarks.common import (
+        KERNEL_BENCH_SCHEMA_VERSION,
+        validate_kernel_bench,
+    )
+
+    def kcell(**over):
+        c = {"kernel": "gain", "shape": "n4k_d32_k8", "n": 4096, "d": 32,
+             "k": 8, "backend": "interpret", "source": "default",
+             "config": {"tile_n": 256, "deg_chunk": 16}, "us": 100.0}
+        c.update(over)
+        return c
+
+    def kdoc(cells, **over):
+        d = {"schema_version": KERNEL_BENCH_SCHEMA_VERSION,
+             "backend": "interpret", "cells": cells,
+             "wins": {"gain/n4k_d32_k8": {
+                 "default_us": 100.0, "best_us": 90.0, "speedup": 100 / 90,
+                 "best_config": {"tile_n": 128, "deg_chunk": 16}}}}
+        d.update(over)
+        return d
+
+    assert validate_kernel_bench(kdoc([kcell()])) == []
+    assert validate_kernel_bench("nope")
+    assert validate_kernel_bench(kdoc([]))
+    assert any("schema_version" in e for e in
+               validate_kernel_bench(kdoc([kcell()], schema_version=99)))
+    assert any("kernel" in e for e in
+               validate_kernel_bench(kdoc([kcell(kernel="matmul")])))
+    assert any("source" in e for e in
+               validate_kernel_bench(kdoc([kcell(source="guess")])))
+    assert any("us" in e for e in
+               validate_kernel_bench(kdoc([kcell(us=0.0)])))
+    assert any("us" in e for e in
+               validate_kernel_bench(kdoc([kcell(us=math.inf)])))
+    assert any("config" in e for e in
+               validate_kernel_bench(kdoc([kcell(config={"tile_n": -8})])))
+    assert any("speedup" in e for e in validate_kernel_bench(
+        kdoc([kcell()], wins={"x": {"default_us": 1.0, "best_us": 1.0,
+                                    "speedup": math.nan}})))
 
 
 def test_validator_rejects_empty_results():
@@ -227,12 +307,13 @@ def test_snapshot_regression():
         assert not failures, failures
 
     def key(c):
-        # engine+batch are part of the identity: a classic P=1 cell and a
-        # batched B=1 cell of the same graph/variant are different
-        # measurements and must not collide in the diff
+        # engine+batch+comm+gain are part of the identity: a classic P=4
+        # allgather cell and a halo-backend cell of the same graph/variant
+        # are different measurements and must not collide in the diff
         return (c["graph"], c["variant"], c["p"], c["k"],
                 c.get("schedule", "constant"),
-                c.get("engine", "dpartition"), c.get("batch", 1))
+                c.get("engine", "dpartition"), c.get("batch", 1),
+                c.get("comm", "single"), c.get("gain", "jnp"))
 
     # throughput columns are RECORDED in every snapshot cell (trajectory
     # data) but never gated — rates are load-sensitive; quality (cut) gates

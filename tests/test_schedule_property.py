@@ -117,12 +117,66 @@ def test_explicit_eps_coarse_overrides_schedule_instance():
     assert resolve_schedule(sched) is sched
 
 
+def test_adaptive_schedule_floor_rule():
+    """The dKaMinPar weight-aware rule: eps_l = max(eps, k·w_max/c(V)) at
+    EVERY depth (a feasibility floor, not a coarse-level relaxation), with
+    no weight information degrading to the constant rule."""
+    assert "adaptive" in SCHEDULES
+    assert resolve_schedule("weight-adaptive").mode == "adaptive"
+    sched = resolve_schedule("adaptive")
+    eps, k = 0.03, 4
+    # no weight information → constant behaviour, level by level or wholesale
+    assert sched.eps_levels(eps, 3, k) == (eps,) * 3
+    assert sched.eps_levels(eps, 3, k, w_fracs=(None, None, None)) \
+        == (eps,) * 3
+    # the floor binds exactly where k·w_frac exceeds eps — including the
+    # finest level (w_fracs is coarsest-first, matching eps_levels order)
+    w_fracs = (0.2, 0.004, 0.05)
+    got = sched.eps_levels(eps, 3, k, w_fracs=w_fracs)
+    assert got == tuple(max(eps, k * w) for w in w_fracs)
+    assert got[1] == eps                       # k·0.004 < eps: constant rule
+    assert got[2] == pytest.approx(k * 0.05)   # finest level lifted too
+    # mismatched weight vector fails eagerly, not at some interior level
+    with pytest.raises(ValueError, match="w_fracs has 2 entries"):
+        sched.eps_levels(eps, 3, k, w_fracs=(0.1, 0.1))
+
+
+def test_weight_frac_helper():
+    """weight_frac is the adaptive mode's per-level input: w_max/c(V) in
+    float64 host arithmetic, with zero-weight padding slots (sharded/halo/
+    batched layouts) and degenerate inputs never perturbing the value."""
+    from repro.refine.schedule import weight_frac
+
+    assert weight_frac(np.ones(10)) == pytest.approx(0.1)
+    assert weight_frac(np.concatenate([np.ones(10), np.zeros(6)])) \
+        == pytest.approx(0.1)  # padding slots are invisible
+    assert weight_frac(np.array([40.0, 1.0, 1.0])) \
+        == pytest.approx(40.0 / 42.0)
+    assert weight_frac(np.zeros(4)) == 0.0
+    assert weight_frac(np.array([])) == 0.0
+
+
 if HAVE_HYPOTHESIS:
     @given(st.floats(0.005, 0.2), st.integers(1, 12), st.integers(2, 16),
            st.one_of(st.none(), st.floats(0.0, 1.0)))
     @settings(max_examples=100, deadline=None)
     def test_schedule_shapes_fuzzed(eps, n_levels, k, ec):
         check_schedule_shapes(eps, n_levels, k, ec)
+
+    @given(st.floats(0.005, 0.2), st.integers(1, 8), st.integers(2, 16),
+           st.lists(st.one_of(st.none(), st.floats(0.0, 1.0)),
+                    min_size=1, max_size=8))
+    @settings(max_examples=60, deadline=None)
+    def test_adaptive_floor_fuzzed(eps, n_levels, k, w_fracs):
+        sched = resolve_schedule("adaptive")
+        if len(w_fracs) != n_levels:
+            with pytest.raises(ValueError, match="w_fracs"):
+                sched.eps_levels(eps, n_levels, k, w_fracs=w_fracs)
+            return
+        got = sched.eps_levels(eps, n_levels, k, w_fracs=w_fracs)
+        want = tuple(eps if w is None else max(eps, k * w) for w in w_fracs)
+        assert got == pytest.approx(want)
+        assert all(e >= eps for e in got)  # never tighter than the target
 
 
 # --------------------------------------------------------------------------
@@ -244,14 +298,20 @@ def check_partition_invariants(g, k, seed, sched):
     lab = np.asarray(res.labels)
     assert ((lab >= 0) & (lab < k)).all()
     assert len(res.level_eps) == res.levels == len(res.level_trace)
-    assert res.level_eps[-1] == eps
+    if sched == "adaptive":
+        # the feasibility floor may lift even the finest level (tiny
+        # graphs: k·w_max/c(V) = k/n can exceed eps), never tighten it
+        assert res.level_eps[-1] >= eps
+    else:
+        assert res.level_eps[-1] == eps
     W = float(np.asarray(g.nw).sum())
     for t in res.level_trace:
         bound = (1 + t["eps"]) * math.ceil(W / k) * k / W - 1
         assert t["imbalance"] <= bound + 1e-4, (sched, t, bound)
 
 
-@pytest.mark.parametrize("sched", ["constant", "geometric", "snap"])
+@pytest.mark.parametrize("sched", ["constant", "geometric", "snap",
+                                   "adaptive"])
 @pytest.mark.parametrize("case", range(2))
 def test_partition_invariants_under_schedule(sched, case):
     rng = np.random.default_rng(7 + case)
@@ -260,10 +320,55 @@ def test_partition_invariants_under_schedule(sched, case):
                                sched=sched)
 
 
+def test_adaptive_partition_lifts_infeasible_levels():
+    """End-to-end dKaMinPar rule: a graph dominated by one heavy vertex
+    makes a constant eps unsatisfiable (some block must hold the vertex);
+    the adaptive schedule lifts every level's tolerance to at least the
+    k·w_max/c(V) feasibility floor.  The distributed driver threads the
+    same w_fracs, so dpartition agrees bit-for-bit with partition."""
+    from repro.core.graph import from_coo
+    from repro.core.multilevel import partition
+    from repro.distributed import dpartition
+
+    n, k, eps, heavy = 64, 4, 0.1, 40.0
+    u = np.arange(n)
+    v = (u + 1) % n  # a ring: connected, deterministic
+    nw = np.ones(n, np.float32)
+    nw[0] = heavy
+    g = from_coo(n, u, v, np.ones(n, np.float32), nw=nw)
+    kw = dict(k=k, eps=eps, seed=0, coarsen_until=16, max_inner=4,
+              trace_levels=True)
+
+    res = partition(g, schedule="adaptive", **kw)
+    floor = k * heavy / float(nw.sum())  # ≈ 1.55 ≫ eps
+    assert res.level_eps[-1] == pytest.approx(max(eps, floor))
+    # coarse vertices only aggregate weight, so the finest level's floor
+    # lower-bounds every level's tolerance
+    assert all(e >= floor - 1e-12 for e in res.level_eps)
+    lab = np.asarray(res.labels)
+    assert ((lab >= 0) & (lab < k)).all()
+    # the constant schedule would have pinned every level to eps instead
+    res_c = partition(g, schedule="constant", **kw)
+    assert res_c.level_eps == (eps,) * res_c.levels
+
+    # the sharded V-cycle computes w_fracs from its own level hierarchy —
+    # same schedule, same labels
+    d = dpartition(g, P=1, schedule="adaptive", **kw)
+    assert d.level_eps == res.level_eps
+    np.testing.assert_array_equal(np.asarray(d.labels), lab)
+
+    # unit weights: the finest level's floor k/n ≪ eps → exactly eps
+    gu = from_coo(n, u, v, np.ones(n, np.float32),
+                  nw=np.ones(n, np.float32))
+    res_u = partition(gu, schedule="adaptive", **kw)
+    assert res_u.level_eps[-1] == eps
+
+
 if HAVE_HYPOTHESIS:
     @given(gseed=st.integers(0, 2**31), k=st.integers(2, 4),
            seed=st.integers(0, 1_000),
-           sched=st.sampled_from(["constant", "geometric", "snap"]))
+           sched=st.sampled_from(["constant", "geometric", "snap",
+                                  "adaptive"]))
     @settings(max_examples=5, deadline=None)
     def test_partition_invariants_fuzzed(gseed, k, seed, sched):
         g = make_random_graph(np.random.default_rng(gseed),
