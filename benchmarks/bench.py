@@ -94,6 +94,12 @@ for gname in cfg["graphs"]:
             "dispatch_count": int(drivers.DISPATCH_COUNT),
             "dispatches": dict(drivers.DISPATCHES),
             "roofline": roof,
+            # v5: classic cells are one-shot — the (compile-inclusive)
+            # trace count is the honest retrace number; allocs_per_1k
+            # tracks the batched container's pad+upload events, which the
+            # classic engine never touches
+            "retraces": int(drivers.TRACE_COUNT),
+            "allocs_per_1k": 0.0,
         })
         print("CELL::" + cells[-1]["graph"] + "/" + variant, file=sys.stderr)
 print("RESULT::" + json.dumps(cells))
@@ -118,6 +124,7 @@ os.environ["JAX_PLATFORMS"] = "cpu"
 import numpy as np
 from benchmarks.common import bench_graph
 from repro.core import partition_batch
+from repro.graphs import batch as GB
 from repro.refine import drivers
 from repro.roofline import partition_phase_model, phase_roofline
 
@@ -135,6 +142,7 @@ for gname in cfg["graphs"]:
             lat = []
             for it in range(cfg["iters"]):
                 drivers.reset_counters()
+                GB.reset_pad_builds()
                 t0 = time.perf_counter()
                 res = partition_batch(gs, **kw)
                 lat.append(time.perf_counter() - t0)
@@ -173,18 +181,28 @@ for gname in cfg["graphs"]:
                 "dispatch_count": int(drivers.DISPATCH_COUNT),
                 "dispatches": dict(drivers.DISPATCHES),
                 "roofline": roof,
+                # v5 (last timed call, cache warm): retraces must be 0 in
+                # steady state; the batched engine re-pads every level
+                # graph each call — that per-request upload cost is exactly
+                # what the serving buffer pool drops to 0
+                "retraces": int(drivers.TRACE_COUNT),
+                "allocs_per_1k": 1000.0 * GB.PAD_BUILD_COUNT / b,
             })
             print("CELL::" + gname + "/" + variant + "/B%d" % b,
                   file=sys.stderr)
+print("CACHE::" + json.dumps(drivers.cache_stats()))
 print("RESULT::" + json.dumps(cells))
 """
 
 
 def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
-                    schedule, batch_sizes, iters=5, timeout=3600, hw="v5e"):
+                    schedule, batch_sizes, iters=5, timeout=3600, hw="v5e",
+                    stats_out=None):
     """Run the batched-engine grid in one subprocess; returns
     (cells, failures).  A dispatch-contract violation in any cell is a
-    sweep failure (child exit 3)."""
+    sweep failure (child exit 3).  ``stats_out`` (a dict, if given) is
+    filled with the child's end-of-sweep ``drivers.cache_stats()`` —
+    per-cache hits/misses/evictions of the bucketed retrace caches."""
     cells, failures = [], []
     env = dict(os.environ, PYTHONPATH=os.pathsep.join([SRC, ROOT]),
                JAX_PLATFORMS="cpu")
@@ -205,6 +223,10 @@ def run_batch_sweep(graphs, variants, k, seed, max_inner, coarsen_until,
            if line.startswith("RESULT::")]
     if not got:
         return cells, [f"batch sweep: no RESULT line: {proc.stdout[-1000:]}"]
+    if stats_out is not None:
+        for line in proc.stdout.splitlines():
+            if line.startswith("CACHE::"):
+                stats_out.update(json.loads(line[len("CACHE::"):]))
     cells.extend(json.loads(got[0][len("RESULT::"):]))
     return cells, failures
 
@@ -292,6 +314,11 @@ def main(argv=None) -> int:
                     help="per-level tolerance schedule for every cell "
                          "(repro.refine.schedule; the schedule column of "
                          "BENCH_quality.json)")
+    ap.add_argument("--schedule2", default=None,
+                    help="second schedule swept as extra P=ps[0] cells so "
+                         "the snapshot grid covers a second schedule "
+                         "column (default: 'adaptive' in smoke mode, off "
+                         "otherwise; 'none' disables)")
     ap.add_argument("--batch", type=int, default=0,
                     help="also sweep the batched engine at B in {1, N} "
                          "(engine='batched' cells; 0 = off)")
@@ -322,6 +349,14 @@ def main(argv=None) -> int:
     # → snap): the string is recorded in every cell and keys the snapshot
     # diff, so equivalent runs must produce comparable documents
     args.schedule = resolve_schedule(args.schedule).mode
+    if args.schedule2 is None and args.smoke:
+        args.schedule2 = "adaptive"
+    if args.schedule2 in ("none", ""):
+        args.schedule2 = None
+    if args.schedule2 is not None:
+        args.schedule2 = resolve_schedule(args.schedule2).mode
+        if args.schedule2 == args.schedule:
+            args.schedule2 = None  # duplicate cells would collide in diffs
     ps = (tuple(int(x) for x in args.ps.split(","))
           if args.ps else (SMOKE_PS if args.smoke else FULL_PS))
     graphs = (tuple(args.graphs.split(","))
@@ -344,6 +379,15 @@ def main(argv=None) -> int:
     extra_ks = (tuple(int(x) for x in args.ks.split(","))
                 if args.ks else ((8, 16) if args.smoke else ()))
     wide_variant = "jet" if "jet" in variants else variants[0]
+    # v5: second schedule column — the same grid under --schedule2 (smoke
+    # default: adaptive) at P=ps[0], so the committed snapshot pins a
+    # second per-level tolerance schedule per (graph, variant) cell
+    if args.schedule2 is not None:
+        c4, f4 = run_sweep((ps[0],), graphs, variants, args.k, args.seed,
+                           max_inner, coarsen_until,
+                           schedule=args.schedule2, hw=args.hw)
+        cells.extend(c4)
+        failures.extend(f4)
     if not args.no_wide:
         for kk in extra_ks:
             c2, f2 = run_sweep((ps[0],), (graphs[0],), (wide_variant,),
@@ -362,12 +406,14 @@ def main(argv=None) -> int:
                 failures.extend(f3)
 
     batch_sizes = ()
+    cache_stats: dict = {}
     if args.batch:
         # B=1 rides along as the per-cell throughput baseline of the ratio
         batch_sizes = (1, args.batch) if args.batch > 1 else (1,)
         bcells, bfail = run_batch_sweep(
             graphs, variants, args.k, args.seed, max_inner, coarsen_until,
-            args.schedule, batch_sizes, iters=args.batch_iters, hw=args.hw)
+            args.schedule, batch_sizes, iters=args.batch_iters, hw=args.hw,
+            stats_out=cache_stats)
         cells.extend(bcells)
         failures.extend(bfail)
 
@@ -379,10 +425,13 @@ def main(argv=None) -> int:
         "config": {"variants": list(variants), "ps": list(ps),
                    "graphs": list(graphs), "k": args.k, "seed": args.seed,
                    "max_inner": max_inner, "coarsen_until": coarsen_until,
-                   "schedule": args.schedule,
+                   "schedule": args.schedule, "schedule2": args.schedule2,
                    "batch_sizes": list(batch_sizes),
                    "extra_ks": list(extra_ks) if not args.no_wide else [],
                    "hw": args.hw},
+        # end-of-sweep bucketed retrace-cache counters of the batched
+        # child (drivers.cache_stats) — trajectory data, not gated
+        "cache_stats": cache_stats,
         "versions": {"jax": jax.__version__, "numpy": np.__version__,
                      "python": sys.version.split()[0]},
         "summary": summarize(cells),
@@ -409,6 +458,10 @@ def main(argv=None) -> int:
     for variant, s in doc["summary"].items():
         print(f"  summary {variant:6s} gmean cut ratio vs jet: "
               f"{s['gmean_cut_ratio_vs_jet']:.4f} over {s['cells']} cells")
+    for cname, cs in cache_stats.items():
+        print(f"  cache {cname:8s} hits={cs['hits']} misses={cs['misses']} "
+              f"evictions={cs['evictions']} "
+              f"size={cs['currsize']}/{cs['maxsize']}")
     if args.batch > 1:
         # batching throughput ratio: recorded, not gated (the snapshot diff
         # tracks the trajectory; load-sensitive rates don't make CI red)

@@ -59,9 +59,16 @@ def bench_graph(name):
 # {phase: {flops, bytes, flops_frac, bw_frac}} map of achieved-vs-peak
 # fractions per timed phase (repro.roofline.partition_phase_model over the
 # measured phase seconds, against the --hw preset's peaks)
-BENCH_SCHEMA_VERSION = 4
+# v5: + serving columns — engine "serve" (scheduler-flushed request
+# stream, repro.serve), per-cell "retraces" (level-program retraces the
+# timed loop caused; steady-state serve cells must report 0) and
+# "allocs_per_1k" (fresh pad+upload events per 1000 requests — the buffer
+# pool's instrumented allocation contract; steady-state serve cells must
+# report 0.0).  For serve cells p50_us/p99_us are END-TO-END request
+# latency: virtual queue wait (arrival → flush) + measured compute.
+BENCH_SCHEMA_VERSION = 5
 
-BENCH_ENGINES = ("dpartition", "batched")
+BENCH_ENGINES = ("dpartition", "batched", "serve")
 BENCH_COMMS = ("single", "allgather", "halo")
 BENCH_GAINS = ("jnp", "pallas")
 
@@ -94,12 +101,15 @@ BENCH_CELL_KEYS = {
     "dispatch_count": int,
     "dispatches": dict,
     "roofline": dict,
+    "retraces": int,
+    "allocs_per_1k": (int, float),
 }
 
 # numeric columns that can never be negative — a negative phase timing or
 # rate is a measurement bug, not a fast run
 BENCH_NONNEGATIVE_KEYS = ("coarsen_us", "init_us", "refine_us", "total_us",
-                          "graphs_per_sec", "p50_us", "p99_us")
+                          "graphs_per_sec", "p50_us", "p99_us",
+                          "retraces", "allocs_per_1k")
 
 
 def validate_bench(doc) -> list[str]:

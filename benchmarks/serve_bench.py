@@ -1,0 +1,348 @@
+"""Serving-path benchmark → schema-v5 ``SERVE_bench.json``.
+
+Replays deterministic arrival traces (Poisson / burst, virtual-clock
+``t_us`` stamps from a seeded RNG) through two paths and reports
+end-to-end request latency and throughput for each:
+
+* **serve** — ``repro.serve.partition_stream``: the bucket scheduler
+  flushes size-``--batch`` batches through the multi-bucket runner against
+  a warm :class:`repro.serve.buffers.BufferPool`.  Steady-state cells must
+  report ``retraces == 0`` and ``allocs_per_1k == 0.0`` (the instrumented
+  pool contract) — a violation is a schema-level failure, not a slow run.
+* **dpartition** — the request-at-a-time baseline: one
+  ``repro.core.partition`` call per request on the same trace.
+
+Latency folds the virtual arrival clock and the measured compute together
+the same way for both paths: requests are served serially in trace order
+(baseline: per request; serve: per dispatch group at its flush time), and
+a request's latency is its completion time minus its arrival time — queue
+wait plus compute.  Throughput is requests over measured compute seconds
+(virtual idle gaps excluded), so the serve-vs-baseline ratio is a pure
+engine comparison; ``serve_summary.gmean_speedup`` is its geometric mean
+over per-(graph, trace) cell pairs — the number the committed snapshot
+(benchmarks/snapshots/SERVE_smoke.json) gates at ≥ 1.5x.
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke
+    PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke --out SERVE_bench.json
+
+See benchmarks/README.md for the schema and the CI artifact mapping
+(serve-smoke job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+SRC = os.path.join(ROOT, "src")
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SMOKE_GRAPHS = ("grid2d_24", "rmat_9")
+TRACE_KINDS = ("poisson", "burst")
+
+
+def build_trace(kind: str, n: int, mean_gap_us: float, seed: int):
+    """Deterministic arrival timestamps (µs) for ``n`` requests.
+
+    ``poisson``: i.i.d. exponential inter-arrival gaps of the given mean.
+    ``burst``: groups of 4 arriving at the same instant, exponential gaps
+    (4x the mean, preserving the average rate) between groups.
+    """
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    if kind == "poisson":
+        gaps = rng.exponential(mean_gap_us, size=n)
+    elif kind == "burst":
+        group = (np.arange(n) // 4)
+        group_gaps = rng.exponential(4.0 * mean_gap_us, size=int(group.max()) + 1)
+        return [float(t) for t in np.cumsum(group_gaps)[group]]
+    else:
+        raise ValueError(f"unknown trace kind {kind!r}; known: {TRACE_KINDS}")
+    return [float(t) for t in np.cumsum(gaps)]
+
+
+def make_requests(g, t_uss, k, max_inner, coarsen_until, n_seeds: int):
+    """The fan-out request pattern: one graph, seeds cycling over
+    ``n_seeds`` distinct values (so within-flush coalescing is partial,
+    like a real duplicate-heavy stream, not total)."""
+    from repro.serve import PartitionRequest
+
+    return [PartitionRequest(graph=g, k=k, seed=i % n_seeds,
+                             max_inner=max_inner,
+                             coarsen_until=coarsen_until, t_us=t)
+            for i, t in enumerate(t_uss)]
+
+
+def _serial_latencies(events):
+    """Fold virtual arrivals and measured compute into end-to-end request
+    latencies: serve ``events`` (ready_time_us, compute_us, [request
+    arrival t_us, ...]) serially in ready order on one engine.  Returns
+    per-request latency_us in event order."""
+    busy = 0.0
+    lats = []
+    for ready_us, compute_us, arrivals in events:
+        start = max(ready_us, busy)
+        busy = start + compute_us
+        lats.extend(busy - t for t in arrivals)
+    return lats
+
+
+def run_serve_cell(gname, g, trace_kind, reqs, batch, hw):
+    """Timed steady-state replay of one trace through partition_stream;
+    returns (cell, results)."""
+    import numpy as np
+
+    from repro.graphs import batch as GB
+    from repro.refine import drivers
+    from repro.roofline import partition_phase_model, phase_roofline
+    from repro.serve import (
+        BucketScheduler,
+        BufferPool,
+        FlushPolicy,
+        run_group,
+    )
+
+    policy = FlushPolicy(batch_target=batch)
+    pool = BufferPool()
+    groups = BucketScheduler(policy).plan(reqs)
+
+    # warmup replay: compile the level programs, fill the pool
+    for grp in groups:
+        run_group(grp, pool)
+
+    # timed replay: steady state — the zero-retrace / zero-alloc regime
+    drivers.reset_counters()
+    GB.reset_pad_builds()
+    pool.reset_counters()
+    events, results = [], {}
+    t_total0 = time.perf_counter()
+    for grp in groups:
+        t0 = time.perf_counter()
+        results.update(run_group(grp, pool))
+        wall_us = (time.perf_counter() - t0) * 1e6
+        events.append((grp[0].time_us, wall_us,
+                       [r.t_us for fl in grp for r in fl.requests]))
+    wall_s = time.perf_counter() - t_total0
+
+    lats = _serial_latencies(events)
+    res = [results[i] for i in range(len(reqs))]
+    model = partition_phase_model(int(g.n), int(g.m), reqs[0].k,
+                                  int(res[0].levels),
+                                  rounds=reqs[0].max_inner)
+    roof = {"total": phase_roofline(
+        len(reqs) * sum(t["flops"] for t in model.values()),
+        len(reqs) * sum(t["bytes"] for t in model.values()),
+        wall_s, hw=hw)}
+    cell = {
+        "graph": gname, "variant": "jet", "p": 1, "k": reqs[0].k,
+        "schedule": "constant", "engine": "serve", "batch": batch,
+        "comm": "single", "gain": "jnp",
+        "n": int(g.n), "m": int(g.m),
+        "cut": float(res[0].cut), "imbalance": float(res[0].imbalance),
+        "levels": int(res[0].levels),
+        "coarsen_us": 0.0, "init_us": 0.0, "refine_us": 0.0,
+        "total_us": wall_s * 1e6,
+        "graphs_per_sec": len(reqs) / wall_s if wall_s > 0 else 0.0,
+        "p50_us": float(np.percentile(lats, 50)),
+        "p99_us": float(np.percentile(lats, 99)),
+        "dispatch_count": int(drivers.DISPATCH_COUNT),
+        "dispatches": dict(drivers.DISPATCHES),
+        "roofline": roof,
+        "retraces": int(drivers.TRACE_COUNT),
+        "allocs_per_1k": 1000.0 * GB.PAD_BUILD_COUNT / len(reqs),
+        "trace": trace_kind,
+        "pool": pool.stats(),
+    }
+    return cell, res
+
+
+def run_baseline_cell(gname, g, trace_kind, reqs, hw):
+    """Request-at-a-time baseline on the same trace: one ``partition``
+    call per request, serial-completion latency simulation."""
+    import numpy as np
+
+    from repro.core import partition
+    from repro.refine import drivers
+    from repro.roofline import partition_phase_model, phase_roofline
+
+    kw = dict(k=reqs[0].k, max_inner=reqs[0].max_inner,
+              coarsen_until=reqs[0].coarsen_until)
+    for s in sorted({r.seed for r in reqs}):
+        partition(g, seed=s, **kw)  # warmup: compile per seed-independent path
+
+    drivers.reset_counters()
+    events, res = [], []
+    t_total0 = time.perf_counter()
+    for r in reqs:
+        t0 = time.perf_counter()
+        res.append(partition(g, seed=r.seed, **kw))
+        events.append(((r.t_us, (time.perf_counter() - t0) * 1e6, [r.t_us])))
+    wall_s = time.perf_counter() - t_total0
+
+    lats = _serial_latencies(events)
+    model = partition_phase_model(int(g.n), int(g.m), reqs[0].k,
+                                  int(res[0].levels),
+                                  rounds=reqs[0].max_inner)
+    roof = {"total": phase_roofline(
+        len(reqs) * sum(t["flops"] for t in model.values()),
+        len(reqs) * sum(t["bytes"] for t in model.values()),
+        wall_s, hw=hw)}
+    cell = {
+        "graph": gname, "variant": "jet", "p": 1, "k": reqs[0].k,
+        "schedule": "constant", "engine": "dpartition", "batch": 1,
+        "comm": "single", "gain": "jnp",
+        "n": int(g.n), "m": int(g.m),
+        "cut": float(res[0].cut), "imbalance": float(res[0].imbalance),
+        "levels": int(res[0].levels),
+        "coarsen_us": 0.0, "init_us": 0.0, "refine_us": 0.0,
+        "total_us": wall_s * 1e6,
+        "graphs_per_sec": len(reqs) / wall_s if wall_s > 0 else 0.0,
+        "p50_us": float(np.percentile(lats, 50)),
+        "p99_us": float(np.percentile(lats, 99)),
+        "dispatch_count": int(drivers.DISPATCH_COUNT),
+        "dispatches": dict(drivers.DISPATCHES),
+        "roofline": roof,
+        "retraces": int(drivers.TRACE_COUNT),
+        "allocs_per_1k": 0.0,  # classic engine: no batched container
+        "trace": trace_kind,
+    }
+    return cell, res
+
+
+def serve_summary(cells):
+    """gmean serve-vs-baseline throughput speedup over the (graph, trace)
+    cell pairs both engines completed — the snapshot-gated headline."""
+    from benchmarks.common import gmean
+
+    base = {(c["graph"], c["trace"]): c["graphs_per_sec"]
+            for c in cells if c["engine"] == "dpartition"}
+    ratios = {f"{g}/{t}": c["graphs_per_sec"] / max(base[(g, t)], 1e-9)
+              for c in cells if c["engine"] == "serve"
+              for g, t in [(c["graph"], c["trace"])] if (g, t) in base}
+    if not ratios:
+        return {"gmean_speedup": 0.0, "pairs": 0, "ratios": {}}
+    return {"gmean_speedup": gmean(list(ratios.values())),
+            "pairs": len(ratios),
+            "ratios": {k: round(v, 3) for k, v in ratios.items()}}
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, SRC)
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import BENCH_SCHEMA_VERSION, bench_graph, validate_bench
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace grid (the CI serve-smoke job)")
+    ap.add_argument("--out", default=os.path.join(HERE, "SERVE_bench.json"))
+    ap.add_argument("--graphs", default=None,
+                    help="comma-separated instance names (benchmarks/common.py)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per trace (default: smoke 24 / full 64)")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="scheduler flush size target (FlushPolicy.batch_target)")
+    ap.add_argument("--mean-gap-us", type=float, default=200.0,
+                    help="mean virtual inter-arrival gap of the traces")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="distinct request seeds cycled over the trace "
+                         "(duplicates coalesce within a flush)")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--max-inner", type=int, default=None,
+                    help="inner-loop bound (default: smoke 6 / full 12)")
+    ap.add_argument("--hw", default="v5e",
+                    help="roofline hardware preset (repro.roofline)")
+    args = ap.parse_args(argv)
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+
+    import numpy as np
+
+    graphs = (tuple(args.graphs.split(","))
+              if args.graphs else (SMOKE_GRAPHS if args.smoke
+                                   else ("grid2d_2k", "rmat_11")))
+    n_req = (args.requests if args.requests is not None
+             else (24 if args.smoke else 64))
+    max_inner = (args.max_inner if args.max_inner is not None
+                 else (6 if args.smoke else 12))
+    coarsen_until = 64 if args.smoke else None
+
+    print(f"serve bench: graphs={graphs} traces={TRACE_KINDS} "
+          f"requests={n_req} batch={args.batch} seeds={args.seeds} "
+          f"k={args.k} max_inner={max_inner}", flush=True)
+
+    cells = []
+    for gname in graphs:
+        g = bench_graph(gname)
+        for trace_kind in TRACE_KINDS:
+            t_uss = build_trace(trace_kind, n_req, args.mean_gap_us,
+                                args.trace_seed)
+            reqs = make_requests(g, t_uss, args.k, max_inner,
+                                 coarsen_until, args.seeds)
+            scell, sres = run_serve_cell(gname, g, trace_kind, reqs,
+                                         args.batch, args.hw)
+            bcell, bres = run_baseline_cell(gname, g, trace_kind, reqs,
+                                            args.hw)
+            # the serving path must be bit-identical to request-at-a-time
+            for a, b in zip(sres, bres):
+                if not (np.array_equal(np.asarray(a.labels),
+                                       np.asarray(b.labels))
+                        and a.cut == b.cut):
+                    print(f"BIT-IDENTITY VIOLATION: {gname}/{trace_kind}",
+                          file=sys.stderr)
+                    return 2
+            cells.extend([scell, bcell])
+            print(f"  {gname:10s} {trace_kind:8s} "
+                  f"serve g/s={scell['graphs_per_sec']:8.2f} "
+                  f"p50={scell['p50_us']:8.0f}us "
+                  f"retraces={scell['retraces']} "
+                  f"allocs/1k={scell['allocs_per_1k']:.1f} | "
+                  f"solo g/s={bcell['graphs_per_sec']:8.2f} "
+                  f"p50={bcell['p50_us']:8.0f}us", flush=True)
+
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "smoke": bool(args.smoke),
+        "config": {"graphs": list(graphs), "traces": list(TRACE_KINDS),
+                   "requests": n_req, "batch": args.batch,
+                   "seeds": args.seeds, "mean_gap_us": args.mean_gap_us,
+                   "k": args.k, "max_inner": max_inner,
+                   "coarsen_until": coarsen_until,
+                   "trace_seed": args.trace_seed, "hw": args.hw},
+        "serve_summary": serve_summary(cells),
+        "cells": cells,
+    }
+    violations = validate_bench(doc)
+    # the steady-state contract is part of the document's validity: a serve
+    # cell with retraces or fresh allocations is a broken serving path
+    for c in cells:
+        if c["engine"] == "serve" and c["retraces"] != 0:
+            violations.append(f"serve cell {c['graph']}/{c['trace']}: "
+                              f"retraces={c['retraces']} != 0")
+        if c["engine"] == "serve" and c["allocs_per_1k"] != 0.0:
+            violations.append(f"serve cell {c['graph']}/{c['trace']}: "
+                              f"allocs_per_1k={c['allocs_per_1k']} != 0")
+
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    s = doc["serve_summary"]
+    print(f"wrote {args.out} ({len(cells)} cells); "
+          f"gmean speedup {s['gmean_speedup']:.2f}x over {s['pairs']} pairs")
+
+    ok = True
+    for msg in violations:
+        ok = False
+        print(f"SCHEMA VIOLATION: {msg}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

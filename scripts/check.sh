@@ -6,6 +6,12 @@
 # leg): the batched smoke sweep — bench.py checks the schema and the
 # one-dispatch-per-level-per-batch contract per cell — plus the
 # B=1-equivalence / batch-invariance suite and the bench-harness tests.
+#
+# --serve: the request-stream scheduler preflight (CI's serve-smoke leg):
+# the serve smoke bench — serve_bench.py checks bit-identity vs the
+# per-request baseline, the steady-state zero-retrace / zero-alloc
+# contract and the schema per cell — plus the serve test suite
+# (scheduler determinism, buffer-pool counters, stream bit-identity).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,6 +27,16 @@ if [[ "${1:-}" == "--batch" ]]; then
     --out "${BENCH_BATCH_OUT:-/tmp/BENCH_batch_smoke.json}"
   python -m pytest -x -q tests/test_batch_parity.py tests/test_bench.py
   echo "check.sh --batch: all green"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+  echo "== request-stream serving preflight =="
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/serve_bench.py --smoke \
+    --out "${SERVE_BENCH_OUT:-/tmp/SERVE_smoke.json}"
+  python -m pytest -x -q tests/test_serve.py tests/test_bench.py
+  echo "check.sh --serve: all green"
   exit 0
 fi
 

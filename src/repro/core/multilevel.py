@@ -151,6 +151,203 @@ def _lmax_batch(nw_stack, eps_per_slot, k: int):
     return one_plus * jnp.ceil(jnp.sum(nw_stack, axis=1) / k)
 
 
+def seed_list(graphs, seeds, seed, where: str = "partition_batch") -> list:
+    """Resolve the per-graph seed list at the API boundary.
+
+    A mismatched ``seeds=`` must fail here with a clear ValueError — not
+    deep inside the key chain — and the check runs *before* any early
+    return, so ``partition_batch([], seeds=[1])`` is an error, not a silent
+    ``[]``.  The serving scheduler routes its own ``seeds=`` override
+    through this same helper (the check is inherited, not duplicated)."""
+    if seeds is None:
+        return [seed] * len(graphs)
+    try:
+        seeds = list(seeds)
+    except TypeError:
+        raise ValueError(
+            f"{where}: seeds= must be an iterable with one seed per graph, "
+            f"got {type(seeds).__name__}") from None
+    if len(seeds) != len(graphs):
+        raise ValueError(
+            f"{where}: seeds has {len(seeds)} entries for "
+            f"{len(graphs)} graphs — pass exactly one seed per graph")
+    return seeds
+
+
+# --------------------------------------------------------------------------
+# batched-engine phases.  partition_batch = plan → init dispatch → winner
+# select → rung dispatches → finalize, and the serving runner
+# (repro.serve.runner) replays the SAME helpers over several flushed buckets
+# with all device dispatches enqueued before any result is read — so the
+# multi-bucket path is bit-identical to partition_batch by construction.
+# --------------------------------------------------------------------------
+
+
+def coalesce_slots(graphs, seeds, coalesce: bool):
+    """Request coalescing: identical requests (same :class:`Graph` *object*
+    + seed — the serving fan-out pattern) share one engine slot.  Returns
+    ``(slot_of, pairs)`` with ``pairs`` the unique (graph, seed) work items
+    and ``slot_of[i]`` the slot index serving request ``i``.  Equal-content
+    but distinct Graph objects intentionally stay separate slots (batch
+    invariance makes their results identical anyway)."""
+    slot_of, uniq, pairs = [], {}, []
+    for g, s in zip(graphs, seeds):
+        kk = (id(g), s) if coalesce else len(pairs)
+        if kk not in uniq:
+            uniq[kk] = len(pairs)
+            pairs.append((g, s))
+        slot_of.append(uniq[kk])
+    return slot_of, pairs
+
+
+def plan_request(g: Graph, s: int, k: int, sched, eps: float,
+                 coarsen_until: int | None) -> dict:
+    """Host coarsening + tolerance resolution for ONE request, replaying
+    ``partition()``'s exact key chain.  The returned dict is immutable (the
+    serving buffer pool caches it per request signature — coarsening is
+    deterministic, so a cached plan IS the recomputed plan); per-execution
+    mutable state is layered on by :func:`exec_state`."""
+    key = jax.random.PRNGKey(s)
+    k_coarse, k_init, key = jax.random.split(key, 3)
+    levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
+                                           coarsen_until=coarsen_until)
+    n_levels = len(levels) + 1
+    w_fracs = _level_w_fracs(
+        sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
+    return {
+        "g": g, "key0": key, "k_init": k_init,
+        # uncoarsening rungs: rung 0 = coarsest, rung j>0 = (fine,
+        # mapping) = reversed(levels)[j-1] — partition()'s loop order
+        "rungs": tuple(reversed(levels)), "coarsest": coarsest,
+        "n_levels": n_levels,
+        "eps_l": level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs),
+    }
+
+
+def exec_state(plan: dict) -> dict:
+    """Fresh mutable execution state over a (possibly cached) plan."""
+    return {**plan, "key": plan["key0"], "trace": []}
+
+
+def _make_batched(graphs, n_bucket, m_bucket, batched=None):
+    """Assemble the bucket batch — through ``batched`` (the serving buffer
+    pool's cached-slot hook, same bucket rule) when given, else a fresh
+    ``from_graphs``.  ``None`` buckets mean the :func:`from_graphs`
+    defaults (bucket of the batch maxima)."""
+    from repro.graphs.batch import from_graphs
+
+    if batched is not None:
+        return batched(graphs, n_bucket, m_bucket)
+    return from_graphs(graphs, n_bucket=n_bucket, m_bucket=m_bucket)
+
+
+def init_dispatch(st, k: int, eps: float, batched=None):
+    """Enqueue the batched initial-partitioning dispatch for one bucket's
+    work items; returns DEVICE arrays (no host sync — the multi-bucket
+    runner enqueues every bucket before reading any)."""
+    from repro.refine.drivers import initial_partition_batched
+
+    bg0 = _make_batched([s["coarsest"] for s in st], None, None, batched)
+    return initial_partition_batched(
+        bg0, k, jnp.stack([s["k_init"] for s in st]),
+        _lmax_batch(bg0.nw, [eps] * len(st), k), as_numpy=False)
+
+
+def init_select(st, labs, cuts, ovs) -> None:
+    """Host-side winner selection (the solo first-best-balanced rule) —
+    this is where the init results are synced."""
+    import numpy as np
+
+    labs, cuts, ovs = np.asarray(labs), np.asarray(cuts), np.asarray(ovs)
+    for i, s in enumerate(st):
+        best, best_cut = None, float("inf")
+        for r in range(labs.shape[1]):  # the solo first-best-balanced rule
+            if float(ovs[i, r]) <= 0 and float(cuts[i, r]) < best_cut:
+                best, best_cut = labs[i, r], float(cuts[i, r])
+        if best is None:  # all restarts imbalanced — take the last anyway
+            best = labs[i, -1]
+        s["labels"] = jnp.asarray(best[: s["coarsest"].n])
+
+
+def refine_rung(st, j: int, k: int, var: Variant, taus, patience: int,
+                max_inner: int, gain: str, trace_levels: bool = False,
+                batched=None, donate: bool = False, pad_to: int | None = None,
+                bucket_hook=None) -> None:
+    """Enqueue rung ``j``'s batched level dispatch for one bucket's work
+    items (projection, padding, lmax and the level program are all device
+    ops — nothing here blocks unless ``trace_levels`` asks for the
+    per-level host sync).
+
+    ``pad_to`` / ``bucket_hook`` are the serving path's steady-state hooks
+    (``repro.serve.runner``): hierarchy depth and per-level graph sizes
+    are seed-dependent, so with many requests per flush the rung's natural
+    sub-batch size and bucket vary with flush *composition* — which would
+    retrace on recompositions of already-seen work.  ``pad_to`` pads the
+    sub-batch to the flush's slot count by replicating the last work item
+    (batch-invariance makes replica mates inert — pinned in
+    tests/test_batch_parity.py — and replicas reuse the last item's rung
+    key, never touching an inactive item's chain), and ``bucket_hook(j,
+    nb, mb) -> (nb, mb)`` lets the buffer pool pin per-(signature, rung)
+    bucket high-water marks (oversized buckets are result-invariant).
+    Together they make the compiled key a function of (flush signature,
+    flush size) alone."""
+    from repro.graphs.batch import bucket_size
+    from repro.refine.drivers import make_refine_level_batched
+
+    part = [s for s in st if j < s["n_levels"]]
+    if not part:
+        return
+    lvl_graphs = []
+    for s in part:
+        if j == 0:
+            s["lvl_g"] = s["coarsest"]
+        else:
+            fine, mapping = s["rungs"][j - 1]
+            s["labels"] = s["labels"][mapping]  # project to finer level
+            s["lvl_g"] = fine
+        lvl_graphs.append(s["lvl_g"])
+    n_pad = max(0, (pad_to or 0) - len(part))
+    lvl_graphs += [lvl_graphs[-1]] * n_pad
+    nb = bucket_size(max(g.n for g in lvl_graphs), minimum=8)
+    mb = bucket_size(max(g.m for g in lvl_graphs), minimum=16)
+    if bucket_hook is not None:
+        nb, mb = bucket_hook(j, nb, mb)
+    bg = _make_batched(lvl_graphs, nb, mb, batched)
+    run = make_refine_level_batched(
+        bg, k, rounds_taus=taus, patience=patience, max_inner=max_inner,
+        gain=gain, variant=var.name, donate=donate)
+    keys = []
+    for s in part:
+        s["key"], sub = jax.random.split(s["key"])
+        keys.append(sub)
+    keys += [keys[-1]] * n_pad
+    lab_in = jnp.stack(
+        [jnp.pad(s["labels"], (0, bg.n - s["lvl_g"].n)) for s in part]
+        + [jnp.pad(part[-1]["labels"],
+                   (0, bg.n - part[-1]["lvl_g"].n))] * n_pad)
+    eps_j = [s["eps_l"][j] for s in part]
+    eps_j += [eps_j[-1]] * n_pad
+    out = run(lab_in, jnp.stack(keys), _lmax_batch(bg.nw, eps_j, k))
+    for i, s in enumerate(part):
+        s["labels"] = out[i, : s["lvl_g"].n]
+        if trace_levels:
+            s["trace"].append(level_trace_entry(
+                s["lvl_g"].n, s["eps_l"][j],
+                imbalance(s["lvl_g"], s["labels"], k)))
+
+
+def finalize_result(s: dict, k: int, trace_levels: bool) -> PartitionResult:
+    """Materialize one work item's result — the host sync point."""
+    return PartitionResult(
+        labels=s["labels"],
+        cut=float(edge_cut(s["g"], s["labels"])),
+        imbalance=float(imbalance(s["g"], s["labels"], k)),
+        levels=s["n_levels"],
+        level_eps=s["eps_l"],
+        level_trace=tuple(s["trace"]) if trace_levels else None,
+    )
+
+
 def partition_batch(
     graphs,
     k: int,
@@ -193,118 +390,31 @@ def partition_batch(
     and of the padding amount (tests/test_batch_parity.py).  Returns one
     :class:`PartitionResult` per graph, in input order.
     """
-    from repro.graphs.batch import bucket_size, from_graphs
-    from repro.refine.drivers import (
-        initial_partition_batched,
-        make_refine_level_batched,
-    )
     from repro.core.refine import temperature_schedule
 
     var = resolve_variant(refiner)
     sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
     graphs = list(graphs)
+    seeds = seed_list(graphs, seeds, seed)  # API-boundary check, even for []
     if not graphs:
         return []
-    if seeds is None:
-        seeds = [seed] * len(graphs)
-    seeds = list(seeds)
-    if len(seeds) != len(graphs):
-        raise ValueError(f"seeds has {len(seeds)} entries for "
-                         f"{len(graphs)} graphs")
     taus = temperature_schedule(var.rounds) if var.mode != "lp" else [0.0]
 
     # ---- request coalescing: identical requests share one engine slot ----
-    # keyed on (object identity, seed) — zero-cost and exact; equal-content
-    # but distinct Graph objects intentionally stay separate slots (batch
-    # invariance makes their results identical anyway)
-    slot_of, uniq, pairs = [], {}, []
-    for g, s in zip(graphs, seeds):
-        kk = (id(g), s) if coalesce else len(pairs)
-        if kk not in uniq:
-            uniq[kk] = len(pairs)
-            pairs.append((g, s))
-        slot_of.append(uniq[kk])
+    slot_of, pairs = coalesce_slots(graphs, seeds, coalesce)
 
     # ---- per-graph host coarsening, replaying partition()'s key chain ----
-    st = []
-    for g, s in pairs:
-        key = jax.random.PRNGKey(s)
-        k_coarse, k_init, key = jax.random.split(key, 3)
-        levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
-                                               coarsen_until=coarsen_until)
-        n_levels = len(levels) + 1
-        w_fracs = _level_w_fracs(
-            sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
-        st.append({
-            "g": g, "key": key, "k_init": k_init,
-            # uncoarsening rungs: rung 0 = coarsest, rung j>0 = (fine,
-            # mapping) = reversed(levels)[j-1] — partition()'s loop order
-            "rungs": list(reversed(levels)), "coarsest": coarsest,
-            "n_levels": n_levels,
-            "eps_l": level_tolerances(sched, eps, n_levels, k,
-                                      w_fracs=w_fracs),
-            "trace": [],
-        })
+    st = [exec_state(plan_request(g, s, k, sched, eps, coarsen_until))
+          for g, s in pairs]
 
     # ---- batched initial partitioning: B × 4 restarts, one dispatch ----
-    bg0 = from_graphs([s["coarsest"] for s in st])
-    labs, cuts, ovs = initial_partition_batched(
-        bg0, k, jnp.stack([s["k_init"] for s in st]),
-        _lmax_batch(bg0.nw, [eps] * len(st), k))
-    for i, s in enumerate(st):
-        best, best_cut = None, float("inf")
-        for r in range(labs.shape[1]):  # the solo first-best-balanced rule
-            if float(ovs[i, r]) <= 0 and float(cuts[i, r]) < best_cut:
-                best, best_cut = labs[i, r], float(cuts[i, r])
-        if best is None:  # all restarts imbalanced — take the last anyway
-            best = labs[i, -1]
-        s["labels"] = jnp.asarray(best[: s["coarsest"].n])
+    init_select(st, *init_dispatch(st, k, eps))
 
     # ---- rung-aligned batched refinement: one dispatch per rung ----
-    max_rungs = max(s["n_levels"] for s in st)
-    for j in range(max_rungs):
-        part = [s for s in st if j < s["n_levels"]]
-        lvl_graphs = []
-        for s in part:
-            if j == 0:
-                s["lvl_g"] = s["coarsest"]
-            else:
-                fine, mapping = s["rungs"][j - 1]
-                s["labels"] = s["labels"][mapping]  # project to finer level
-                s["lvl_g"] = fine
-            lvl_graphs.append(s["lvl_g"])
-        bg = from_graphs(
-            lvl_graphs,
-            n_bucket=bucket_size(max(g.n for g in lvl_graphs), minimum=8),
-            m_bucket=bucket_size(max(g.m for g in lvl_graphs), minimum=16))
-        run = make_refine_level_batched(
-            bg, k, rounds_taus=taus, patience=patience, max_inner=max_inner,
-            gain=gain, variant=var.name)
-        keys = []
-        for s in part:
-            s["key"], sub = jax.random.split(s["key"])
-            keys.append(sub)
-        lab_in = jnp.stack([
-            jnp.pad(s["labels"], (0, bg.n - s["lvl_g"].n)) for s in part])
-        out = run(lab_in, jnp.stack(keys),
-                  _lmax_batch(bg.nw, [s["eps_l"][j] for s in part], k))
-        for i, s in enumerate(part):
-            s["labels"] = out[i, : s["lvl_g"].n]
-            if trace_levels:
-                s["trace"].append(level_trace_entry(
-                    s["lvl_g"].n, s["eps_l"][j],
-                    imbalance(s["lvl_g"], s["labels"], k)))
+    for j in range(max(s["n_levels"] for s in st)):
+        refine_rung(st, j, k, var, taus, patience, max_inner, gain,
+                    trace_levels=trace_levels)
 
-    res_u = [
-        PartitionResult(
-            labels=s["labels"],
-            cut=float(edge_cut(s["g"], s["labels"])),
-            imbalance=float(imbalance(s["g"], s["labels"], k)),
-            levels=s["n_levels"],
-            level_eps=s["eps_l"],
-            level_trace=tuple(s["trace"]) if trace_levels else None,
-        )
-        for s in st
-    ]
+    res_u = [finalize_result(s, k, trace_levels) for s in st]
     # coalesced requests share the unique slot's (immutable) result
     return [res_u[j] for j in slot_of]

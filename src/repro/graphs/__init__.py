@@ -2,6 +2,7 @@ from repro.graphs.batch import (  # noqa: F401
     BatchedGraph,
     bucket_size,
     from_graphs,
+    from_padded_slots,
 )
 from repro.graphs.generators import (  # noqa: F401
     BENCHMARK_SET,

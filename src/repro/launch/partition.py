@@ -36,14 +36,78 @@ def main():
                     help="partition BATCH copies of --graph in one "
                          "request-batched call (core.partition_batch; "
                          "B=1 is bit-identical to the solo path)")
+    ap.add_argument("--serve-trace", default=None, metavar="KIND:N:MEAN_GAP_US",
+                    help="serve an N-request arrival trace of --graph through "
+                         "the stream scheduler (repro.serve) instead of one "
+                         "call; KIND is poisson or burst, MEAN_GAP_US the "
+                         "mean inter-arrival gap (virtual microseconds). "
+                         "Seeds cycle 0..7 so the buffer pool's plan/init "
+                         "caches engage. Example: poisson:64:200")
+    ap.add_argument("--serve-batch", type=int, default=8,
+                    help="scheduler flush size target (FlushPolicy.batch_target)")
+    ap.add_argument("--serve-deadline-us", type=float, default=None,
+                    help="oldest-request flush deadline in virtual "
+                         "microseconds (default: size-only flushing)")
     args = ap.parse_args()
-    if args.batch and args.distributed:
-        ap.error("--batch and --distributed are mutually exclusive")
+    if sum(map(bool, (args.batch, args.distributed,
+                      args.serve_trace))) > 1:
+        ap.error("--batch, --distributed and --serve-trace are "
+                 "mutually exclusive")
     # canonicalize aliases (unconstrained-then-snap → snap): the string is
     # echoed in the output JSON, where it keys cross-run comparisons
     args.schedule = resolve_schedule(args.schedule).mode
 
-    if args.batch:
+    if args.serve_trace:
+        import dataclasses
+
+        import numpy as np
+
+        from repro.serve import (
+            BufferPool,
+            FlushPolicy,
+            PartitionRequest,
+            partition_stream,
+        )
+
+        try:
+            kind, n_req, gap = args.serve_trace.split(":")
+            n_req, gap = int(n_req), float(gap)
+            if kind not in ("poisson", "burst") or n_req < 1 or gap < 0:
+                raise ValueError
+        except ValueError:
+            ap.error("--serve-trace wants KIND:N:MEAN_GAP_US with KIND in "
+                     "{poisson, burst}, N >= 1, MEAN_GAP_US >= 0 "
+                     f"(got {args.serve_trace!r})")
+        rng = np.random.RandomState(args.seed)
+        gaps = rng.exponential(gap, size=n_req)
+        if kind == "burst":  # groups of 4 back-to-back, 4x gaps between
+            gaps = np.where(np.arange(n_req) % 4 == 0, gaps * 4.0, 0.0)
+        t_uss = np.cumsum(gaps)
+
+        g = generate(args.graph)
+        proto = PartitionRequest(g, k=args.k, eps=args.eps,
+                                 refiner=args.refiner,
+                                 schedule=args.schedule,
+                                 eps_coarse=args.eps_coarse)
+        reqs = [dataclasses.replace(proto, seed=i % 8, t_us=float(t))
+                for i, t in enumerate(t_uss)]
+        policy = FlushPolicy(batch_target=args.serve_batch,
+                             deadline_us=args.serve_deadline_us)
+        pool = BufferPool()
+        t0 = time.time()
+        results, log = partition_stream(reqs, policy=policy, pool=pool,
+                                        report=True)
+        sec = time.time() - t0
+        res = results[0]
+        reasons: dict = {}
+        for fl in log:
+            reasons[fl["reason"]] = reasons.get(fl["reason"], 0) + 1
+        out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
+                   trace=kind, requests=n_req, flushes=len(log),
+                   flush_reasons=reasons, serve_batch=args.serve_batch,
+                   pool=pool.stats(), sec=round(sec, 2),
+                   graphs_per_sec=round(n_req / sec, 3))
+    elif args.batch:
         from repro.core import partition_batch
 
         g = generate(args.graph)

@@ -64,6 +64,23 @@ def reset_counters() -> None:
     TRACES.clear()
 
 
+# Cross-call buffer donation (serving path): donating the labels carry lets
+# XLA reuse the flush's label buffer for the output instead of allocating a
+# fresh one per rung.  Donation never changes values — the program reads the
+# input before the runtime recycles it (DESIGN.md §2).
+def _donation_supported() -> bool:
+    """XLA implements input-buffer donation on gpu/tpu only; the cpu backend
+    ignores it with a per-call warning, so the serving path degrades to the
+    undonated program there instead of spamming logs."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
+# test hook: force donate_argnums through on cpu (jax still runs the program,
+# it just cannot actually reuse the buffer) so the donated rendering's
+# bit-identity is pinned without TPU hardware
+FORCE_DONATE = False
+
+
 def _count_dispatch(kind: str) -> None:
     global DISPATCH_COUNT
     DISPATCH_COUNT += 1
@@ -256,14 +273,23 @@ def _batched_edge_view(col, src, ew, nw, n_real, n_bucket: int) -> EdgeView:
                     my_tid=ids, nw=nw, owned=ids < n_real)
 
 
-@lru_cache(maxsize=128)
+# maxsize sizing (serving bucket mix): geometric n-buckets give ~14 distinct
+# n (2^3 … 2^17) with at most 2-3 m-buckets each; times ~6 registered
+# variants and 2 gain backends a realistic mixed request stream touches a few
+# hundred distinct keys.  At the old 128 such a mix cycled the cache and every
+# flush retraced (silent thrash); 512 keeps the whole realistic mix resident
+# while still bounding memory (each entry is one traced program).
+@lru_cache(maxsize=512)
 def _batched_level_fn(b, n_bucket, m_bucket, k, patience, max_inner,
-                      gain_kind, max_deg, interpret, variant):
+                      gain_kind, max_deg, interpret, variant, donate):
     """One compiled program refining B bucket slots at once: ``jax.vmap``
     of the single-device level program over the batch axis.  Memoised on
     the full bucket key ``(B, n_bucket, m_bucket, k, variant, taus-shape
     statics, gain backend, …)`` so every batch landing in the same bucket
-    reuses the compiled dispatch."""
+    reuses the compiled dispatch.  ``donate=True`` donates the labels carry
+    (``donate_argnums``) so XLA recycles the flush's label buffer for the
+    output — the serving scheduler's steady-state setting; values are
+    identical either way (tests/test_serve.py pins it)."""
     var = resolve_variant(variant)
 
     def per_slot(col, src, ew, nw, n_real, labels, key, lmax, taus):
@@ -275,13 +301,14 @@ def _batched_level_fn(b, n_bucket, m_bucket, k, patience, max_inner,
         return engine.refine_level(cm, gb, ev, labels, key, lmax, taus, k,
                                    patience, max_inner, move_fn=var.move)
 
-    @jax.jit
     def fn(col, src, ew, nw, n_real, labels, keys, lmaxs, taus):
         _count_trace("batched")
         return jax.vmap(per_slot, in_axes=(0,) * 8 + (None,))(
             col, src, ew, nw, n_real, labels, keys, lmaxs, taus)
 
-    return fn
+    # labels is positional arg 5 of fn — the only carry the caller never
+    # reuses after the dispatch, hence the only donation candidate
+    return jax.jit(fn, donate_argnums=(5,) if donate else ())
 
 
 def batched_max_deg(bg) -> int:
@@ -296,20 +323,28 @@ def batched_max_deg(bg) -> int:
 
 def make_refine_level_batched(bg, k, *, rounds_taus, patience=12,
                               max_inner=64, gain="jnp", interpret=None,
-                              variant="jet"):
+                              variant="jet", donate=False):
     """Fused level refinement over a :class:`repro.graphs.batch.BatchedGraph`.
 
     Returns ``run(labels, keys, lmaxs) -> labels`` with ``labels`` (B, n),
     ``keys`` (B,)-stacked PRNG keys and ``lmaxs`` (B,) per-slot balance
     bounds — ONE dispatch refines all B slots.  Bit-identical per slot to
     :func:`refine_single` on the unpadded graph (tests/test_batch_parity.py).
+
+    ``donate=True`` requests label-buffer donation (the serving scheduler's
+    steady-state zero-allocation setting); it is honoured only where XLA
+    implements donation (gpu/tpu — see :func:`_donation_supported`), so on
+    cpu the flag resolves to the same cached program as ``donate=False``
+    instead of warning per call.
     """
     resolve_variant(variant)
     max_deg = batched_max_deg(bg) if _need_max_deg(gain) else None
     gain_kind = resolve_gain(gain, k, max_deg)
+    donate = bool(donate) and (_donation_supported() or FORCE_DONATE)
     fn = _batched_level_fn(
         bg.b, bg.n, bg.m, k, patience, max_inner, gain_kind,
-        max_deg if gain_kind == "pallas" else None, interpret, variant)
+        max_deg if gain_kind == "pallas" else None, interpret, variant,
+        donate)
     taus = jnp.asarray(rounds_taus, jnp.float32)
 
     def run(labels, keys, lmaxs):
@@ -320,7 +355,9 @@ def make_refine_level_batched(bg, k, *, rounds_taus, patience=12,
     return run
 
 
-@lru_cache(maxsize=64)
+# keyed on coarsest-level buckets only (coarsen_until clamps n), so far
+# fewer distinct keys than the level factory — 128 is ample headroom
+@lru_cache(maxsize=128)
 def _batched_init_fn(b, n_bucket, m_bucket, k, n_restarts):
     """One compiled program running the full multi-restart initial
     partitioning for B coarsest graphs: per slot, the exact restart chain
@@ -358,17 +395,23 @@ def _batched_init_fn(b, n_bucket, m_bucket, k, n_restarts):
     return fn
 
 
-def initial_partition_batched(bg, k, keys, lmaxs, n_restarts: int = 4):
+def initial_partition_batched(bg, k, keys, lmaxs, n_restarts: int = 4,
+                              as_numpy: bool = True):
     """Multi-restart initial partitioning of B coarsest graphs in ONE
     dispatch (B × ``n_restarts`` restart slots in one vmapped program).
 
     Returns host arrays ``(labels (B, R, n), cuts (B, R), overloads
     (B, R))``; the caller replays the solo path's winner rule per slot.
+    ``as_numpy=False`` returns the device arrays instead — the multi-bucket
+    serving runner enqueues every bucket's init dispatch before blocking on
+    any of them (the host conversion is where the sync happens).
     """
     fn = _batched_init_fn(bg.b, bg.n, bg.m, k, n_restarts)
     _count_dispatch("batched_init")
     labs, cuts, ovs = fn(bg.col, bg.src, bg.ew, bg.nw, bg.n_real, keys,
                          jnp.asarray(lmaxs, jnp.float32))
+    if not as_numpy:
+        return labs, cuts, ovs
     return np.asarray(labs), np.asarray(cuts), np.asarray(ovs)
 
 
@@ -377,6 +420,30 @@ def batched_cache_info() -> dict:
     the bucketed batched programs."""
     return {"level": _batched_level_fn.cache_info()._asdict(),
             "init": _batched_init_fn.cache_info()._asdict()}
+
+
+def _lru_stats(cached_fn) -> dict:
+    """{hits, misses, evictions, currsize, maxsize} of one lru_cache'd
+    factory.  Every miss inserts exactly one entry and entries only leave by
+    LRU eviction, so ``evictions = misses − currsize`` (exact as long as
+    ``cache_clear`` is never called, which nothing in the repo does)."""
+    info = cached_fn.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "evictions": max(0, info.misses - info.currsize),
+            "currsize": info.currsize, "maxsize": info.maxsize}
+
+
+def cache_stats() -> dict:
+    """Per-factory retrace-cache statistics (hits/misses/evictions) of every
+    memoised level-program factory — the serving scheduler logs the
+    ``level``/``init`` entries per flush, and ``bench.py`` records them per
+    batched cell.  A nonzero ``evictions`` under a realistic bucket mix
+    means the factory maxsize is too small (the cache is thrashing and every
+    flush retraces)."""
+    return {"level": _lru_stats(_batched_level_fn),
+            "init": _lru_stats(_batched_init_fn),
+            "sharded": _lru_stats(_sharded_level_fn),
+            "halo": _lru_stats(_halo_level_fn)}
 
 
 # --------------------------------------------------------------------------

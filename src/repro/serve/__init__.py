@@ -1,0 +1,20 @@
+"""Request-stream serving path (DESIGN.md §2, "Serving").
+
+Turns the request-batched engine (``repro.core.partition_batch``) into a
+serving pipeline: a deterministic bucket scheduler groups arriving
+requests into per-bucket flushes (``scheduler``), a cross-call buffer pool
+makes steady-state flushes retrace-free and upload-free (``buffers``), and
+a multi-bucket runner enqueues simultaneous flushes back-to-back without
+host round-trips (``runner``).  ``partition_stream`` is the synchronous
+facade — bit-identical to per-request ``partition``.
+"""
+
+from repro.serve.buffers import BufferPool, default_pool  # noqa: F401
+from repro.serve.runner import partition_stream, run_group  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    BucketScheduler,
+    Flush,
+    FlushPolicy,
+    PartitionRequest,
+    bucket_signature,
+)

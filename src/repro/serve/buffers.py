@@ -1,0 +1,224 @@
+"""Cross-call device-buffer pool for the serving path (DESIGN.md §2).
+
+``partition_batch`` re-pads and re-uploads every graph on every call.  A
+serving process sees the SAME graph objects flush after flush, so the pool
+caches the two host-side products that dominate steady-state cost:
+
+* **plans** — :func:`repro.core.multilevel.plan_request` output (the host
+  coarsening hierarchy + key chain + tolerance ladder) keyed by
+  ``(id(graph), seed, k, eps, schedule, coarsen_until)``.  Coarsening is
+  deterministic, so a cached plan IS the recomputed plan; a hit skips the
+  whole host coarsening loop.
+* **init winners** — the coarsest-level initial-partition labels, keyed by
+  the SAME plan key.  The init winner is a pure function of
+  (graph, seed, k, eps): the restart chain splits keys from the plan's
+  ``k_init`` and the winner rule is deterministic, so the cached labels
+  ARE what a recomputation would produce bit-for-bit (pinned in
+  tests/test_serve.py with caching disabled vs enabled).  A hit turns a
+  steady-state flush into rung dispatches only — no init program at all.
+* **slots** — per-level padded device arrays (``pad_graph`` output + the
+  real edge count) keyed by ``(id(level_graph), n_bucket, m_bucket)``.
+  A hit means flush assembly is pure device compute
+  (:func:`repro.graphs.batch.from_padded_slots` stacking) with **zero
+  fresh pad+upload events** — the pool's ``alloc_count`` counts exactly
+  those events (slot-cache misses), which is the instrumented
+  "allocations" contract the steady-state tests and bench schema pin.
+  XLA-internal temporaries are out of scope; the flush *output* buffers
+  are recycled by ``donate_argnums`` on the level programs instead.
+
+id()-keyed caching is safe because every entry stores a strong reference
+to its graph and verifies ``entry.graph is graph`` on lookup — a recycled
+id cannot alias a live entry, and a dead entry for the same id is simply
+replaced.  Both caches are LRU (insertion-ordered dict, move-to-end on
+hit) so a long-running server with churning graphs stays bounded.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.graph import pad_graph
+from repro.core.multilevel import plan_request
+from repro.graphs.batch import bucket_size, from_padded_slots, record_pad_builds
+
+
+class BufferPool:
+    """Per-process plan + padded-slot cache (see module docstring).
+
+    ``max_plans`` / ``max_slots`` bound the LRU caches.  Defaults are sized
+    for the smoke/bench working sets (a few dozen distinct graphs × a few
+    levels × 1-2 buckets each) with an order of magnitude of headroom —
+    a slot entry is one padded level graph, so thousands of entries is
+    still small next to the retrace cache's compiled programs.
+    """
+
+    def __init__(self, max_plans: int = 1024, max_slots: int = 4096,
+                 cache_inits: bool = True):
+        self.max_plans = int(max_plans)
+        self.max_slots = int(max_slots)
+        self.cache_inits = bool(cache_inits)
+        # key -> (graph, plan) / (graph, labels) / (graph, padded, m_real)
+        self._plans: OrderedDict[tuple, tuple] = OrderedDict()
+        self._inits: OrderedDict[tuple, tuple] = OrderedDict()
+        self._slots: OrderedDict[tuple, tuple] = OrderedDict()
+        # (flush signature, rung) -> (n_bucket, m_bucket) high-water mark
+        self._rung_marks: dict[tuple, tuple] = {}
+        self.reset_counters()
+
+    # ---- counters ------------------------------------------------------
+    def reset_counters(self) -> None:
+        """Zero the event counters (cache contents are kept)."""
+        self.alloc_count = 0  # fresh pad+upload events == slot misses
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.init_hits = 0
+        self.init_misses = 0
+        self.slot_hits = 0
+        self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"alloc_count": self.alloc_count,
+                "plan_hits": self.plan_hits,
+                "plan_misses": self.plan_misses,
+                "init_hits": self.init_hits,
+                "init_misses": self.init_misses,
+                "slot_hits": self.slot_hits,
+                "evictions": self.evictions,
+                "plans": len(self._plans),
+                "inits": len(self._inits),
+                "slots": len(self._slots)}
+
+    def clear(self) -> None:
+        """Drop cached plans, init winners and device slots (counters too)."""
+        self._plans.clear()
+        self._inits.clear()
+        self._slots.clear()
+        self._rung_marks.clear()
+        self.reset_counters()
+
+    def rung_bucket(self, sig: tuple, j: int, n_bucket: int,
+                    m_bucket: int) -> tuple:
+        """Per-(flush signature, rung) bucket high-water mark — the serving
+        path's ``bucket_hook`` (see ``core.multilevel.refine_rung``).
+        Per-level graph sizes are seed-dependent, so a flush's natural rung
+        bucket varies with which requests it groups; padding every flush of
+        a signature to the largest rung bucket seen keeps the compiled key
+        stable across recompositions (oversized buckets are
+        result-invariant — pinned in tests/test_batch_parity.py).  Marks
+        only grow, and only within a signature's own level-size envelope,
+        so the map stays tiny (levels × live signatures)."""
+        key = (sig, j)
+        mark = self._rung_marks.get(key)
+        if mark is not None:
+            n_bucket = max(n_bucket, mark[0])
+            m_bucket = max(m_bucket, mark[1])
+        self._rung_marks[key] = (n_bucket, m_bucket)
+        return n_bucket, m_bucket
+
+    @staticmethod
+    def plan_key(g, seed: int, k: int, sched, eps: float,
+                 coarsen_until: int | None) -> tuple:
+        """The request-signature key shared by the plan and init caches —
+        every field the coarsening hierarchy and the init restart chain
+        depend on (gain/variant are NOT in it: initial partitioning always
+        runs the jet/jnp reference chain, see ``drivers._batched_init_fn``)."""
+        return (id(g), seed, k, eps, sched, coarsen_until)
+
+    # ---- plan cache ----------------------------------------------------
+    def plan(self, g, seed: int, k: int, sched, eps: float,
+             coarsen_until: int | None) -> dict:
+        """Cached :func:`plan_request` (immutable — callers layer mutable
+        execution state on top via ``exec_state``)."""
+        key = self.plan_key(g, seed, k, sched, eps, coarsen_until)
+        ent = self._plans.get(key)
+        if ent is not None and ent[0] is g:
+            self.plan_hits += 1
+            self._plans.move_to_end(key)
+            return ent[1]
+        self.plan_misses += 1
+        plan = plan_request(g, seed, k, sched, eps, coarsen_until)
+        self._plans[key] = (g, plan)
+        self._plans.move_to_end(key)
+        if len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return plan
+
+    # ---- init-winner cache --------------------------------------------
+    def init_labels(self, g, key: tuple):
+        """Cached coarsest-level init winner for plan key ``key`` (None =
+        miss).  Disabled pools always miss (and never store), so every
+        flush reruns the init program — the bit-identity control."""
+        if not self.cache_inits:
+            return None
+        ent = self._inits.get(key)
+        if ent is not None and ent[0] is g:
+            self.init_hits += 1
+            self._inits.move_to_end(key)
+            return ent[1]
+        self.init_misses += 1
+        return None
+
+    def store_init(self, g, key: tuple, labels) -> None:
+        if not self.cache_inits:
+            return
+        self._inits[key] = (g, labels)
+        self._inits.move_to_end(key)
+        if len(self._inits) > self.max_plans:
+            self._inits.popitem(last=False)
+            self.evictions += 1
+
+    # ---- padded-slot cache --------------------------------------------
+    def _slot(self, g, n_bucket: int, m_bucket: int):
+        """Cached ``(pad_graph(g, ...), m_real)`` for one level graph."""
+        key = (id(g), n_bucket, m_bucket)
+        ent = self._slots.get(key)
+        if ent is not None and ent[0] is g:
+            self.slot_hits += 1
+            self._slots.move_to_end(key)
+            return ent[1], ent[2]
+        self.alloc_count += 1  # the one fresh pad+upload event per miss
+        record_pad_builds(1)   # ... mirrored on the global bench counter
+        padded = pad_graph(g, n_bucket, m_bucket)
+        m_real = int(np.asarray(g.edge_mask).sum())
+        self._slots[key] = (g, padded, m_real)
+        self._slots.move_to_end(key)
+        if len(self._slots) > self.max_slots:
+            self._slots.popitem(last=False)
+            self.evictions += 1
+        return padded, m_real
+
+    def batched(self, graphs, n_bucket: int | None, m_bucket: int | None):
+        """The engine's batch-assembly hook (``_make_batched(batched=...)``):
+        same bucket rule and bit-identical output as ``from_graphs``, but
+        built from cached padded slots — a full-hit flush is device-only
+        stacking."""
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("BufferPool.batched needs at least one graph")
+        if n_bucket is None:
+            n_bucket = bucket_size(max(g.n for g in graphs), minimum=8)
+        if m_bucket is None:
+            m_bucket = bucket_size(max(g.m for g in graphs), minimum=16)
+        slots, n_reals, m_reals = [], [], []
+        for g in graphs:
+            padded, m_real = self._slot(g, n_bucket, m_bucket)
+            slots.append(padded)
+            n_reals.append(g.n)
+            m_reals.append(m_real)
+        return from_padded_slots(slots, n_reals, m_reals,
+                                 n_bucket=n_bucket, m_bucket=m_bucket)
+
+
+_DEFAULT_POOL: BufferPool | None = None
+
+
+def default_pool() -> BufferPool:
+    """The process-global pool ``partition_stream`` uses when none is
+    passed — so repeated stream calls in one process share warm buffers."""
+    global _DEFAULT_POOL
+    if _DEFAULT_POOL is None:
+        _DEFAULT_POOL = BufferPool()
+    return _DEFAULT_POOL

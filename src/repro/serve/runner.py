@@ -1,0 +1,168 @@
+"""Multi-bucket dispatch runner + the synchronous serving facade.
+
+:func:`run_group` executes one scheduler dispatch group (simultaneous
+flushes of different buckets) through the SAME phase helpers
+``partition_batch`` is built from (``repro.core.multilevel``), so results
+are bit-identical to the per-request path by construction.  The only
+difference is dispatch ordering: every flush's initial-partition program is
+enqueued before any result is read (JAX async dispatch — device arrays,
+no host sync), winner selection then drains them together, and the rung
+loop interleaves the flushes' level dispatches so XLA queues all buckets'
+programs back-to-back with no intervening host round-trip.  Work items
+whose plan key has a cached init winner in the pool skip the init program
+entirely (warm start — the winner is a pure function of the plan key, so
+the cached labels are bit-identical to a recomputation).  Level programs
+run with ``donate=True``: on backends that implement donation the previous
+flush's label carry is recycled in place (``refine.drivers``).
+
+:func:`partition_stream` is the synchronous facade: schedule the arrival
+trace (``repro.serve.scheduler``), run each dispatch group in virtual-time
+order against a :class:`repro.serve.buffers.BufferPool`, and return results
+in request order — bit-identical to calling ``partition`` per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.multilevel import (
+    coalesce_slots,
+    exec_state,
+    finalize_result,
+    init_dispatch,
+    init_select,
+    refine_rung,
+    seed_list,
+)
+from repro.refine.schedule import resolve_schedule
+from repro.refine.variants import resolve_variant
+from repro.serve.buffers import BufferPool, default_pool
+from repro.serve.scheduler import BucketScheduler, Flush, FlushPolicy
+
+
+def run_group(group, pool: BufferPool, coalesce: bool = True,
+              trace_levels: bool = False, donate: bool = True) -> dict:
+    """Run one dispatch group (list of simultaneous :class:`Flush`\\ es);
+    returns ``{request_index: PartitionResult}``."""
+    from repro.core.refine import temperature_schedule
+
+    ctxs = []
+    for fl in group:
+        # every request in a flush shares the bucket signature, hence all
+        # static config — only graph and seed vary within a flush
+        r0 = fl.requests[0]
+        var = resolve_variant(r0.refiner)
+        sched = resolve_schedule(r0.schedule, r0.eps_coarse)
+        taus = (temperature_schedule(var.rounds)
+                if var.mode != "lp" else [0.0])
+        slot_of, pairs = coalesce_slots([r.graph for r in fl.requests],
+                                        [r.seed for r in fl.requests],
+                                        coalesce)
+        st = []
+        for g, s in pairs:
+            pk = pool.plan_key(g, s, r0.k, sched, r0.eps, r0.coarsen_until)
+            state = exec_state(pool.plan(g, s, r0.k, sched, r0.eps,
+                                         r0.coarsen_until))
+            state["_g"], state["_pk"] = g, pk
+            cached = pool.init_labels(g, pk)
+            if cached is not None:  # warm start: skip the init program
+                state["labels"] = cached
+            st.append(state)
+        ctxs.append({"fl": fl, "r0": r0, "var": var, "taus": taus,
+                     "slot_of": slot_of, "st": st,
+                     "todo": [s for s in st if "labels" not in s]})
+
+    # enqueue every flush's init program before reading any result (only
+    # for work items without a cached init winner)
+    for c in ctxs:
+        if c["todo"]:
+            c["init"] = init_dispatch(c["todo"], c["r0"].k, c["r0"].eps,
+                                      batched=pool.batched)
+    for c in ctxs:
+        if c["todo"]:
+            init_select(c["todo"], *c["init"])
+            for s in c["todo"]:
+                pool.store_init(s["_g"], s["_pk"], s["labels"])
+
+    # interleave rung dispatches across flushes: rung j of every bucket is
+    # enqueued before rung j+1 of any — all device ops, no host round-trips
+    # (unless trace_levels asks for the per-level sync).  pad_to + the
+    # pool's rung-bucket marks make each compiled key a function of
+    # (flush signature, slot count) alone, so recompositions of
+    # already-served work never retrace (the steady-state contract)
+    for j in range(max(max(s["n_levels"] for s in c["st"]) for c in ctxs)):
+        for c in ctxs:
+            sig = c["fl"].sig
+            refine_rung(c["st"], j, c["r0"].k, c["var"], c["taus"],
+                        c["r0"].patience, c["r0"].max_inner, c["r0"].gain,
+                        trace_levels=trace_levels, batched=pool.batched,
+                        donate=donate, pad_to=len(c["st"]),
+                        bucket_hook=lambda rj, nb, mb, s=sig:
+                            pool.rung_bucket(s, rj, nb, mb))
+
+    out: dict = {}
+    for c in ctxs:
+        res_u = [finalize_result(s, c["r0"].k, trace_levels)
+                 for s in c["st"]]
+        for pos, i in enumerate(c["fl"].indices):
+            out[i] = res_u[c["slot_of"][pos]]
+    return out
+
+
+def partition_stream(requests, policy: FlushPolicy | None = None,
+                     pool: BufferPool | None = None, seeds=None,
+                     coalesce: bool = True, trace_levels: bool = False,
+                     donate: bool = True, report: bool = False):
+    """Serve a request stream synchronously.
+
+    Schedules ``requests`` (:class:`repro.serve.scheduler.PartitionRequest`)
+    into per-bucket flushes under ``policy`` (default: size-8, no
+    deadline), runs each dispatch group through :func:`run_group` against
+    ``pool`` (default: the process-global :func:`default_pool`), and
+    returns one ``PartitionResult`` per request, in request order —
+    bit-identical to calling ``repro.core.partition`` once per request
+    (tests/test_serve.py pins this across the variant × schedule grid).
+
+    ``seeds=`` overrides the requests' own seeds, validated at this API
+    boundary by the same ``seed_list`` check ``partition_batch`` uses.
+    ``report=True`` also returns the per-flush log: flush metadata plus the
+    retrace-cache and buffer-pool counter deltas each flush caused.
+    """
+    from repro.refine import drivers
+
+    requests = list(requests)
+    if seeds is not None:
+        seeds = seed_list(requests, seeds, 0, where="partition_stream")
+        requests = [dataclasses.replace(r, seed=s)
+                    for r, s in zip(requests, seeds)]
+    pool = pool if pool is not None else default_pool()
+    groups = BucketScheduler(policy).plan(requests)
+
+    results: dict = {}
+    flush_log: list[dict] = []
+    for group in groups:
+        if report:
+            lvl0 = drivers.cache_stats()["level"]
+            pool0 = pool.stats()
+        results.update(run_group(group, pool, coalesce=coalesce,
+                                 trace_levels=trace_levels, donate=donate))
+        if report:
+            lvl1 = drivers.cache_stats()["level"]
+            pool1 = pool.stats()
+            for fl in group:
+                flush_log.append({
+                    "time_us": fl.time_us, "reason": fl.reason,
+                    "size": len(fl.indices),
+                    "n_bucket": fl.sig[0], "m_bucket": fl.sig[1],
+                    # counter deltas for the whole dispatch group (flushes
+                    # in a group share one enqueue, so deltas are per-group)
+                    "level_cache": {kk: lvl1[kk] - lvl0[kk]
+                                    for kk in ("hits", "misses")},
+                    "pool": {kk: pool1[kk] - pool0[kk]
+                             for kk in ("alloc_count", "plan_hits",
+                                        "plan_misses", "slot_hits",
+                                        "evictions")},
+                })
+
+    res = [results[i] for i in range(len(requests))]
+    return (res, flush_log) if report else res

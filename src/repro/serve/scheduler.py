@@ -1,0 +1,179 @@
+"""Bucket scheduler for the serving path (DESIGN.md §2).
+
+A request stream never arrives as one tidy list: this module turns arriving
+:class:`PartitionRequest`\\ s into *flushes* — per-bucket batches the
+request-batched engine (``repro.core.partition_batch``'s phase helpers) can
+run as one compiled dispatch per level.  Requests are grouped by **bucket
+signature** (pad-to-bucket shape + every static knob of the compiled level
+programs: k, eps, variant, schedule, gain, patience, max_inner,
+coarsen_until), so every request in a flush rides the same retrace-cache
+entries.  A bucket flushes when it
+
+  * reaches the policy's ``batch_target`` (size flush),
+  * its oldest pending request ages past ``deadline_us`` (deadline flush;
+    virtual time — the arrival trace's ``t_us`` stamps, never the wall
+    clock, so a replayed trace schedules identically every time), or
+  * the trace drains (end-of-stream flush).
+
+Flushes that become ready at the same virtual instant form one **dispatch
+group** — the multi-bucket unit :mod:`repro.serve.runner` enqueues
+back-to-back without intervening host round-trips.  The whole plan is a
+pure function of (requests, policy): deterministic given an arrival trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.refine.schedule import ToleranceSchedule, resolve_schedule
+from repro.refine.variants import resolve_variant
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionRequest:
+    """One partitioning request in the stream.
+
+    ``t_us`` is the arrival timestamp in (virtual) microseconds — replayed
+    traces carry their own clock.  All other fields mirror
+    ``repro.core.partition``'s signature; two requests land in the same
+    scheduler bucket iff every config field (and the graph's pad-to-bucket
+    shape) agrees.
+    """
+
+    graph: Any
+    k: int = 4
+    eps: float = 0.03
+    seed: int = 0
+    refiner: str = "d4xjet"
+    schedule: str | ToleranceSchedule = "constant"
+    eps_coarse: float | None = None
+    gain: str = "jnp"
+    patience: int = 12
+    max_inner: int = 64
+    coarsen_until: int | None = None
+    t_us: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """Size/deadline flush policy.
+
+    ``batch_target`` flushes a bucket as soon as it holds that many
+    requests; ``deadline_us`` (None = size-only) bounds how long the oldest
+    request in a bucket may wait before its bucket is flushed regardless of
+    fill.  Both knobs trade latency against dispatch amortization.
+    """
+
+    batch_target: int = 8
+    deadline_us: float | None = None
+
+    def __post_init__(self):
+        if self.batch_target < 1:
+            raise ValueError(f"batch_target must be >= 1, "
+                             f"got {self.batch_target}")
+        if self.deadline_us is not None and self.deadline_us < 0:
+            raise ValueError(f"deadline_us must be >= 0, "
+                             f"got {self.deadline_us}")
+
+
+def bucket_signature(req: PartitionRequest) -> tuple:
+    """The scheduler grouping key: pad-to-bucket shape of the request's
+    graph plus every static field of the compiled level programs.  Two
+    requests with equal signatures are guaranteed to share the engine's
+    bucketed retrace-cache entries when flushed together."""
+    from repro.graphs.batch import bucket_size
+
+    var = resolve_variant(req.refiner)
+    sched = resolve_schedule(req.schedule, req.eps_coarse)
+    return (bucket_size(req.graph.n, minimum=8),
+            bucket_size(req.graph.m, minimum=16),
+            req.k, req.eps, var.name, var.rounds, sched, req.gain,
+            req.patience, req.max_inner, req.coarsen_until)
+
+
+@dataclasses.dataclass(frozen=True)
+class Flush:
+    """One flushed bucket: the request indices (into the stream) it serves,
+    the virtual time it became ready, and why it flushed."""
+
+    sig: tuple
+    indices: tuple  # positions in the original request list
+    requests: tuple  # the PartitionRequests, same order as indices
+    time_us: float
+    reason: str  # "size" | "deadline" | "drain"
+
+
+class BucketScheduler:
+    """Deterministic replay scheduler: :meth:`plan` maps an arrival trace to
+    dispatch groups (lists of simultaneous :class:`Flush`\\ es).
+
+    Determinism contract: the plan is a pure function of the request list
+    and the policy.  Arrivals are processed in stable ``t_us`` order (ties
+    keep list order); simultaneous deadline expiries flush in
+    (expiry time, bucket first-seen order); the results a flush produces
+    are independent of which flush carries a request (batch invariance), so
+    the *partition results* of a stream do not depend on the policy at all
+    — only latency and throughput do.
+    """
+
+    def __init__(self, policy: FlushPolicy | None = None):
+        self.policy = policy or FlushPolicy()
+
+    def plan(self, requests) -> list[list[Flush]]:
+        requests = list(requests)
+        order = sorted(range(len(requests)), key=lambda i: requests[i].t_us)
+        pending: dict[tuple, list[int]] = {}   # sig -> request indices
+        first_seen: dict[tuple, int] = {}      # sig -> bucket discovery rank
+        flushes: list[Flush] = []
+
+        def flush(sig: tuple, t: float, reason: str) -> None:
+            idxs = tuple(pending.pop(sig))
+            flushes.append(Flush(
+                sig=sig, indices=idxs,
+                requests=tuple(requests[i] for i in idxs),
+                time_us=float(t), reason=reason))
+
+        def expired(now: float | None):
+            """Buckets whose oldest request has aged past the deadline by
+            virtual time ``now`` (None = end of trace: everything),
+            in deterministic (expiry, first-seen) order."""
+            dl = self.policy.deadline_us
+            out = []
+            for sig, idxs in pending.items():
+                t_exp = requests[idxs[0]].t_us + dl
+                if now is None or t_exp <= now:
+                    out.append((t_exp, first_seen[sig], sig))
+            return sorted(out)
+
+        for i in order:
+            t = requests[i].t_us
+            if self.policy.deadline_us is not None:
+                for t_exp, _, sig in expired(t):
+                    flush(sig, t_exp, "deadline")
+            sig = bucket_signature(requests[i])
+            if sig not in pending:
+                pending[sig] = []
+                first_seen.setdefault(sig, len(first_seen))
+            pending[sig].append(i)
+            if len(pending[sig]) >= self.policy.batch_target:
+                flush(sig, t, "size")
+
+        # end of stream: deadline buckets age out at their own expiry time,
+        # size-only buckets drain together at the last arrival
+        if self.policy.deadline_us is not None:
+            for t_exp, _, sig in expired(None):
+                flush(sig, t_exp, "deadline")
+        else:
+            t_end = max((r.t_us for r in requests), default=0.0)
+            for sig in sorted(pending, key=first_seen.__getitem__):
+                flush(sig, t_end, "drain")
+
+        # simultaneous flushes form one multi-bucket dispatch group
+        groups: list[list[Flush]] = []
+        for fl in sorted(flushes, key=lambda f: f.time_us):
+            if groups and groups[-1][0].time_us == fl.time_us:
+                groups[-1].append(fl)
+            else:
+                groups.append([fl])
+        return groups

@@ -45,6 +45,7 @@ def _cell(**over):
         "dispatches": {"sharded": 4, "single": 4},
         "roofline": {"coarsen": _roof_phase(), "init": _roof_phase(),
                      "refine": _roof_phase()},
+        "retraces": 0, "allocs_per_1k": 0.0,
     }
     cell.update(over)
     return cell
@@ -132,6 +133,20 @@ def test_validator_rejects_bad_v4_columns():
         assert validate_bench(_doc([_cell(gain=gain)])) == []
     assert validate_bench(_doc([_cell(roofline={"total": _roof_phase()})])) \
         == []
+
+
+def test_validator_rejects_bad_v5_columns():
+    """Schema v5 columns: the serve engine is a known engine; retraces is
+    an int; retraces/allocs_per_1k are non-negative."""
+    assert validate_bench(_doc([_cell(engine="serve")])) == []
+    assert any("retraces" in e
+               for e in validate_bench(_doc([_cell(retraces=1.5)])))
+    assert any("retraces" in e
+               for e in validate_bench(_doc([_cell(retraces=-1)])))
+    assert any("allocs_per_1k" in e
+               for e in validate_bench(_doc([_cell(allocs_per_1k=-2.0)])))
+    assert any("allocs_per_1k" in e
+               for e in validate_bench(_doc([_cell(allocs_per_1k=math.nan)])))
 
 
 def test_kernel_bench_validator():
@@ -249,10 +264,11 @@ def test_batch_sweep_produces_schema_valid_cells():
     """One real batched-engine grid through the subprocess runner (the CI
     batch-smoke code path): schema-valid cells, recorded throughput columns,
     and the child's dispatch-contract check passing."""
+    stats: dict = {}
     cells, failures = bench.run_batch_sweep(
         graphs=("grid2d_24",), variants=("jet",), k=4, seed=0,
         max_inner=2, coarsen_until=64, schedule="constant",
-        batch_sizes=(1, 2), iters=2, timeout=1200)
+        batch_sizes=(1, 2), iters=2, timeout=1200, stats_out=stats)
     assert not failures, failures
     doc = _doc(cells)
     assert validate_bench(doc) == [], validate_bench(doc)
@@ -263,9 +279,36 @@ def test_batch_sweep_produces_schema_valid_cells():
         assert c["p99_us"] >= c["p50_us"] > 0
         assert c["dispatches"].get("batched", 0) == c["levels"]
         assert c["dispatches"].get("batched_init", 0) == 1
+        # v5: the timed loop runs cache-warm (retraces 0) but the batched
+        # engine still re-pads every level graph per call (allocs > 0) —
+        # the cost the serving buffer pool exists to drop to 0
+        assert c["retraces"] == 0
+        assert c["allocs_per_1k"] > 0
+    # the child reports its end-of-sweep retrace-cache counters
+    assert stats["level"]["misses"] > 0
+    assert {"hits", "misses", "evictions"} <= set(stats["level"])
     # identical graph + seed in every slot → B must not change quality
     assert cells[0]["cut"] == cells[1]["cut"]
     assert cells[0]["imbalance"] == cells[1]["imbalance"]
+
+
+def test_snapshot_contains_second_schedule_column():
+    """Reverse coverage for the v5 second-schedule column: the committed
+    smoke snapshot must carry BOTH the primary (constant) and the
+    --schedule2 (adaptive) grids.  Dropping the schedule2 leg from
+    bench.main's smoke run would silently shrink the snapshot diff —
+    this goes red instead."""
+    with open(SNAPSHOT) as f:
+        snap = json.load(f)
+    cfg = snap["config"]
+    assert cfg.get("schedule2") == "adaptive", cfg
+    schedules = {c["schedule"] for c in snap["cells"]}
+    assert {"constant", "adaptive"} <= schedules, schedules
+    adaptive = [c for c in snap["cells"] if c["schedule"] == "adaptive"]
+    # the second-schedule leg is the full P=1 classic grid over variants
+    assert {c["variant"] for c in adaptive} == set(cfg["variants"])
+    for c in adaptive:
+        assert c["engine"] == "dpartition" and c["p"] == 1, c["variant"]
 
 
 # ---- snapshot regression (benchmarks/snapshots/) --------------------------
@@ -305,6 +348,16 @@ def test_snapshot_regression():
             coarsen_until=cfg["coarsen_until"], timeout=1200,
             schedule=cfg.get("schedule", "constant"))
         assert not failures, failures
+        if cfg.get("schedule2"):
+            # one cell from the second schedule column so the reduced mode
+            # also diffs the v5 adaptive leg, not just the primary schedule
+            extra, failures = bench.run_sweep(
+                ps=(1,), graphs=("grid2d_24",), variants=("jet",),
+                k=cfg["k"], seed=cfg["seed"], max_inner=cfg["max_inner"],
+                coarsen_until=cfg["coarsen_until"], timeout=1200,
+                schedule=cfg["schedule2"])
+            assert not failures, failures
+            fresh = fresh + extra
 
     def key(c):
         # engine+batch+comm+gain are part of the identity: a classic P=4

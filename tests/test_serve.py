@@ -1,0 +1,299 @@
+"""The serving-path contract (repro.serve, tentpole of the request-stream
+scheduler):
+
+  (a) ``partition_stream`` is bit-identical to per-request ``partition``
+      for every registered variant × tolerance schedule (and the
+      pallas-interpret gain backend), with and without the pool's
+      init-winner cache, and under forced buffer donation;
+  (b) the scheduler is deterministic: the flush plan is a pure function of
+      (arrival trace, policy), and the partition results of a stream do
+      not depend on the policy at all;
+  (c) steady state is free: after a warmup replay, a shuffled
+      100-request mixed-size trace completes with ZERO level-program
+      retraces and ZERO fresh pad+upload events (counter-based — the
+      instrumented allocation contract of repro.serve.buffers);
+  (d) the ``seeds=`` boundary check is inherited from the engine
+      (core.multilevel.seed_list), not duplicated;
+  (e) the committed serve snapshot (benchmarks/snapshots/SERVE_smoke.json)
+      is schema-valid, steady-state clean, and shows the scheduler at
+      ≥ 1.5x gmean throughput over the request-at-a-time baseline.
+"""
+
+import json
+import os
+import random
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(ROOT))
+
+from repro.core import partition  # noqa: E402
+from repro.graphs import batch as GB  # noqa: E402
+from repro.graphs.generators import grid2d, rmat  # noqa: E402
+from repro.refine import drivers  # noqa: E402
+from repro.refine.schedule import SCHEDULES  # noqa: E402
+from repro.refine.variants import registered_variants  # noqa: E402
+from repro.serve import (  # noqa: E402
+    BucketScheduler,
+    BufferPool,
+    FlushPolicy,
+    PartitionRequest,
+    bucket_signature,
+    partition_stream,
+)
+
+SERVE_SNAPSHOT = os.path.abspath(os.path.join(
+    ROOT, "benchmarks", "snapshots", "SERVE_smoke.json"))
+
+KW = dict(k=4, max_inner=2, coarsen_until=32)
+
+
+def _labels(r):
+    return np.asarray(r.labels)
+
+
+def _req(g, t_us=0.0, **over):
+    kw = dict(KW)
+    kw.update(over)
+    return PartitionRequest(graph=g, t_us=t_us, **kw)
+
+
+# ---- (a) bit-identity with per-request partition --------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    return grid2d(11, 9)  # ragged 99 ∉ 8Z: padding in every bucket
+
+
+def test_stream_bit_identical_every_variant_and_schedule(tiny):
+    """One mixed-seed stream per (variant, schedule) smoke cell, flushed at
+    B=3, against three per-request partition calls."""
+    bad = []
+    for v in registered_variants():
+        for s in SCHEDULES:
+            reqs = [_req(tiny, t_us=float(i), seed=i, refiner=v, schedule=s)
+                    for i in range(3)]
+            res = partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                                   pool=BufferPool())
+            for r, q in zip(res, reqs):
+                solo = partition(q.graph, refiner=v, schedule=s, seed=q.seed,
+                                 **KW)
+                if not (np.array_equal(_labels(r), _labels(solo))
+                        and r.cut == solo.cut
+                        and r.imbalance == solo.imbalance
+                        and r.level_eps == solo.level_eps):
+                    bad.append((v, s, q.seed))
+    assert not bad, f"stream cells diverging from partition: {bad}"
+
+
+def test_stream_bit_identical_pallas_interpret(tiny):
+    reqs = [_req(tiny, t_us=float(i), seed=i, gain="pallas")
+            for i in range(3)]
+    res = partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                           pool=BufferPool())
+    for r, q in zip(res, reqs):
+        solo = partition(q.graph, gain="pallas", seed=q.seed, **KW)
+        assert np.array_equal(_labels(r), _labels(solo))
+        assert r.cut == solo.cut
+
+
+def test_stream_init_cache_bit_identical(tiny):
+    """The pool's init-winner cache is reuse of a deterministic value, not
+    an approximation: second replay (served from the cache) == first replay
+    (which ran the init program) == a cache-disabled pool's replay."""
+    reqs = [_req(tiny, t_us=float(i), seed=i % 2) for i in range(4)]
+    warm = BufferPool(cache_inits=True)
+    cold = BufferPool(cache_inits=False)
+    first = partition_stream(reqs, pool=warm)
+    again = partition_stream(reqs, pool=warm)   # init_hits > 0 now
+    nocache = partition_stream(reqs, pool=cold)
+    assert warm.init_hits > 0
+    assert cold.init_hits == 0 and cold.stats()["inits"] == 0
+    for a, b, c in zip(first, again, nocache):
+        assert np.array_equal(_labels(a), _labels(b))
+        assert np.array_equal(_labels(a), _labels(c))
+        assert a.cut == b.cut == c.cut
+
+
+def test_stream_bit_identical_forced_donation(tiny, monkeypatch):
+    """FORCE_DONATE pins the donated level programs' bit-identity on CPU
+    (XLA CPU parses donate_argnums and ignores it; results must not
+    change, and the donate=True programs are distinct cache entries)."""
+    reqs = [_req(tiny, t_us=float(i), seed=i) for i in range(3)]
+    want = [partition(q.graph, seed=q.seed, **KW) for q in reqs]
+    monkeypatch.setattr(drivers, "FORCE_DONATE", True)
+    res = partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                           pool=BufferPool())
+    for r, solo in zip(res, want):
+        assert np.array_equal(_labels(r), _labels(solo))
+        assert r.cut == solo.cut
+
+
+# ---- (b) scheduler determinism --------------------------------------------
+
+def test_flush_policy_validation():
+    with pytest.raises(ValueError, match="batch_target"):
+        FlushPolicy(batch_target=0)
+    with pytest.raises(ValueError, match="deadline_us"):
+        FlushPolicy(deadline_us=-1.0)
+
+
+def test_bucket_signature_groups_by_shape_and_config(tiny):
+    other_cfg = _req(tiny, k=8)
+    same_bucket = _req(grid2d(9, 11))  # 99 vertices too -> same bucket
+    other_bucket = _req(grid2d(24, 24))
+    base = _req(tiny)
+    assert bucket_signature(base) == bucket_signature(same_bucket)
+    assert bucket_signature(base) != bucket_signature(other_cfg)
+    assert bucket_signature(base) != bucket_signature(other_bucket)
+    # aliases resolve before grouping: d4xjet IS jet rounds=4
+    assert bucket_signature(_req(tiny, refiner="d4xjet")) == \
+        bucket_signature(_req(tiny, refiner="jet"))
+
+
+def test_scheduler_size_and_drain_flushes(tiny):
+    reqs = [_req(tiny, t_us=float(i * 10), seed=i) for i in range(7)]
+    groups = BucketScheduler(FlushPolicy(batch_target=3)).plan(reqs)
+    flushes = [f for grp in groups for f in grp]
+    assert [f.reason for f in flushes] == ["size", "size", "drain"]
+    assert [f.indices for f in flushes] == [(0, 1, 2), (3, 4, 5), (6,)]
+    assert flushes[0].time_us == 20.0   # arrival that filled the bucket
+    assert flushes[2].time_us == 60.0   # end-of-trace drain
+    # every request served exactly once
+    assert sorted(i for f in flushes for i in f.indices) == list(range(7))
+
+
+def test_scheduler_deadline_flushes(tiny):
+    reqs = [_req(tiny, t_us=t, seed=i)
+            for i, t in enumerate((0.0, 10.0, 500.0))]
+    groups = BucketScheduler(
+        FlushPolicy(batch_target=8, deadline_us=100.0)).plan(reqs)
+    flushes = [f for grp in groups for f in grp]
+    # oldest request (t=0) expires at 100 — before the t=500 arrival —
+    # carrying the t=10 request with it; the last request ages out alone
+    assert [(f.reason, f.time_us, f.indices) for f in flushes] == \
+        [("deadline", 100.0, (0, 1)), ("deadline", 600.0, (2,))]
+
+
+def test_scheduler_plan_is_deterministic_and_result_neutral(tiny):
+    big = grid2d(16, 16)
+    reqs = [_req(tiny if i % 2 else big, t_us=float(i * 5), seed=i % 3)
+            for i in range(9)]
+    sch = BucketScheduler(FlushPolicy(batch_target=4))
+    assert sch.plan(reqs) == sch.plan(list(reqs))  # pure function
+
+    # the policy changes latency, never results
+    res_a = partition_stream(reqs, policy=FlushPolicy(batch_target=4),
+                             pool=BufferPool())
+    res_b = partition_stream(reqs, policy=FlushPolicy(batch_target=2,
+                                                      deadline_us=7.0),
+                             pool=BufferPool())
+    for a, b in zip(res_a, res_b):
+        assert np.array_equal(_labels(a), _labels(b))
+        assert a.cut == b.cut
+
+
+def test_stream_report_flush_log(tiny):
+    reqs = [_req(tiny, t_us=float(i), seed=i) for i in range(5)]
+    res, log = partition_stream(reqs, policy=FlushPolicy(batch_target=4),
+                                pool=BufferPool(), report=True)
+    assert len(res) == 5
+    assert [e["reason"] for e in log] == ["size", "drain"]
+    for e in log:
+        assert {"time_us", "size", "n_bucket", "m_bucket", "level_cache",
+                "pool"} <= set(e)
+        assert e["level_cache"]["misses"] >= 0
+
+
+# ---- (c) steady state: zero retraces, zero fresh allocations --------------
+
+def test_steady_state_zero_retraces_zero_allocs():
+    """After one warmup replay, a SHUFFLED 100-request mixed-size trace is
+    completely served from warm state: no level-program retrace, no fresh
+    pad+upload event (pool slot hits only).  coalesce=False keeps each
+    bucket's flush-size sequence invariant under the shuffle (per-signature
+    request counts don't change, so neither do the compiled batch sizes)."""
+    graphs = [grid2d(11, 9), grid2d(8, 8), rmat(scale=6, edge_factor=4,
+                                                seed=3)]
+    reqs = [_req(graphs[i % 3], t_us=float(i * 4), seed=i % 5)
+            for i in range(100)]
+    pool = BufferPool()
+    policy = FlushPolicy(batch_target=8)
+    warm = partition_stream(reqs, policy=policy, pool=pool, coalesce=False)
+
+    order = random.Random(7).sample(range(100), 100)
+    shuffled = [PartitionRequest(graph=reqs[j].graph, t_us=float(i * 4),
+                                 seed=reqs[j].seed, **KW)
+                for i, j in enumerate(order)]
+    drivers.reset_counters()
+    GB.reset_pad_builds()
+    pool.reset_counters()
+    res = partition_stream(shuffled, policy=policy, pool=pool,
+                           coalesce=False)
+    assert drivers.TRACE_COUNT == 0, dict(drivers.TRACES)
+    assert GB.PAD_BUILD_COUNT == 0
+    assert pool.alloc_count == 0
+    assert pool.plan_misses == 0 and pool.init_misses == 0
+    assert pool.slot_hits > 0 and pool.plan_hits == 100
+    # and the shuffled replay returns the warmup's results, per request
+    for i, j in enumerate(order):
+        assert np.array_equal(_labels(res[i]), _labels(warm[j]))
+
+
+# ---- (d) the seeds= boundary check is inherited ---------------------------
+
+def test_stream_seeds_override_checked_at_boundary(tiny):
+    reqs = [_req(tiny, t_us=float(i)) for i in range(3)]
+    with pytest.raises(ValueError, match="seeds has"):
+        partition_stream(reqs, seeds=[1, 2], pool=BufferPool())
+    with pytest.raises(ValueError, match="iterable"):
+        partition_stream(reqs, seeds=7, pool=BufferPool())
+    res = partition_stream(reqs, seeds=[5, 5, 6], pool=BufferPool())
+    for r, s in zip(res, (5, 5, 6)):
+        solo = partition(tiny, seed=s, **KW)
+        assert np.array_equal(_labels(r), _labels(solo))
+
+
+def test_stream_empty_and_coalesced_aliases(tiny):
+    assert partition_stream([], pool=BufferPool()) == []
+    # duplicate (graph, seed) requests coalesce but each gets its result
+    reqs = [_req(tiny, t_us=float(i), seed=0) for i in range(4)]
+    res = partition_stream(reqs, pool=BufferPool())
+    assert len(res) == 4
+    for r in res[1:]:
+        assert np.array_equal(_labels(r), _labels(res[0]))
+
+
+# ---- (e) the committed serve snapshot -------------------------------------
+
+SERVE_SPEEDUP_FLOOR = 1.5
+
+
+def test_serve_snapshot_gate():
+    """The committed SERVE_smoke.json (and, under SERVE_FRESH, the document
+    the CI serve-smoke job just produced) is schema-valid, steady-state
+    clean (retraces == 0, allocs_per_1k == 0 in every serve cell), and
+    shows >= 1.5x gmean serve-vs-baseline throughput."""
+    from benchmarks.common import validate_bench
+
+    paths = [SERVE_SNAPSHOT]
+    if os.environ.get("SERVE_FRESH"):
+        paths.append(os.environ["SERVE_FRESH"])
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        assert validate_bench(doc) == [], (path, validate_bench(doc))
+        assert doc["smoke"] is True
+        serve_cells = [c for c in doc["cells"] if c["engine"] == "serve"]
+        base_cells = [c for c in doc["cells"] if c["engine"] == "dpartition"]
+        assert serve_cells and base_cells
+        for c in serve_cells:
+            assert c["retraces"] == 0, c
+            assert c["allocs_per_1k"] == 0.0, c
+            assert c["batch"] >= 8
+        s = doc["serve_summary"]
+        assert s["pairs"] == len(serve_cells)
+        assert s["gmean_speedup"] >= SERVE_SPEEDUP_FLOOR, s
