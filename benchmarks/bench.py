@@ -315,9 +315,10 @@ def main(argv=None) -> int:
                          "(repro.refine.schedule; the schedule column of "
                          "BENCH_quality.json)")
     ap.add_argument("--schedule2", default=None,
-                    help="second schedule swept as extra P=ps[0] cells so "
-                         "the snapshot grid covers a second schedule "
-                         "column (default: 'adaptive' in smoke mode, off "
+                    help="comma-separated extra schedules, each swept as "
+                         "extra P=ps[0] cells so the snapshot grid covers "
+                         "the full schedule axis (default: "
+                         "'adaptive,geometric,snap' in smoke mode, off "
                          "otherwise; 'none' disables)")
     ap.add_argument("--batch", type=int, default=0,
                     help="also sweep the batched engine at B in {1, N} "
@@ -350,13 +351,19 @@ def main(argv=None) -> int:
     # diff, so equivalent runs must produce comparable documents
     args.schedule = resolve_schedule(args.schedule).mode
     if args.schedule2 is None and args.smoke:
-        args.schedule2 = "adaptive"
+        args.schedule2 = "adaptive,geometric,snap"
     if args.schedule2 in ("none", ""):
         args.schedule2 = None
+    # canonicalize each extra schedule and drop duplicates (including the
+    # primary): duplicate cells would collide in the snapshot diff
+    extra_schedules: tuple = ()
     if args.schedule2 is not None:
-        args.schedule2 = resolve_schedule(args.schedule2).mode
-        if args.schedule2 == args.schedule:
-            args.schedule2 = None  # duplicate cells would collide in diffs
+        seen = {args.schedule}
+        for s in args.schedule2.split(","):
+            mode = resolve_schedule(s).mode
+            if mode not in seen:
+                seen.add(mode)
+                extra_schedules += (mode,)
     ps = (tuple(int(x) for x in args.ps.split(","))
           if args.ps else (SMOKE_PS if args.smoke else FULL_PS))
     graphs = (tuple(args.graphs.split(","))
@@ -379,13 +386,14 @@ def main(argv=None) -> int:
     extra_ks = (tuple(int(x) for x in args.ks.split(","))
                 if args.ks else ((8, 16) if args.smoke else ()))
     wide_variant = "jet" if "jet" in variants else variants[0]
-    # v5: second schedule column — the same grid under --schedule2 (smoke
-    # default: adaptive) at P=ps[0], so the committed snapshot pins a
-    # second per-level tolerance schedule per (graph, variant) cell
-    if args.schedule2 is not None:
+    # v5: extra schedule columns — the same grid under each --schedule2
+    # entry (smoke default: adaptive,geometric,snap) at P=ps[0], so the
+    # committed snapshot pins every per-level tolerance schedule per
+    # (graph, variant) cell, not just the primary
+    for sched2 in extra_schedules:
         c4, f4 = run_sweep((ps[0],), graphs, variants, args.k, args.seed,
                            max_inner, coarsen_until,
-                           schedule=args.schedule2, hw=args.hw)
+                           schedule=sched2, hw=args.hw)
         cells.extend(c4)
         failures.extend(f4)
     if not args.no_wide:
@@ -425,7 +433,8 @@ def main(argv=None) -> int:
         "config": {"variants": list(variants), "ps": list(ps),
                    "graphs": list(graphs), "k": args.k, "seed": args.seed,
                    "max_inner": max_inner, "coarsen_until": coarsen_until,
-                   "schedule": args.schedule, "schedule2": args.schedule2,
+                   "schedule": args.schedule,
+                   "schedule2": list(extra_schedules),
                    "batch_sizes": list(batch_sizes),
                    "extra_ks": list(extra_ks) if not args.no_wide else [],
                    "hw": args.hw},

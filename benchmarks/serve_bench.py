@@ -4,11 +4,19 @@ Replays deterministic arrival traces (Poisson / burst, virtual-clock
 ``t_us`` stamps from a seeded RNG) through two paths and reports
 end-to-end request latency and throughput for each:
 
-* **serve** — ``repro.serve.partition_stream``: the bucket scheduler
-  flushes size-``--batch`` batches through the multi-bucket runner against
-  a warm :class:`repro.serve.buffers.BufferPool`.  Steady-state cells must
-  report ``retraces == 0`` and ``allocs_per_1k == 0.0`` (the instrumented
-  pool contract) — a violation is a schema-level failure, not a slow run.
+* **serve / front=sync** — ``repro.serve.partition_stream``: the bucket
+  scheduler flushes size-``--batch`` batches through the multi-bucket
+  runner against a warm :class:`repro.serve.buffers.BufferPool`.
+  Steady-state cells must report ``retraces == 0`` and
+  ``allocs_per_1k == 0.0`` (the instrumented pool contract) — a violation
+  is a schema-level failure, not a slow run.
+* **serve / front=async** — the same trace submitted through a
+  replay-mode :class:`repro.serve.service.PartitionService` (ingestion
+  queue + dispatcher thread + futures) against the pool the sync cell
+  warmed: the async front must keep the steady-state contract (zero
+  retraces / zero fresh pad+uploads after warmup — the CI serve-smoke
+  async gate) and its results are checked bit-identical in-run.  Its
+  ``p50_us`` / ``p99_us`` are real submit→resolve wall latencies.
 * **dpartition** — the request-at-a-time baseline: one
   ``repro.core.partition`` call per request on the same trace.
 
@@ -72,11 +80,12 @@ def make_requests(g, t_uss, k, max_inner, coarsen_until, n_seeds: int):
     """The fan-out request pattern: one graph, seeds cycling over
     ``n_seeds`` distinct values (so within-flush coalescing is partial,
     like a real duplicate-heavy stream, not total)."""
+    from repro.core import PartitionConfig
     from repro.serve import PartitionRequest
 
-    return [PartitionRequest(graph=g, k=k, seed=i % n_seeds,
-                             max_inner=max_inner,
-                             coarsen_until=coarsen_until, t_us=t)
+    cfg = PartitionConfig(k=k, max_inner=max_inner,
+                          coarsen_until=coarsen_until)
+    return [PartitionRequest(graph=g, config=cfg, seed=i % n_seeds, t_us=t)
             for i, t in enumerate(t_uss)]
 
 
@@ -96,7 +105,7 @@ def _serial_latencies(events):
 
 def run_serve_cell(gname, g, trace_kind, reqs, batch, hw):
     """Timed steady-state replay of one trace through partition_stream;
-    returns (cell, results)."""
+    returns (cell, results, warm pool)."""
     import numpy as np
 
     from repro.graphs import batch as GB
@@ -142,7 +151,8 @@ def run_serve_cell(gname, g, trace_kind, reqs, batch, hw):
         wall_s, hw=hw)}
     cell = {
         "graph": gname, "variant": "jet", "p": 1, "k": reqs[0].k,
-        "schedule": "constant", "engine": "serve", "batch": batch,
+        "schedule": "constant", "engine": "serve", "front": "sync",
+        "batch": batch,
         "comm": "single", "gain": "jnp",
         "n": int(g.n), "m": int(g.m),
         "cut": float(res[0].cut), "imbalance": float(res[0].imbalance),
@@ -160,6 +170,65 @@ def run_serve_cell(gname, g, trace_kind, reqs, batch, hw):
         "trace": trace_kind,
         "pool": pool.stats(),
     }
+    return cell, res, pool
+
+
+def run_service_cell(gname, g, trace_kind, reqs, batch, hw, pool):
+    """The async front on the same trace: submit everything through a
+    replay-mode PartitionService against the pool the sync cell warmed,
+    drain, and report real submit→resolve wall latencies.  Steady state is
+    inherited — the dispatcher feeds the identical flush rule — so the
+    zero-retrace / zero-alloc gate applies to this cell too."""
+    import numpy as np
+
+    from repro.graphs import batch as GB
+    from repro.refine import drivers
+    from repro.roofline import partition_phase_model, phase_roofline
+    from repro.serve import FlushPolicy, PartitionService
+
+    drivers.reset_counters()
+    GB.reset_pad_builds()
+    pool.reset_counters()
+    t_total0 = time.perf_counter()
+    with PartitionService(policy=FlushPolicy(batch_target=batch), pool=pool,
+                          mode="replay") as svc:
+        t_subs, futs = [], []
+        for r in reqs:
+            t_subs.append(svc.now_us())
+            futs.append(svc.submit_request(r))
+    res = [f.result(timeout=600) for f in futs]
+    wall_s = time.perf_counter() - t_total0
+    lats = [f.t_done_us - t for f, t in zip(futs, t_subs)]
+
+    model = partition_phase_model(int(g.n), int(g.m), reqs[0].k,
+                                  int(res[0].levels),
+                                  rounds=reqs[0].max_inner)
+    roof = {"total": phase_roofline(
+        len(reqs) * sum(t["flops"] for t in model.values()),
+        len(reqs) * sum(t["bytes"] for t in model.values()),
+        wall_s, hw=hw)}
+    cell = {
+        "graph": gname, "variant": "jet", "p": 1, "k": reqs[0].k,
+        "schedule": "constant", "engine": "serve", "front": "async",
+        "batch": batch,
+        "comm": "single", "gain": "jnp",
+        "n": int(g.n), "m": int(g.m),
+        "cut": float(res[0].cut), "imbalance": float(res[0].imbalance),
+        "levels": int(res[0].levels),
+        "coarsen_us": 0.0, "init_us": 0.0, "refine_us": 0.0,
+        "total_us": wall_s * 1e6,
+        "graphs_per_sec": len(reqs) / wall_s if wall_s > 0 else 0.0,
+        "p50_us": float(np.percentile(lats, 50)),
+        "p99_us": float(np.percentile(lats, 99)),
+        "dispatch_count": int(drivers.DISPATCH_COUNT),
+        "dispatches": dict(drivers.DISPATCHES),
+        "roofline": roof,
+        "retraces": int(drivers.TRACE_COUNT),
+        "allocs_per_1k": 1000.0 * GB.PAD_BUILD_COUNT / len(reqs),
+        "trace": trace_kind,
+        "pool": pool.stats(),
+        "service": {kk: v for kk, v in svc.stats().items() if kk != "pool"},
+    }
     return cell, res
 
 
@@ -172,17 +241,16 @@ def run_baseline_cell(gname, g, trace_kind, reqs, hw):
     from repro.refine import drivers
     from repro.roofline import partition_phase_model, phase_roofline
 
-    kw = dict(k=reqs[0].k, max_inner=reqs[0].max_inner,
-              coarsen_until=reqs[0].coarsen_until)
+    cfg = reqs[0].config
     for s in sorted({r.seed for r in reqs}):
-        partition(g, seed=s, **kw)  # warmup: compile per seed-independent path
+        partition(g, seed=s, config=cfg)  # warmup: compile once per path
 
     drivers.reset_counters()
     events, res = [], []
     t_total0 = time.perf_counter()
     for r in reqs:
         t0 = time.perf_counter()
-        res.append(partition(g, seed=r.seed, **kw))
+        res.append(partition(g, seed=r.seed, config=cfg))
         events.append(((r.t_us, (time.perf_counter() - t0) * 1e6, [r.t_us])))
     wall_s = time.perf_counter() - t_total0
 
@@ -217,13 +285,16 @@ def run_baseline_cell(gname, g, trace_kind, reqs, hw):
 
 
 def serve_summary(cells):
-    """gmean serve-vs-baseline throughput speedup over the (graph, trace)
-    cell pairs both engines completed — the snapshot-gated headline."""
+    """gmean serve-vs-baseline throughput speedup over the
+    (graph, trace, front) cells the baseline also completed — both serving
+    fronts (sync replay + async service) are held to the snapshot-gated
+    headline floor."""
     from benchmarks.common import gmean
 
     base = {(c["graph"], c["trace"]): c["graphs_per_sec"]
             for c in cells if c["engine"] == "dpartition"}
-    ratios = {f"{g}/{t}": c["graphs_per_sec"] / max(base[(g, t)], 1e-9)
+    ratios = {f"{g}/{t}/{c.get('front', 'sync')}":
+              c["graphs_per_sec"] / max(base[(g, t)], 1e-9)
               for c in cells if c["engine"] == "serve"
               for g, t in [(c["graph"], c["trace"])] if (g, t) in base}
     if not ratios:
@@ -286,24 +357,30 @@ def main(argv=None) -> int:
                                 args.trace_seed)
             reqs = make_requests(g, t_uss, args.k, max_inner,
                                  coarsen_until, args.seeds)
-            scell, sres = run_serve_cell(gname, g, trace_kind, reqs,
-                                         args.batch, args.hw)
+            scell, sres, pool = run_serve_cell(gname, g, trace_kind, reqs,
+                                               args.batch, args.hw)
+            acell, ares = run_service_cell(gname, g, trace_kind, reqs,
+                                           args.batch, args.hw, pool)
             bcell, bres = run_baseline_cell(gname, g, trace_kind, reqs,
                                             args.hw)
-            # the serving path must be bit-identical to request-at-a-time
-            for a, b in zip(sres, bres):
-                if not (np.array_equal(np.asarray(a.labels),
-                                       np.asarray(b.labels))
-                        and a.cut == b.cut):
-                    print(f"BIT-IDENTITY VIOLATION: {gname}/{trace_kind}",
-                          file=sys.stderr)
-                    return 2
-            cells.extend([scell, bcell])
+            # both serving fronts must be bit-identical to request-at-a-time
+            for front, fres in (("sync", sres), ("async", ares)):
+                for a, b in zip(fres, bres):
+                    if not (np.array_equal(np.asarray(a.labels),
+                                           np.asarray(b.labels))
+                            and a.cut == b.cut):
+                        print(f"BIT-IDENTITY VIOLATION ({front}): "
+                              f"{gname}/{trace_kind}", file=sys.stderr)
+                        return 2
+            cells.extend([scell, acell, bcell])
             print(f"  {gname:10s} {trace_kind:8s} "
                   f"serve g/s={scell['graphs_per_sec']:8.2f} "
                   f"p50={scell['p50_us']:8.0f}us "
                   f"retraces={scell['retraces']} "
                   f"allocs/1k={scell['allocs_per_1k']:.1f} | "
+                  f"async g/s={acell['graphs_per_sec']:8.2f} "
+                  f"p50={acell['p50_us']:8.0f}us "
+                  f"retraces={acell['retraces']} | "
                   f"solo g/s={bcell['graphs_per_sec']:8.2f} "
                   f"p50={bcell['p50_us']:8.0f}us", flush=True)
 

@@ -7,11 +7,13 @@
 # one-dispatch-per-level-per-batch contract per cell — plus the
 # B=1-equivalence / batch-invariance suite and the bench-harness tests.
 #
-# --serve: the request-stream scheduler preflight (CI's serve-smoke leg):
+# --serve: the request-stream serving preflight (CI's serve-smoke leg):
 # the serve smoke bench — serve_bench.py checks bit-identity vs the
-# per-request baseline, the steady-state zero-retrace / zero-alloc
-# contract and the schema per cell — plus the serve test suite
-# (scheduler determinism, buffer-pool counters, stream bit-identity).
+# per-request baseline for BOTH fronts (sync partition_stream and the
+# async PartitionService in replay mode), the steady-state zero-retrace /
+# zero-alloc contract and the schema per cell — plus the serving test
+# suite (scheduler determinism, buffer-pool counters, stream bit-identity,
+# PartitionConfig facade identity, service lifecycle/degradation).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,7 +37,8 @@ if [[ "${1:-}" == "--serve" ]]; then
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/serve_bench.py --smoke \
     --out "${SERVE_BENCH_OUT:-/tmp/SERVE_smoke.json}"
-  python -m pytest -x -q tests/test_serve.py tests/test_bench.py
+  python -m pytest -x -q tests/test_serve.py tests/test_service.py \
+    tests/test_config.py tests/test_bench.py
   echo "check.sh --serve: all green"
   exit 0
 fi

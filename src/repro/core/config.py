@@ -1,0 +1,144 @@
+"""The ONE partitioning configuration object (`PartitionConfig`).
+
+Every entry point — ``partition`` / ``dpartition`` / ``partition_batch`` /
+``partition_stream`` — historically duplicated the same ~dozen keyword
+arguments (``k, eps, refiner, schedule, eps_coarse, gain, patience,
+max_inner, coarsen_until``), and the serving layer re-assembled them into
+hand-built cache keys in three places (the scheduler's bucket signature,
+the buffer pool's plan key, the retrace-cache statics).  This module makes
+the configuration a single frozen dataclass:
+
+* the loose kwargs remain as a **thin facade** on every entry point
+  (``partition(g, k=8, refiner="jet")`` still works, bit-identical to the
+  config form — pinned in tests/test_config.py); explicitly-passed loose
+  kwargs override the corresponding ``config=`` field, so a config object
+  doubles as a template;
+* validation happens ONCE, eagerly, at construction: unknown refiners /
+  schedules / gain backends raise the same registry-listing ``ValueError``
+  style as ``resolve_variant`` (the API-boundary fail-fast contract);
+* every derived key is a method — :meth:`PartitionConfig.cache_key` is the
+  canonical compile-relevant tuple the scheduler's ``bucket_signature``
+  appends to the padded graph shape, and :meth:`PartitionConfig.plan_key`
+  is the coarsening/init-chain subset the buffer pool keys its plan and
+  init-winner caches on.  Equal configs (including alias spellings:
+  ``refiner="d4xjet"`` IS ``refiner="jet"`` at 4 rounds,
+  ``schedule="unconstrained-then-snap"`` IS ``"snap"``) produce equal
+  keys, so a request stream mixing spellings lands in one bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.refine.schedule import ToleranceSchedule, resolve_schedule
+from repro.refine.variants import Variant, resolve_variant
+
+# gain= names accepted at the API boundary ("auto" = pallas-if-it-fits,
+# resolved per graph by refine.gain.resolve_gain)
+GAIN_BACKENDS = ("jnp", "pallas", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Frozen bundle of every static partitioning knob.
+
+    ``seed`` is deliberately NOT a field: it is per-request identity (the
+    key chain), not configuration — two requests with different seeds
+    share every compiled program and cache bucket.  Execution options
+    (``trace_levels``, ``timing``, distributed placement like ``P`` /
+    ``halo``) stay loose kwargs for the same reason.
+    """
+
+    k: int = 4
+    eps: float = 0.03
+    refiner: str = "d4xjet"
+    schedule: str | ToleranceSchedule = "constant"
+    eps_coarse: float | None = None
+    gain: str = "jnp"
+    patience: int = 12
+    max_inner: int = 64
+    coarsen_until: int | None = None
+
+    def __post_init__(self):
+        # registry-listing ValueErrors at construction time — a typo fails
+        # here, never deep inside driver selection or a dispatcher thread
+        resolve_variant(self.refiner)
+        resolve_schedule(self.schedule, self.eps_coarse)
+        if self.gain not in GAIN_BACKENDS:
+            raise ValueError(
+                f"unknown gain backend {self.gain!r}: known backends are "
+                f"{list(GAIN_BACKENDS)}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.eps < 0:
+            raise ValueError(f"eps must be >= 0, got {self.eps}")
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if self.max_inner < 1:
+            raise ValueError(f"max_inner must be >= 1, got {self.max_inner}")
+
+    # ---- resolved views ------------------------------------------------
+    def variant(self) -> Variant:
+        """The registered refinement variant (aliases resolved)."""
+        return resolve_variant(self.refiner)
+
+    def tolerance_schedule(self) -> ToleranceSchedule:
+        """The resolved per-level tolerance schedule (an explicit
+        ``eps_coarse`` overrides an already-built schedule's field — the
+        API-level contract of ``resolve_schedule``)."""
+        return resolve_schedule(self.schedule, self.eps_coarse)
+
+    # ---- derived keys --------------------------------------------------
+    def cache_key(self) -> tuple:
+        """The canonical compile-relevant tuple: every static field of the
+        compiled level programs, with refiner/schedule in RESOLVED form so
+        alias spellings collapse to one key.  The scheduler's
+        ``bucket_signature`` is the padded graph shape plus this tuple;
+        two requests with equal cache keys are guaranteed to share the
+        engine's bucketed retrace-cache entries when flushed together."""
+        var = self.variant()
+        return (self.k, self.eps, var.name, var.rounds,
+                self.tolerance_schedule(), self.gain, self.patience,
+                self.max_inner, self.coarsen_until)
+
+    def plan_key(self) -> tuple:
+        """The coarsening/init-chain subset of :meth:`cache_key` — every
+        field ``plan_request`` and the initial-partition restart chain
+        depend on.  The buffer pool keys its plan and init-winner caches
+        on ``(id(graph), seed) + config.plan_key()`` (gain/variant are
+        NOT in it: initial partitioning always runs the jet/jnp reference
+        chain, see ``drivers._batched_init_fn``)."""
+        return (self.k, self.eps, self.tolerance_schedule(),
+                self.coarsen_until)
+
+    def replace(self, **changes) -> "PartitionConfig":
+        """``dataclasses.replace`` convenience (revalidates eagerly)."""
+        return dataclasses.replace(self, **changes)
+
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(PartitionConfig))
+
+
+def resolve_config(config: PartitionConfig | None = None,
+                   where: str = "PartitionConfig",
+                   **overrides) -> PartitionConfig:
+    """Merge loose keyword overrides over a base ``config`` — the facade
+    every entry point routes through.
+
+    ``None``-valued overrides mean "not passed" and keep the base field
+    (all facade kwargs default to ``None``); unknown setting names raise
+    the registry-listing ``ValueError`` style of ``resolve_variant``.
+    Returns the base object itself when nothing overrides it, so
+    ``config=`` callers pay no re-validation."""
+    unknown = sorted(set(overrides) - set(_FIELDS))
+    if unknown:
+        raise ValueError(
+            f"{where}: unknown config settings {unknown}: known settings "
+            f"are {list(_FIELDS)}")
+    if config is not None and not isinstance(config, PartitionConfig):
+        raise ValueError(
+            f"{where}: config= must be a PartitionConfig, "
+            f"got {type(config).__name__}")
+    base = config if config is not None else PartitionConfig()
+    changes = {kk: v for kk, v in overrides.items() if v is not None}
+    return dataclasses.replace(base, **changes) if changes else base

@@ -20,16 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coarsen as C
+from repro.core.config import PartitionConfig, resolve_config
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance
 from repro.core.refine import jet_refine, lp_refine_level
 from repro.refine.drivers import level_tolerances
-from repro.refine.schedule import (
-    ToleranceSchedule,
-    resolve_schedule,
-    weight_frac,
-)
+from repro.refine.schedule import ToleranceSchedule, weight_frac
 
 
 def _level_w_fracs(sched, ordered_nws):
@@ -39,7 +36,7 @@ def _level_w_fracs(sched, ordered_nws):
     if sched.mode != "adaptive":
         return None
     return tuple(weight_frac(nw) for nw in ordered_nws)
-from repro.refine.variants import Variant, resolve_variant
+from repro.refine.variants import Variant
 
 Refiner = str  # a registered variant or alias name — see repro.refine.variants
 
@@ -76,19 +73,25 @@ def _refine(g: Graph, labels, k, eps, key, var: Variant, patience: int,
 
 def partition(
     g: Graph,
-    k: int,
-    eps: float = 0.03,
+    k: int | None = None,
+    eps: float | None = None,
     seed: int = 0,
-    refiner: Refiner = "d4xjet",
+    refiner: Refiner | None = None,
     coarsen_until: int | None = None,
-    patience: int = 12,
-    max_inner: int = 64,
-    gain: str = "jnp",
-    schedule: str | ToleranceSchedule = "constant",
+    patience: int | None = None,
+    max_inner: int | None = None,
+    gain: str | None = None,
+    schedule: str | ToleranceSchedule | None = None,
     eps_coarse: float | None = None,
     trace_levels: bool = False,
+    config: PartitionConfig | None = None,
 ) -> PartitionResult:
     """Full multilevel partition of ``g`` into ``k`` blocks.
+
+    All static knobs live in one frozen :class:`PartitionConfig`
+    (``repro.core.config``); pass one via ``config=`` or use the loose
+    kwargs — a thin facade that overrides the corresponding config fields
+    and is bit-identical to the config form (tests/test_config.py).
 
     ``refiner`` names a registered refinement variant (see module
     docstring; unknown names raise ``ValueError`` listing the registry).
@@ -100,8 +103,14 @@ def partition(
     ``trace_levels=True`` records per-level imbalance after each level's
     refinement in ``PartitionResult.level_trace`` (adds one host sync per
     level — the property suite's hook)."""
-    var = resolve_variant(refiner)
-    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
+    cfg = resolve_config(config, where="partition", k=k, eps=eps,
+                         refiner=refiner, schedule=schedule,
+                         eps_coarse=eps_coarse, gain=gain, patience=patience,
+                         max_inner=max_inner, coarsen_until=coarsen_until)
+    var, sched = cfg.variant(), cfg.tolerance_schedule()
+    k, eps, gain = cfg.k, cfg.eps, cfg.gain
+    patience, max_inner = cfg.patience, cfg.max_inner
+    coarsen_until = cfg.coarsen_until
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
 
@@ -350,19 +359,20 @@ def finalize_result(s: dict, k: int, trace_levels: bool) -> PartitionResult:
 
 def partition_batch(
     graphs,
-    k: int,
-    eps: float = 0.03,
+    k: int | None = None,
+    eps: float | None = None,
     seed: int = 0,
-    refiner: Refiner = "d4xjet",
+    refiner: Refiner | None = None,
     coarsen_until: int | None = None,
-    patience: int = 12,
-    max_inner: int = 64,
-    gain: str = "jnp",
-    schedule: str | ToleranceSchedule = "constant",
+    patience: int | None = None,
+    max_inner: int | None = None,
+    gain: str | None = None,
+    schedule: str | ToleranceSchedule | None = None,
     eps_coarse: float | None = None,
     trace_levels: bool = False,
     seeds=None,
     coalesce: bool = True,
+    config: PartitionConfig | None = None,
 ) -> list[PartitionResult]:
     """Partition B graphs at once through the request-batched engine.
 
@@ -392,8 +402,14 @@ def partition_batch(
     """
     from repro.core.refine import temperature_schedule
 
-    var = resolve_variant(refiner)
-    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
+    cfg = resolve_config(config, where="partition_batch", k=k, eps=eps,
+                         refiner=refiner, schedule=schedule,
+                         eps_coarse=eps_coarse, gain=gain, patience=patience,
+                         max_inner=max_inner, coarsen_until=coarsen_until)
+    var, sched = cfg.variant(), cfg.tolerance_schedule()
+    k, eps, gain = cfg.k, cfg.eps, cfg.gain
+    patience, max_inner = cfg.patience, cfg.max_inner
+    coarsen_until = cfg.coarsen_until
     graphs = list(graphs)
     seeds = seed_list(graphs, seeds, seed)  # API-boundary check, even for []
     if not graphs:

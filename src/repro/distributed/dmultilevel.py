@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coarsen as C
+from repro.core.config import PartitionConfig, resolve_config
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.multilevel import level_trace_entry
@@ -56,8 +57,8 @@ from repro.refine.drivers import (
     make_refine_level_sharded,
 )
 from repro.core.multilevel import _level_w_fracs
-from repro.refine.schedule import ToleranceSchedule, resolve_schedule
-from repro.refine.variants import Variant, resolve_variant
+from repro.refine.schedule import ToleranceSchedule
+from repro.refine.variants import Variant
 from repro.sharding.compat import make_mesh
 
 
@@ -300,28 +301,35 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
 
 def dpartition(
     g: Graph,
-    k: int,
+    k: int | None = None,
     P: int | None = None,
-    eps: float = 0.03,
+    eps: float | None = None,
     seed: int = 0,
-    refiner: str = "d4xjet",
+    refiner: str | None = None,
     coarsen: str | None = "sharded",
     coarsen_until: int | None = None,
-    patience: int = 12,
-    max_inner: int = 64,
+    patience: int | None = None,
+    max_inner: int | None = None,
     halo: bool = False,
-    gain: str = "jnp",
+    gain: str | None = None,
     halo_uniform: str = "global",
     timing: bool = False,
-    schedule: str | ToleranceSchedule = "constant",
+    schedule: str | ToleranceSchedule | None = None,
     eps_coarse: float | None = None,
     trace_levels: bool = False,
+    config: PartitionConfig | None = None,
 ) -> DPartitionResult:
     """Distributed multilevel partition; ``halo=True`` composes with either
     coarsening path (the halo layout is derived per level from the sharded
-    level itself under ``coarsen="sharded"``).  ``refiner`` names a
-    registered refinement variant (``repro.refine.variants``; unknown names
-    raise ``ValueError`` listing the registry).  ``halo_uniform`` picks the
+    level itself under ``coarsen="sharded"``).  Static partitioning knobs
+    live in one frozen :class:`PartitionConfig` (``config=``); the loose
+    kwargs are the bit-identical thin facade over it, while placement /
+    execution options (``P``, ``coarsen``, ``halo``, ``halo_uniform``,
+    ``timing``, ``trace_levels``) stay loose — they describe *where and
+    how* this call runs, not *what* partition it computes.  ``refiner``
+    names a registered refinement variant (``repro.refine.variants``;
+    unknown names raise ``ValueError`` listing the registry).
+    ``halo_uniform`` picks the
     halo rebalance stream: ``"global"`` (default, the cross-backend
     determinism contract) or ``"fold"`` (O(n_local) memory for scale runs;
     P-invariant but its own stream — see DESIGN.md §2).  ``timing=True``
@@ -338,8 +346,14 @@ def dpartition(
     records per-level {n, eps, imbalance} in
     ``DPartitionResult.level_trace`` (one host sync per level — the
     property suite's hook)."""
-    var = resolve_variant(refiner)
-    sched = resolve_schedule(schedule, eps_coarse)  # fail fast on a typo
+    cfg = resolve_config(config, where="dpartition", k=k, eps=eps,
+                         refiner=refiner, schedule=schedule,
+                         eps_coarse=eps_coarse, gain=gain, patience=patience,
+                         max_inner=max_inner, coarsen_until=coarsen_until)
+    var, sched = cfg.variant(), cfg.tolerance_schedule()
+    k, eps, gain = cfg.k, cfg.eps, cfg.gain
+    patience, max_inner = cfg.patience, cfg.max_inner
+    coarsen_until = cfg.coarsen_until
     if coarsen is None:
         coarsen = "sharded"  # old auto default; halo no longer forces "host"
     if coarsen not in ("sharded", "host"):

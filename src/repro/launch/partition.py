@@ -8,7 +8,7 @@ import argparse
 import json
 import time
 
-from repro.core import partition
+from repro.core import PartitionConfig, partition
 from repro.graphs import BENCHMARK_SET, generate
 from repro.refine.schedule import SCHEDULE_ALIASES, SCHEDULES, resolve_schedule
 from repro.refine.variants import ALIASES, registered_variants
@@ -48,6 +48,15 @@ def main():
     ap.add_argument("--serve-deadline-us", type=float, default=None,
                     help="oldest-request flush deadline in virtual "
                          "microseconds (default: size-only flushing)")
+    ap.add_argument("--serve-mode", default="stream",
+                    choices=("stream", "replay", "wallclock"),
+                    help="front for --serve-trace: 'stream' is the "
+                         "synchronous batch replay (partition_stream); "
+                         "'replay' submits the trace to the async "
+                         "PartitionService under the virtual clock "
+                         "(bit-identical to stream); 'wallclock' paces "
+                         "submissions in real time and enforces "
+                         "--serve-deadline-us against monotonic time")
     args = ap.parse_args()
     if sum(map(bool, (args.batch, args.distributed,
                       args.serve_trace))) > 1:
@@ -57,15 +66,17 @@ def main():
     # echoed in the output JSON, where it keys cross-run comparisons
     args.schedule = resolve_schedule(args.schedule).mode
 
-    if args.serve_trace:
-        import dataclasses
+    cfg = PartitionConfig(k=args.k, eps=args.eps, refiner=args.refiner,
+                          schedule=args.schedule, eps_coarse=args.eps_coarse)
 
+    if args.serve_trace:
         import numpy as np
 
         from repro.serve import (
             BufferPool,
             FlushPolicy,
             PartitionRequest,
+            PartitionService,
             partition_stream,
         )
 
@@ -85,37 +96,50 @@ def main():
         t_uss = np.cumsum(gaps)
 
         g = generate(args.graph)
-        proto = PartitionRequest(g, k=args.k, eps=args.eps,
-                                 refiner=args.refiner,
-                                 schedule=args.schedule,
-                                 eps_coarse=args.eps_coarse)
-        reqs = [dataclasses.replace(proto, seed=i % 8, t_us=float(t))
+        reqs = [PartitionRequest(g, config=cfg, seed=i % 8, t_us=float(t))
                 for i, t in enumerate(t_uss)]
         policy = FlushPolicy(batch_target=args.serve_batch,
                              deadline_us=args.serve_deadline_us)
         pool = BufferPool()
         t0 = time.time()
-        results, log = partition_stream(reqs, policy=policy, pool=pool,
-                                        report=True)
-        sec = time.time() - t0
+        if args.serve_mode == "stream":
+            results, log = partition_stream(reqs, policy=policy, pool=pool,
+                                            report=True)
+            sec = time.time() - t0
+            reasons: dict = {}
+            for fl in log:
+                reasons[fl["reason"]] = reasons.get(fl["reason"], 0) + 1
+            extra = dict(flushes=len(log), flush_reasons=reasons)
+        else:
+            with PartitionService(policy=policy, pool=pool,
+                                  mode=args.serve_mode) as svc:
+                if args.serve_mode == "wallclock":
+                    futs, prev = [], 0.0
+                    for r in reqs:  # pace arrivals against the real clock
+                        time.sleep(max(0.0, (r.t_us - prev) / 1e6))
+                        prev = r.t_us
+                        futs.append(svc.submit(r.graph, config=r.config,
+                                               seed=r.seed))
+                else:
+                    futs = [svc.submit_request(r) for r in reqs]
+                results = [f.result() for f in futs]
+            sec = time.time() - t0
+            stats = svc.stats()
+            stats.pop("pool", None)  # printed separately below
+            extra = dict(service=stats)
         res = results[0]
-        reasons: dict = {}
-        for fl in log:
-            reasons[fl["reason"]] = reasons.get(fl["reason"], 0) + 1
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
-                   trace=kind, requests=n_req, flushes=len(log),
-                   flush_reasons=reasons, serve_batch=args.serve_batch,
+                   trace=kind, front=args.serve_mode, requests=n_req,
+                   serve_batch=args.serve_batch,
                    pool=pool.stats(), sec=round(sec, 2),
-                   graphs_per_sec=round(n_req / sec, 3))
+                   graphs_per_sec=round(n_req / sec, 3), **extra)
     elif args.batch:
         from repro.core import partition_batch
 
         g = generate(args.graph)
         t0 = time.time()
-        results = partition_batch([g] * args.batch, k=args.k, eps=args.eps,
-                                  seed=args.seed, refiner=args.refiner,
-                                  schedule=args.schedule,
-                                  eps_coarse=args.eps_coarse)
+        results = partition_batch([g] * args.batch, seed=args.seed,
+                                  config=cfg)
         sec = time.time() - t0
         res = results[0]  # identical graphs + one seed → identical slots
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
@@ -131,17 +155,14 @@ def main():
 
         g = generate(args.graph)
         t0 = time.time()
-        res = dpartition(g, k=args.k, P=args.distributed, eps=args.eps,
-                         seed=args.seed, refiner=args.refiner, halo=args.halo,
-                         schedule=args.schedule, eps_coarse=args.eps_coarse)
+        res = dpartition(g, P=args.distributed, seed=args.seed,
+                         halo=args.halo, config=cfg)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    P=res.P, sec=round(time.time() - t0, 2))
     else:
         g = generate(args.graph)
         t0 = time.time()
-        res = partition(g, k=args.k, eps=args.eps, seed=args.seed,
-                        refiner=args.refiner, schedule=args.schedule,
-                        eps_coarse=args.eps_coarse)
+        res = partition(g, seed=args.seed, config=cfg)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    sec=round(time.time() - t0, 2))
     out.update(graph=args.graph, n=g.n, m=g.m, k=args.k,

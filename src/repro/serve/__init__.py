@@ -2,11 +2,17 @@
 
 Turns the request-batched engine (``repro.core.partition_batch``) into a
 serving pipeline: a deterministic bucket scheduler groups arriving
-requests into per-bucket flushes (``scheduler``), a cross-call buffer pool
-makes steady-state flushes retrace-free and upload-free (``buffers``), and
-a multi-bucket runner enqueues simultaneous flushes back-to-back without
-host round-trips (``runner``).  ``partition_stream`` is the synchronous
-facade — bit-identical to per-request ``partition``.
+requests into per-bucket flushes (``scheduler`` — one incremental flush
+rule shared by replay and live serving), a cross-call buffer pool makes
+steady-state flushes retrace-free and upload-free with LRU evict/spill
+when the working set overflows (``buffers``), and a multi-bucket runner
+enqueues simultaneous flushes back-to-back without host round-trips
+(``runner``).  Two fronts sit on top: ``partition_stream``, the
+synchronous replay facade, and ``PartitionService`` (``service``), the
+async front — futures per request, wall-clock deadlines, admission
+control with solo-dispatch degradation.  Both are bit-identical to
+per-request ``partition``; requests carry one frozen
+``repro.core.PartitionConfig``.
 """
 
 from repro.serve.buffers import BufferPool, default_pool  # noqa: F401
@@ -16,5 +22,13 @@ from repro.serve.scheduler import (  # noqa: F401
     Flush,
     FlushPolicy,
     PartitionRequest,
+    SchedulerState,
     bucket_signature,
+    group_flushes,
+)
+from repro.serve.service import (  # noqa: F401
+    CancelledError,
+    PartitionFuture,
+    PartitionService,
+    ServiceClosed,
 )

@@ -6,9 +6,10 @@ caches the two host-side products that dominate steady-state cost:
 
 * **plans** — :func:`repro.core.multilevel.plan_request` output (the host
   coarsening hierarchy + key chain + tolerance ladder) keyed by
-  ``(id(graph), seed, k, eps, schedule, coarsen_until)``.  Coarsening is
-  deterministic, so a cached plan IS the recomputed plan; a hit skips the
-  whole host coarsening loop.
+  ``(id(graph), seed) + config.plan_key()`` (the coarsening/init-relevant
+  subset of :class:`repro.core.config.PartitionConfig` — one derivation,
+  not a hand-assembled tuple).  Coarsening is deterministic, so a cached
+  plan IS the recomputed plan; a hit skips the whole host coarsening loop.
 * **init winners** — the coarsest-level initial-partition labels, keyed by
   the SAME plan key.  The init winner is a pure function of
   (graph, seed, k, eps): the restart chain splits keys from the plan's
@@ -31,6 +32,14 @@ to its graph and verifies ``entry.graph is graph`` on lookup — a recycled
 id cannot alias a live entry, and a dead entry for the same id is simply
 replaced.  Both caches are LRU (insertion-ordered dict, move-to-end on
 hit) so a long-running server with churning graphs stays bounded.
+
+**Overflow policy (never OOM):** when the working set exceeds a cache
+bound the LRU tail is *evicted* — the graph stays valid, only its padded
+device buffers are released — and re-serving it later is a counted re-pad
+(``spill_count``: a slot miss whose key was evicted earlier, i.e. the
+working set is thrashing the pool rather than arriving cold).  The async
+service's admission layer reads these counters to degrade gracefully
+instead of growing device memory without bound (DESIGN.md §2).
 """
 
 from __future__ import annotations
@@ -63,6 +72,10 @@ class BufferPool:
         self._plans: OrderedDict[tuple, tuple] = OrderedDict()
         self._inits: OrderedDict[tuple, tuple] = OrderedDict()
         self._slots: OrderedDict[tuple, tuple] = OrderedDict()
+        # keys of evicted slots (bounded LRU of bare tuples — no graph
+        # refs) so a re-pad of previously-cached work is told apart from a
+        # cold first build: the spill signal admission control watches
+        self._spilled: OrderedDict[tuple, None] = OrderedDict()
         # (flush signature, rung) -> (n_bucket, m_bucket) high-water mark
         self._rung_marks: dict[tuple, tuple] = {}
         self.reset_counters()
@@ -77,6 +90,7 @@ class BufferPool:
         self.init_misses = 0
         self.slot_hits = 0
         self.evictions = 0
+        self.spill_count = 0  # slot misses whose key was evicted earlier
 
     def stats(self) -> dict:
         return {"alloc_count": self.alloc_count,
@@ -86,6 +100,7 @@ class BufferPool:
                 "init_misses": self.init_misses,
                 "slot_hits": self.slot_hits,
                 "evictions": self.evictions,
+                "spill_count": self.spill_count,
                 "plans": len(self._plans),
                 "inits": len(self._inits),
                 "slots": len(self._slots)}
@@ -95,6 +110,7 @@ class BufferPool:
         self._plans.clear()
         self._inits.clear()
         self._slots.clear()
+        self._spilled.clear()
         self._rung_marks.clear()
         self.reset_counters()
 
@@ -118,27 +134,28 @@ class BufferPool:
         return n_bucket, m_bucket
 
     @staticmethod
-    def plan_key(g, seed: int, k: int, sched, eps: float,
-                 coarsen_until: int | None) -> tuple:
-        """The request-signature key shared by the plan and init caches —
-        every field the coarsening hierarchy and the init restart chain
-        depend on (gain/variant are NOT in it: initial partitioning always
-        runs the jet/jnp reference chain, see ``drivers._batched_init_fn``)."""
-        return (id(g), seed, k, eps, sched, coarsen_until)
+    def plan_key(g, seed: int, config) -> tuple:
+        """The request-signature key shared by the plan and init caches:
+        per-request identity (graph object, seed) plus
+        ``config.plan_key()`` — the coarsening/init-relevant subset of
+        :class:`repro.core.config.PartitionConfig` (gain/variant are NOT
+        in it: initial partitioning always runs the jet/jnp reference
+        chain, see ``drivers._batched_init_fn``)."""
+        return (id(g), seed) + config.plan_key()
 
     # ---- plan cache ----------------------------------------------------
-    def plan(self, g, seed: int, k: int, sched, eps: float,
-             coarsen_until: int | None) -> dict:
+    def plan(self, g, seed: int, config) -> dict:
         """Cached :func:`plan_request` (immutable — callers layer mutable
         execution state on top via ``exec_state``)."""
-        key = self.plan_key(g, seed, k, sched, eps, coarsen_until)
+        key = self.plan_key(g, seed, config)
         ent = self._plans.get(key)
         if ent is not None and ent[0] is g:
             self.plan_hits += 1
             self._plans.move_to_end(key)
             return ent[1]
         self.plan_misses += 1
-        plan = plan_request(g, seed, k, sched, eps, coarsen_until)
+        plan = plan_request(g, seed, config.k, config.tolerance_schedule(),
+                            config.eps, config.coarsen_until)
         self._plans[key] = (g, plan)
         self._plans.move_to_end(key)
         if len(self._plans) > self.max_plans:
@@ -181,13 +198,24 @@ class BufferPool:
             return ent[1], ent[2]
         self.alloc_count += 1  # the one fresh pad+upload event per miss
         record_pad_builds(1)   # ... mirrored on the global bench counter
+        if key in self._spilled:
+            del self._spilled[key]
+            self.spill_count += 1  # evicted earlier — thrash, not cold start
         padded = pad_graph(g, n_bucket, m_bucket)
         m_real = int(np.asarray(g.edge_mask).sum())
         self._slots[key] = (g, padded, m_real)
         self._slots.move_to_end(key)
         if len(self._slots) > self.max_slots:
-            self._slots.popitem(last=False)
+            old_key, _ = self._slots.popitem(last=False)
             self.evictions += 1
+            # remember the bare key (no graph ref — nothing pinned) so a
+            # future re-pad of it is counted as a spill; keys are a few
+            # ints each, so the memory floor keeps spill attribution
+            # working even for deliberately tiny (test-sized) pools
+            self._spilled[old_key] = None
+            self._spilled.move_to_end(old_key)
+            while len(self._spilled) > max(1024, 4 * self.max_slots):
+                self._spilled.popitem(last=False)
         return padded, m_real
 
     def batched(self, graphs, n_bucket: int | None, m_bucket: int | None):

@@ -24,6 +24,7 @@ in request order — bit-identical to calling ``partition`` per request.
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 from repro.core.multilevel import (
     coalesce_slots,
@@ -34,10 +35,38 @@ from repro.core.multilevel import (
     refine_rung,
     seed_list,
 )
-from repro.refine.schedule import resolve_schedule
-from repro.refine.variants import resolve_variant
 from repro.serve.buffers import BufferPool, default_pool
 from repro.serve.scheduler import BucketScheduler, Flush, FlushPolicy
+
+# serving embeds in host processes, so flush telemetry goes through the
+# stdlib logging tree ("repro.serve"), level-gated — never prints
+logger = logging.getLogger("repro.serve")
+
+
+def _flush_record(fl: Flush, lvl0: dict, lvl1: dict, pool0: dict,
+                  pool1: dict) -> dict:
+    """One flush-log entry: flush metadata plus the retrace-cache and
+    buffer-pool counter deltas its dispatch group caused (flushes in a
+    group share one enqueue, so deltas are per-group)."""
+    return {
+        "time_us": fl.time_us, "reason": fl.reason,
+        "size": len(fl.indices),
+        "n_bucket": fl.sig[0], "m_bucket": fl.sig[1],
+        "level_cache": {kk: lvl1[kk] - lvl0[kk]
+                        for kk in ("hits", "misses")},
+        "pool": {kk: pool1[kk] - pool0[kk]
+                 for kk in ("alloc_count", "plan_hits", "plan_misses",
+                            "slot_hits", "evictions", "spill_count")},
+    }
+
+
+def _log_flush(rec: dict, where: str = "stream") -> None:
+    logger.debug(
+        "%s flush t=%.0fus reason=%s size=%d bucket=(%d,%d) "
+        "retraces=%d allocs=%d spills=%d",
+        where, rec["time_us"], rec["reason"], rec["size"],
+        rec["n_bucket"], rec["m_bucket"], rec["level_cache"]["misses"],
+        rec["pool"]["alloc_count"], rec["pool"]["spill_count"])
 
 
 def run_group(group, pool: BufferPool, coalesce: bool = True,
@@ -48,11 +77,10 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
 
     ctxs = []
     for fl in group:
-        # every request in a flush shares the bucket signature, hence all
-        # static config — only graph and seed vary within a flush
-        r0 = fl.requests[0]
-        var = resolve_variant(r0.refiner)
-        sched = resolve_schedule(r0.schedule, r0.eps_coarse)
+        # every request in a flush shares the bucket signature, hence one
+        # config.cache_key() — only graph and seed vary within a flush
+        cfg = fl.requests[0].config
+        var = cfg.variant()
         taus = (temperature_schedule(var.rounds)
                 if var.mode != "lp" else [0.0])
         slot_of, pairs = coalesce_slots([r.graph for r in fl.requests],
@@ -60,15 +88,14 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
                                         coalesce)
         st = []
         for g, s in pairs:
-            pk = pool.plan_key(g, s, r0.k, sched, r0.eps, r0.coarsen_until)
-            state = exec_state(pool.plan(g, s, r0.k, sched, r0.eps,
-                                         r0.coarsen_until))
+            pk = pool.plan_key(g, s, cfg)
+            state = exec_state(pool.plan(g, s, cfg))
             state["_g"], state["_pk"] = g, pk
             cached = pool.init_labels(g, pk)
             if cached is not None:  # warm start: skip the init program
                 state["labels"] = cached
             st.append(state)
-        ctxs.append({"fl": fl, "r0": r0, "var": var, "taus": taus,
+        ctxs.append({"fl": fl, "cfg": cfg, "var": var, "taus": taus,
                      "slot_of": slot_of, "st": st,
                      "todo": [s for s in st if "labels" not in s]})
 
@@ -76,7 +103,7 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
     # for work items without a cached init winner)
     for c in ctxs:
         if c["todo"]:
-            c["init"] = init_dispatch(c["todo"], c["r0"].k, c["r0"].eps,
+            c["init"] = init_dispatch(c["todo"], c["cfg"].k, c["cfg"].eps,
                                       batched=pool.batched)
     for c in ctxs:
         if c["todo"]:
@@ -93,8 +120,9 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
     for j in range(max(max(s["n_levels"] for s in c["st"]) for c in ctxs)):
         for c in ctxs:
             sig = c["fl"].sig
-            refine_rung(c["st"], j, c["r0"].k, c["var"], c["taus"],
-                        c["r0"].patience, c["r0"].max_inner, c["r0"].gain,
+            cfg = c["cfg"]
+            refine_rung(c["st"], j, cfg.k, c["var"], c["taus"],
+                        cfg.patience, cfg.max_inner, cfg.gain,
                         trace_levels=trace_levels, batched=pool.batched,
                         donate=donate, pad_to=len(c["st"]),
                         bucket_hook=lambda rj, nb, mb, s=sig:
@@ -102,7 +130,7 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
 
     out: dict = {}
     for c in ctxs:
-        res_u = [finalize_result(s, c["r0"].k, trace_levels)
+        res_u = [finalize_result(s, c["cfg"].k, trace_levels)
                  for s in c["st"]]
         for pos, i in enumerate(c["fl"].indices):
             out[i] = res_u[c["slot_of"][pos]]
@@ -112,7 +140,8 @@ def run_group(group, pool: BufferPool, coalesce: bool = True,
 def partition_stream(requests, policy: FlushPolicy | None = None,
                      pool: BufferPool | None = None, seeds=None,
                      coalesce: bool = True, trace_levels: bool = False,
-                     donate: bool = True, report: bool = False):
+                     donate: bool = True, report: bool = False,
+                     config=None):
     """Serve a request stream synchronously.
 
     Schedules ``requests`` (:class:`repro.serve.scheduler.PartitionRequest`)
@@ -124,9 +153,14 @@ def partition_stream(requests, policy: FlushPolicy | None = None,
     (tests/test_serve.py pins this across the variant × schedule grid).
 
     ``seeds=`` overrides the requests' own seeds, validated at this API
-    boundary by the same ``seed_list`` check ``partition_batch`` uses.
-    ``report=True`` also returns the per-flush log: flush metadata plus the
-    retrace-cache and buffer-pool counter deltas each flush caused.
+    boundary by the same ``seed_list`` check ``partition_batch`` uses;
+    ``config=`` (a :class:`repro.core.config.PartitionConfig`) likewise
+    overrides every request's config — the serve-a-homogeneous-trace
+    shorthand.  ``report=True`` also returns the per-flush log: flush
+    metadata plus the retrace-cache and buffer-pool counter deltas each
+    flush caused; the same records go to the ``"repro.serve"`` logger at
+    DEBUG regardless of ``report`` (level-gated — zero cost when the
+    handler tree discards them).
     """
     from repro.refine import drivers
 
@@ -135,34 +169,28 @@ def partition_stream(requests, policy: FlushPolicy | None = None,
         seeds = seed_list(requests, seeds, 0, where="partition_stream")
         requests = [dataclasses.replace(r, seed=s)
                     for r, s in zip(requests, seeds)]
+    if config is not None:
+        requests = [dataclasses.replace(r, config=config) for r in requests]
     pool = pool if pool is not None else default_pool()
     groups = BucketScheduler(policy).plan(requests)
 
     results: dict = {}
     flush_log: list[dict] = []
     for group in groups:
-        if report:
+        record = report or logger.isEnabledFor(logging.DEBUG)
+        if record:
             lvl0 = drivers.cache_stats()["level"]
             pool0 = pool.stats()
         results.update(run_group(group, pool, coalesce=coalesce,
                                  trace_levels=trace_levels, donate=donate))
-        if report:
+        if record:
             lvl1 = drivers.cache_stats()["level"]
             pool1 = pool.stats()
             for fl in group:
-                flush_log.append({
-                    "time_us": fl.time_us, "reason": fl.reason,
-                    "size": len(fl.indices),
-                    "n_bucket": fl.sig[0], "m_bucket": fl.sig[1],
-                    # counter deltas for the whole dispatch group (flushes
-                    # in a group share one enqueue, so deltas are per-group)
-                    "level_cache": {kk: lvl1[kk] - lvl0[kk]
-                                    for kk in ("hits", "misses")},
-                    "pool": {kk: pool1[kk] - pool0[kk]
-                             for kk in ("alloc_count", "plan_hits",
-                                        "plan_misses", "slot_hits",
-                                        "evictions")},
-                })
+                rec = _flush_record(fl, lvl0, lvl1, pool0, pool1)
+                _log_flush(rec)
+                if report:
+                    flush_log.append(rec)
 
     res = [results[i] for i in range(len(requests))]
     return (res, flush_log) if report else res

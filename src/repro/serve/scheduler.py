@@ -4,55 +4,118 @@ A request stream never arrives as one tidy list: this module turns arriving
 :class:`PartitionRequest`\\ s into *flushes* — per-bucket batches the
 request-batched engine (``repro.core.partition_batch``'s phase helpers) can
 run as one compiled dispatch per level.  Requests are grouped by **bucket
-signature** (pad-to-bucket shape + every static knob of the compiled level
-programs: k, eps, variant, schedule, gain, patience, max_inner,
-coarsen_until), so every request in a flush rides the same retrace-cache
-entries.  A bucket flushes when it
+signature** (pad-to-bucket shape + ``PartitionConfig.cache_key()``, the
+canonical tuple of every static knob of the compiled level programs), so
+every request in a flush rides the same retrace-cache entries.  A bucket
+flushes when it
 
   * reaches the policy's ``batch_target`` (size flush),
   * its oldest pending request ages past ``deadline_us`` (deadline flush;
-    virtual time — the arrival trace's ``t_us`` stamps, never the wall
-    clock, so a replayed trace schedules identically every time), or
-  * the trace drains (end-of-stream flush).
+    against the arrival trace's ``t_us`` stamps in replay mode, against
+    the monotonic clock in the async service's wall-clock mode), or
+  * the stream drains (end-of-stream flush).
 
-Flushes that become ready at the same virtual instant form one **dispatch
-group** — the multi-bucket unit :mod:`repro.serve.runner` enqueues
-back-to-back without intervening host round-trips.  The whole plan is a
-pure function of (requests, policy): deterministic given an arrival trace.
+The core is the **incremental** :class:`SchedulerState` — offer one
+arrival, poll deadline expiries, drain at end of stream — which both the
+batch :meth:`BucketScheduler.plan` (replay a whole recorded trace) and the
+live :class:`repro.serve.service.PartitionService` dispatcher feed.  Fed
+the same arrivals at the same clock readings, both realize the SAME flush
+sequence: async replay-mode results are bit-identical to
+``partition_stream`` by construction, not by test luck (the test grid pins
+it anyway).
+
+Flushes that become ready at the same instant form one **dispatch group**
+— the multi-bucket unit :mod:`repro.serve.runner` enqueues back-to-back
+without intervening host round-trips.  The whole plan is a pure function
+of (requests, policy): deterministic given an arrival trace.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
-from repro.refine.schedule import ToleranceSchedule, resolve_schedule
-from repro.refine.variants import resolve_variant
+from repro.core.config import PartitionConfig, resolve_config
+
+# the loose per-request fields PartitionRequest carried before PR 9's
+# config object — accepted by the constructor as a deprecated facade
+_LEGACY_FIELDS = ("k", "eps", "refiner", "schedule", "eps_coarse", "gain",
+                  "patience", "max_inner", "coarsen_until")
 
 
 @dataclasses.dataclass(frozen=True)
 class PartitionRequest:
     """One partitioning request in the stream.
 
-    ``t_us`` is the arrival timestamp in (virtual) microseconds — replayed
-    traces carry their own clock.  All other fields mirror
-    ``repro.core.partition``'s signature; two requests land in the same
-    scheduler bucket iff every config field (and the graph's pad-to-bucket
-    shape) agrees.
+    ``config`` holds every static partitioning knob (one frozen
+    :class:`repro.core.config.PartitionConfig`); ``seed`` is the
+    per-request key chain and ``t_us`` the arrival timestamp in (virtual)
+    microseconds — replayed traces carry their own clock.  Two requests
+    land in the same scheduler bucket iff ``config.cache_key()`` and the
+    graph's pad-to-bucket shape agree.
+
+    The pre-config constructor form (``PartitionRequest(g, k=8,
+    refiner="jet")``) still works as a deprecated shim: loose fields fold
+    into a config at construction, unknown names raise the registry-listing
+    ``ValueError``, and mixing ``config=`` with loose fields is a conflict
+    error (a request must have ONE source of truth).  ``req.k`` etc.
+    remain readable as properties delegating to ``req.config``.
     """
 
     graph: Any
-    k: int = 4
-    eps: float = 0.03
+    config: PartitionConfig = PartitionConfig()
     seed: int = 0
-    refiner: str = "d4xjet"
-    schedule: str | ToleranceSchedule = "constant"
-    eps_coarse: float | None = None
-    gain: str = "jnp"
-    patience: int = 12
-    max_inner: int = 64
-    coarsen_until: int | None = None
     t_us: float = 0.0
+
+    # dataclass leaves a hand-written __init__ alone (and keeps the fields
+    # init=True, so dataclasses.replace still works) — the shim lives here
+    def __init__(self, graph, config: PartitionConfig | None = None,
+                 seed: int = 0, t_us: float = 0.0, **legacy):
+        if legacy:
+            unknown = sorted(set(legacy) - set(_LEGACY_FIELDS))
+            if unknown:
+                raise ValueError(
+                    f"PartitionRequest: unknown settings {unknown}: known "
+                    f"settings are {list(_LEGACY_FIELDS)} (deprecated — "
+                    f"pass config=PartitionConfig(...) instead)")
+            if config is not None:
+                raise ValueError(
+                    f"PartitionRequest: conflicting settings "
+                    f"{sorted(legacy)} passed alongside config= — a request "
+                    f"has one source of truth; fold them into the config "
+                    f"(config.replace({', '.join(sorted(legacy))}=...))")
+            warnings.warn(
+                "PartitionRequest(k=..., refiner=..., ...) loose fields are "
+                "deprecated; pass config=PartitionConfig(...)",
+                DeprecationWarning, stacklevel=2)
+            config = resolve_config(None, where="PartitionRequest", **legacy)
+        object.__setattr__(self, "graph", graph)
+        object.__setattr__(self, "config",
+                           config if config is not None else PartitionConfig())
+        object.__setattr__(self, "seed", seed)
+        object.__setattr__(self, "t_us", t_us)
+
+    # read-only delegates for the old loose-field form (bench/CLI/tests
+    # read req.k etc.; writing goes through config.replace)
+    @property
+    def k(self): return self.config.k
+    @property
+    def eps(self): return self.config.eps
+    @property
+    def refiner(self): return self.config.refiner
+    @property
+    def schedule(self): return self.config.schedule
+    @property
+    def eps_coarse(self): return self.config.eps_coarse
+    @property
+    def gain(self): return self.config.gain
+    @property
+    def patience(self): return self.config.patience
+    @property
+    def max_inner(self): return self.config.max_inner
+    @property
+    def coarsen_until(self): return self.config.coarsen_until
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,29 +142,121 @@ class FlushPolicy:
 
 def bucket_signature(req: PartitionRequest) -> tuple:
     """The scheduler grouping key: pad-to-bucket shape of the request's
-    graph plus every static field of the compiled level programs.  Two
-    requests with equal signatures are guaranteed to share the engine's
-    bucketed retrace-cache entries when flushed together."""
+    graph plus ``config.cache_key()`` — the ONE canonical static-knob tuple
+    (``repro.core.config``), not a hand-assembled copy.  Two requests with
+    equal signatures are guaranteed to share the engine's bucketed
+    retrace-cache entries when flushed together."""
     from repro.graphs.batch import bucket_size
 
-    var = resolve_variant(req.refiner)
-    sched = resolve_schedule(req.schedule, req.eps_coarse)
     return (bucket_size(req.graph.n, minimum=8),
-            bucket_size(req.graph.m, minimum=16),
-            req.k, req.eps, var.name, var.rounds, sched, req.gain,
-            req.patience, req.max_inner, req.coarsen_until)
+            bucket_size(req.graph.m, minimum=16)) + req.config.cache_key()
 
 
 @dataclasses.dataclass(frozen=True)
 class Flush:
     """One flushed bucket: the request indices (into the stream) it serves,
-    the virtual time it became ready, and why it flushed."""
+    the time it became ready, and why it flushed."""
 
     sig: tuple
-    indices: tuple  # positions in the original request list
+    indices: tuple  # positions in the original request list / submit order
     requests: tuple  # the PartitionRequests, same order as indices
     time_us: float
     reason: str  # "size" | "deadline" | "drain"
+
+
+class SchedulerState:
+    """Incremental bucket state: one arrival in, ready flushes out.
+
+    This is the live half of the scheduler — the batch
+    :meth:`BucketScheduler.plan` and the async service dispatcher both
+    drive it, so there is exactly one flush rule in the codebase.  The
+    protocol (all times in the caller's clock — virtual ``t_us`` stamps in
+    replay, monotonic microseconds in wall-clock serving):
+
+    * :meth:`offer` — admit one request; returns the flushes that became
+      ready, deadline expiries (strictly older than ``now``) first, then
+      the size flush if this arrival filled its bucket.
+    * :meth:`poll` — deadline expiries up to ``now`` (wall-clock serving
+      calls this on timer wakeups with no arrival).
+    * :meth:`drain` — end of stream: deadline buckets age out at their own
+      expiry time, size-only buckets drain together at ``t_end``.
+    * :meth:`next_deadline` — earliest pending expiry (None = no deadline
+      pressure), the wall-clock dispatcher's sleep bound.
+    """
+
+    def __init__(self, policy: FlushPolicy | None = None):
+        self.policy = policy or FlushPolicy()
+        self._pending: dict[tuple, list] = {}    # sig -> [(index, request)]
+        self._first_seen: dict[tuple, int] = {}  # sig -> discovery rank
+        self._t_last = 0.0                       # latest time offered
+
+    def pending_count(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def _flush(self, sig: tuple, t: float, reason: str) -> Flush:
+        items = self._pending.pop(sig)
+        return Flush(sig=sig, indices=tuple(i for i, _ in items),
+                     requests=tuple(r for _, r in items),
+                     time_us=float(t), reason=reason)
+
+    def _expired(self, now: float | None):
+        """Buckets whose oldest request has aged past the deadline by time
+        ``now`` (None = end of stream: everything), in deterministic
+        (expiry, first-seen) order."""
+        dl = self.policy.deadline_us
+        out = []
+        for sig, items in self._pending.items():
+            t_exp = items[0][1].t_us + dl
+            if now is None or t_exp <= now:
+                out.append((t_exp, self._first_seen[sig], sig))
+        return sorted(out)
+
+    def poll(self, now: float) -> list[Flush]:
+        if self.policy.deadline_us is None:
+            return []
+        return [self._flush(sig, t_exp, "deadline")
+                for t_exp, _, sig in self._expired(now)]
+
+    def offer(self, index: int, req: PartitionRequest,
+              now: float | None = None) -> list[Flush]:
+        now = req.t_us if now is None else now
+        self._t_last = max(self._t_last, now)
+        out = self.poll(now)
+        sig = bucket_signature(req)
+        if sig not in self._pending:
+            self._pending[sig] = []
+            self._first_seen.setdefault(sig, len(self._first_seen))
+        self._pending[sig].append((index, req))
+        if len(self._pending[sig]) >= self.policy.batch_target:
+            out.append(self._flush(sig, now, "size"))
+        return out
+
+    def next_deadline(self) -> float | None:
+        if self.policy.deadline_us is None or not self._pending:
+            return None
+        return min(items[0][1].t_us + self.policy.deadline_us
+                   for items in self._pending.values())
+
+    def drain(self, t_end: float | None = None) -> list[Flush]:
+        if self.policy.deadline_us is not None:
+            return [self._flush(sig, t_exp, "deadline")
+                    for t_exp, _, sig in self._expired(None)]
+        t_end = self._t_last if t_end is None else t_end
+        return [self._flush(sig, t_end, "drain")
+                for sig in sorted(self._pending,
+                                  key=self._first_seen.__getitem__)]
+
+
+def group_flushes(flushes) -> list[list[Flush]]:
+    """Group a time-ordered flush sequence into multi-bucket dispatch
+    groups (consecutive equal ``time_us`` — the simultaneity rule)."""
+    groups: list[list[Flush]] = []
+    for fl in sorted(flushes, key=lambda f: f.time_us):
+        if groups and groups[-1][0].time_us == fl.time_us:
+            groups[-1].append(fl)
+        else:
+            groups.append([fl])
+    return groups
 
 
 class BucketScheduler:
@@ -109,12 +264,13 @@ class BucketScheduler:
     dispatch groups (lists of simultaneous :class:`Flush`\\ es).
 
     Determinism contract: the plan is a pure function of the request list
-    and the policy.  Arrivals are processed in stable ``t_us`` order (ties
-    keep list order); simultaneous deadline expiries flush in
-    (expiry time, bucket first-seen order); the results a flush produces
-    are independent of which flush carries a request (batch invariance), so
-    the *partition results* of a stream do not depend on the policy at all
-    — only latency and throughput do.
+    and the policy — it replays the trace through the same incremental
+    :class:`SchedulerState` the live service runs.  Arrivals are processed
+    in stable ``t_us`` order (ties keep list order); simultaneous deadline
+    expiries flush in (expiry time, bucket first-seen order); the results
+    a flush produces are independent of which flush carries a request
+    (batch invariance), so the *partition results* of a stream do not
+    depend on the policy at all — only latency and throughput do.
     """
 
     def __init__(self, policy: FlushPolicy | None = None):
@@ -123,57 +279,10 @@ class BucketScheduler:
     def plan(self, requests) -> list[list[Flush]]:
         requests = list(requests)
         order = sorted(range(len(requests)), key=lambda i: requests[i].t_us)
-        pending: dict[tuple, list[int]] = {}   # sig -> request indices
-        first_seen: dict[tuple, int] = {}      # sig -> bucket discovery rank
+        state = SchedulerState(self.policy)
         flushes: list[Flush] = []
-
-        def flush(sig: tuple, t: float, reason: str) -> None:
-            idxs = tuple(pending.pop(sig))
-            flushes.append(Flush(
-                sig=sig, indices=idxs,
-                requests=tuple(requests[i] for i in idxs),
-                time_us=float(t), reason=reason))
-
-        def expired(now: float | None):
-            """Buckets whose oldest request has aged past the deadline by
-            virtual time ``now`` (None = end of trace: everything),
-            in deterministic (expiry, first-seen) order."""
-            dl = self.policy.deadline_us
-            out = []
-            for sig, idxs in pending.items():
-                t_exp = requests[idxs[0]].t_us + dl
-                if now is None or t_exp <= now:
-                    out.append((t_exp, first_seen[sig], sig))
-            return sorted(out)
-
         for i in order:
-            t = requests[i].t_us
-            if self.policy.deadline_us is not None:
-                for t_exp, _, sig in expired(t):
-                    flush(sig, t_exp, "deadline")
-            sig = bucket_signature(requests[i])
-            if sig not in pending:
-                pending[sig] = []
-                first_seen.setdefault(sig, len(first_seen))
-            pending[sig].append(i)
-            if len(pending[sig]) >= self.policy.batch_target:
-                flush(sig, t, "size")
-
-        # end of stream: deadline buckets age out at their own expiry time,
-        # size-only buckets drain together at the last arrival
-        if self.policy.deadline_us is not None:
-            for t_exp, _, sig in expired(None):
-                flush(sig, t_exp, "deadline")
-        else:
-            t_end = max((r.t_us for r in requests), default=0.0)
-            for sig in sorted(pending, key=first_seen.__getitem__):
-                flush(sig, t_end, "drain")
-
-        # simultaneous flushes form one multi-bucket dispatch group
-        groups: list[list[Flush]] = []
-        for fl in sorted(flushes, key=lambda f: f.time_us):
-            if groups and groups[-1][0].time_us == fl.time_us:
-                groups[-1].append(fl)
-            else:
-                groups.append([fl])
-        return groups
+            flushes += state.offer(i, requests[i])
+        flushes += state.drain(
+            t_end=max((r.t_us for r in requests), default=0.0))
+        return group_flushes(flushes)

@@ -1,0 +1,374 @@
+"""Async serving front: futures, wall-clock deadlines, admission control.
+
+:class:`PartitionService` is the piece between the request-batched engine
+and live traffic (DESIGN.md §2): :meth:`PartitionService.submit` enqueues a
+request onto a thread-safe ingestion queue and returns a
+:class:`PartitionFuture` immediately; a dispatcher thread feeds the SAME
+incremental flush rule the synchronous facade replays
+(:class:`repro.serve.scheduler.SchedulerState`) and resolves futures out of
+:func:`repro.serve.runner.run_group` — admission never blocks on a flush in
+flight.
+
+Two clocks, one scheduler:
+
+* ``mode="replay"`` — arrivals carry their own virtual ``t_us`` stamps
+  (a recorded trace).  Submitting a trace in nondecreasing ``t_us`` order
+  realizes *exactly* the flush plan ``BucketScheduler.plan`` computes, so
+  results are bit-identical to ``partition_stream`` by construction
+  (tests/test_service.py pins it across the variant × schedule grid).
+* ``mode="wallclock"`` — ``t_us`` is stamped from the monotonic clock at
+  submit and ``FlushPolicy.deadline_us`` is enforced against real elapsed
+  time: the dispatcher sleeps at most until the earliest pending bucket
+  expiry, so a bucket that never fills still flushes on deadline.
+
+Graceful degradation instead of stalls or OOM:
+
+* **overload** — with ``max_pending`` set, a submit that finds that many
+  requests already waiting is marked for **solo dispatch**: the dispatcher
+  runs it straight through ``repro.core.partition`` instead of parking it
+  in a bucket.  Batch invariance (B=1 ≡ ``partition``, pinned in
+  tests/test_batch_parity.py) makes the result bit-identical either way —
+  degradation costs batching efficiency, never correctness.
+* **lonely deadline buckets** — a deadline flush holding a single request
+  also degrades to solo dispatch (same invariance argument); there is
+  nothing to batch, so the engine's flush machinery is pure overhead.
+* **working set over the pool** — the :class:`~repro.serve.buffers
+  .BufferPool` evicts LRU slots and re-pads on return (counted in
+  ``spill_count``), so memory stays bounded; the service surfaces the
+  counters through :meth:`PartitionService.stats`.
+
+``shutdown(drain=True)`` is deterministic teardown: the ingestion queue is
+closed, queued work is flushed through the end-of-stream rule (deadline
+buckets age out at their own expiry, size-only buckets drain together),
+and every outstanding future is resolved before the call returns.
+``drain=False`` cancels undispatched work instead — still deterministic:
+every future ends resolved, rejected, or cancelled.
+"""
+
+from __future__ import annotations
+
+import logging
+import queue
+import threading
+import time
+
+from repro.serve.buffers import BufferPool, default_pool
+from repro.serve.runner import run_group
+from repro.serve.scheduler import (
+    FlushPolicy,
+    PartitionRequest,
+    SchedulerState,
+    group_flushes,
+)
+
+logger = logging.getLogger("repro.serve")
+
+_MODES = ("wallclock", "replay")
+
+
+class ServiceClosed(RuntimeError):
+    """Raised by :meth:`PartitionService.submit` after ``shutdown``."""
+
+
+class CancelledError(RuntimeError):
+    """Raised by :meth:`PartitionFuture.result` for futures cancelled by
+    ``shutdown(drain=False)``."""
+
+
+class PartitionFuture:
+    """Handle to one in-flight request (resolved by the dispatcher).
+
+    ``result(timeout=None)`` blocks until the request's flush completes
+    and returns the ``PartitionResult`` (re-raising the flush's exception
+    if it failed, :class:`CancelledError` if it was cancelled);
+    ``done()`` / ``cancelled()`` / ``exception()`` mirror the
+    ``concurrent.futures`` surface the stdlib trained everyone on.
+    """
+
+    __slots__ = ("index", "request", "t_done_us", "_event", "_result",
+                 "_exc", "_cancelled")
+
+    def __init__(self, index: int, request: PartitionRequest):
+        self.index = index
+        self.request = request
+        # service-clock stamp (now_us) at resolution — latency telemetry
+        self.t_done_us: float | None = None
+        self._event = threading.Event()
+        self._result = None
+        self._exc: BaseException | None = None
+        self._cancelled = False
+
+    # dispatcher-side transitions (each fires the event exactly once)
+    def _resolve(self, result) -> None:
+        self._result = result
+        self._event.set()
+
+    def _reject(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def _cancel(self) -> None:
+        self._cancelled = True
+        self._event.set()
+
+    # caller-side surface
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def exception(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.index} still in flight")
+        return self._exc
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.index} still in flight")
+        if self._cancelled:
+            raise CancelledError(f"request {self.index} was cancelled by "
+                                 f"shutdown(drain=False)")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
+class _Sentinel:
+    def __init__(self, drain: bool):
+        self.drain = drain
+
+
+class PartitionService:
+    """Live partitioning service over the request-batched engine.
+
+    Parameters mirror :func:`repro.serve.runner.partition_stream` where
+    they overlap (``policy`` / ``pool`` / ``coalesce`` / ``donate``), plus:
+
+    ``mode``
+        ``"wallclock"`` (default) or ``"replay"`` — see module docstring.
+    ``max_pending``
+        Admission bound: submits arriving while this many requests wait
+        un-flushed degrade to solo dispatch (``None`` = unbounded).
+
+    The dispatcher is one daemon thread; JAX dispatch stays single-threaded
+    (the engine's async device queue provides the parallelism), so no
+    engine-side state needs locking beyond the ingestion queue itself.
+    """
+
+    def __init__(self, policy: FlushPolicy | None = None,
+                 pool: BufferPool | None = None, mode: str = "wallclock",
+                 coalesce: bool = True, donate: bool = True,
+                 max_pending: int | None = None):
+        if mode not in _MODES:
+            raise ValueError(f"unknown service mode {mode!r}: known modes "
+                             f"are {list(_MODES)}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1 or None, "
+                             f"got {max_pending}")
+        self.policy = policy or FlushPolicy()
+        self.pool = pool if pool is not None else default_pool()
+        self.mode = mode
+        self.coalesce = coalesce
+        self.donate = donate
+        self.max_pending = max_pending
+
+        self._state = SchedulerState(self.policy)
+        self._queue: queue.Queue = queue.Queue()
+        self._futures: dict[int, PartitionFuture] = {}
+        self._lock = threading.Lock()  # guards index/futures/closed
+        self._next_index = 0
+        self._closed = False
+        self._t0 = time.monotonic()
+        # dispatch counters (dispatcher thread only — read via stats())
+        self.flush_count = 0
+        self.group_count = 0
+        self.solo_overload = 0
+        self.solo_deadline = 0
+        self.served = 0
+        self.failed = 0
+        self.cancelled = 0
+
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name="partition-service", daemon=True)
+        self._thread.start()
+
+    # ---- clock ---------------------------------------------------------
+    def now_us(self) -> float:
+        """Monotonic microseconds since service start (the wall-clock
+        mode's time base — ``deadline_us`` is enforced against this)."""
+        return (time.monotonic() - self._t0) * 1e6
+
+    # ---- ingestion -----------------------------------------------------
+    def submit(self, graph, config=None, *, seed: int = 0,
+               t_us: float | None = None, **legacy) -> PartitionFuture:
+        """Enqueue one request; returns its future immediately.
+
+        ``config`` is a :class:`repro.core.config.PartitionConfig` (loose
+        legacy fields pass through :class:`PartitionRequest`'s deprecated
+        shim).  ``t_us`` is the virtual arrival stamp in replay mode
+        (default 0.0 — submit order is the clock for untimed traces); in
+        wall-clock mode it is ignored and stamped from the monotonic
+        clock."""
+        if t_us is None or self.mode == "wallclock":
+            t_us = self.now_us() if self.mode == "wallclock" else 0.0
+        req = PartitionRequest(graph, config=config, seed=seed, t_us=t_us,
+                               **legacy)
+        return self.submit_request(req)
+
+    def submit_request(self, req: PartitionRequest) -> PartitionFuture:
+        """Enqueue a pre-built :class:`PartitionRequest` (trace replay's
+        entry point; ``submit`` is sugar over this)."""
+        with self._lock:
+            if self._closed:
+                raise ServiceClosed("PartitionService is shut down — "
+                                    "create a new service to submit")
+            index = self._next_index
+            self._next_index += 1
+            fut = PartitionFuture(index, req)
+            self._futures[index] = fut
+            pending = len(self._futures)
+        # admission control: over the bound, skip the bucket queue —
+        # batch invariance makes the solo result bit-identical, so the
+        # degradation is purely a batching-efficiency concession
+        solo = (self.max_pending is not None and pending > self.max_pending)
+        self._queue.put((index, req, solo))
+        return fut
+
+    # ---- dispatcher ----------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            timeout = None
+            if self.mode == "wallclock":
+                nd = self._state.next_deadline()
+                if nd is not None:
+                    timeout = max(0.0, (nd - self.now_us()) / 1e6)
+            try:
+                item = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                item = None  # timer wakeup: only deadline expiries to poll
+
+            if isinstance(item, _Sentinel):
+                self._teardown(item.drain)
+                return
+
+            ready = []
+            if item is not None:
+                index, req, solo = item
+                if solo:
+                    self.solo_overload += 1
+                    self._run_solo(index, req, "overload")
+                elif self.mode == "wallclock":
+                    ready += self._state.offer(index, req, now=self.now_us())
+                else:
+                    ready += self._state.offer(index, req)  # virtual clock
+            if self.mode == "wallclock":
+                ready += self._state.poll(self.now_us())
+            if ready:
+                self._dispatch(ready)
+
+    def _dispatch(self, flushes) -> None:
+        """Run ready flushes: lonely deadline buckets degrade to solo
+        dispatch, the rest go through the multi-bucket runner in
+        simultaneity groups (same grouping rule as the replay plan)."""
+        batched = []
+        for fl in flushes:
+            if fl.reason == "deadline" and len(fl.indices) == 1:
+                self.solo_deadline += 1
+                self._run_solo(fl.indices[0], fl.requests[0], "deadline")
+            else:
+                batched.append(fl)
+        for group in group_flushes(batched):
+            self.group_count += 1
+            self.flush_count += len(group)
+            try:
+                out = run_group(group, self.pool, coalesce=self.coalesce,
+                                donate=self.donate)
+            except Exception as exc:  # reject THIS flush group only —
+                self.failed += sum(len(fl.indices) for fl in group)
+                logger.exception("flush group failed (%d requests)",
+                                 sum(len(fl.indices) for fl in group))
+                for fl in group:
+                    for i in fl.indices:
+                        self._pop_future(i)._reject(exc)
+            else:
+                self.served += len(out)
+                for i, res in out.items():
+                    self._pop_future(i)._resolve(res)
+
+    def _run_solo(self, index: int, req: PartitionRequest,
+                  why: str) -> None:
+        """Degraded path: one plain ``partition`` call, bit-identical to
+        the batched result by B=1 batch invariance."""
+        from repro.core.multilevel import partition
+
+        logger.debug("solo dispatch (%s) request=%d", why, index)
+        fut = self._pop_future(index)
+        try:
+            fut._resolve(partition(req.graph, seed=req.seed,
+                                   config=req.config))
+        except Exception as exc:
+            self.failed += 1
+            logger.exception("solo dispatch failed request=%d", index)
+            fut._reject(exc)
+        else:
+            self.served += 1
+
+    def _pop_future(self, index: int) -> PartitionFuture:
+        with self._lock:
+            fut = self._futures.pop(index)
+        fut.t_done_us = self.now_us()
+        return fut
+
+    def _teardown(self, drain: bool) -> None:
+        """Sentinel handler: apply the end-of-stream rule (or cancel)."""
+        if drain:
+            # the end-of-stream rule (deadline buckets age out at their own
+            # expiry, size-only buckets drain together) — pending work never
+            # waits out a wall-clock deadline on a closed queue
+            leftovers = self._state.drain()
+            if leftovers:
+                self._dispatch(leftovers)
+        with self._lock:
+            futures, self._futures = self._futures, {}
+        for fut in futures.values():  # drain=False, or queued-after-close
+            self.cancelled += 1
+            fut.t_done_us = self.now_us()
+            fut._cancel()
+
+    # ---- lifecycle -----------------------------------------------------
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Deterministic teardown: close ingestion, then either flush all
+        queued work through the end-of-stream rule (``drain=True``) or
+        cancel it (``drain=False``); joins the dispatcher.  Every future
+        ever returned is resolved / rejected / cancelled on return."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+        if not already:
+            self._queue.put(_Sentinel(drain))
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("PartitionService dispatcher did not stop "
+                               f"within {timeout}s")
+
+    def __enter__(self) -> "PartitionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=exc == (None, None, None))
+
+    def stats(self) -> dict:
+        """Service + pool counters (the admission/degradation telemetry the
+        bench and CI steady-state gates read)."""
+        with self._lock:
+            pending = len(self._futures)
+        return {"mode": self.mode, "pending": pending,
+                "flush_count": self.flush_count,
+                "group_count": self.group_count,
+                "solo_overload": self.solo_overload,
+                "solo_deadline": self.solo_deadline,
+                "served": self.served, "failed": self.failed,
+                "cancelled": self.cancelled,
+                "pool": self.pool.stats()}

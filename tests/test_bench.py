@@ -292,23 +292,26 @@ def test_batch_sweep_produces_schema_valid_cells():
     assert cells[0]["imbalance"] == cells[1]["imbalance"]
 
 
-def test_snapshot_contains_second_schedule_column():
-    """Reverse coverage for the v5 second-schedule column: the committed
-    smoke snapshot must carry BOTH the primary (constant) and the
-    --schedule2 (adaptive) grids.  Dropping the schedule2 leg from
-    bench.main's smoke run would silently shrink the snapshot diff —
-    this goes red instead."""
+def test_snapshot_contains_every_schedule_column():
+    """Reverse coverage for the schedule axis: the committed smoke snapshot
+    must carry the primary (constant) grid AND one --schedule2 grid per
+    remaining registered schedule (adaptive, geometric, snap).  Dropping
+    a schedule leg from bench.main's smoke run would silently shrink the
+    snapshot diff — this goes red instead."""
     with open(SNAPSHOT) as f:
         snap = json.load(f)
     cfg = snap["config"]
-    assert cfg.get("schedule2") == "adaptive", cfg
+    assert cfg.get("schedule2") == ["adaptive", "geometric", "snap"], cfg
     schedules = {c["schedule"] for c in snap["cells"]}
-    assert {"constant", "adaptive"} <= schedules, schedules
-    adaptive = [c for c in snap["cells"] if c["schedule"] == "adaptive"]
-    # the second-schedule leg is the full P=1 classic grid over variants
-    assert {c["variant"] for c in adaptive} == set(cfg["variants"])
-    for c in adaptive:
-        assert c["engine"] == "dpartition" and c["p"] == 1, c["variant"]
+    assert {"constant", "adaptive", "geometric", "snap"} <= schedules, \
+        schedules
+    for sched2 in cfg["schedule2"]:
+        leg = [c for c in snap["cells"] if c["schedule"] == sched2]
+        # each extra-schedule leg is the full P=1 classic grid over variants
+        assert {c["variant"] for c in leg} == set(cfg["variants"]), sched2
+        for c in leg:
+            assert c["engine"] == "dpartition" and c["p"] == 1, \
+                (sched2, c["variant"])
 
 
 # ---- snapshot regression (benchmarks/snapshots/) --------------------------
@@ -348,14 +351,14 @@ def test_snapshot_regression():
             coarsen_until=cfg["coarsen_until"], timeout=1200,
             schedule=cfg.get("schedule", "constant"))
         assert not failures, failures
-        if cfg.get("schedule2"):
-            # one cell from the second schedule column so the reduced mode
-            # also diffs the v5 adaptive leg, not just the primary schedule
+        for sched2 in cfg.get("schedule2") or []:
+            # one cell per extra schedule column so the reduced mode also
+            # diffs every schedule leg, not just the primary
             extra, failures = bench.run_sweep(
                 ps=(1,), graphs=("grid2d_24",), variants=("jet",),
                 k=cfg["k"], seed=cfg["seed"], max_inner=cfg["max_inner"],
                 coarsen_until=cfg["coarsen_until"], timeout=1200,
-                schedule=cfg["schedule2"])
+                schedule=sched2)
             assert not failures, failures
             fresh = fresh + extra
 

@@ -1,0 +1,212 @@
+"""The unified PartitionConfig contract (repro.core.config, PR 9):
+
+  (a) construction is eager validation — unknown refiners / schedules /
+      gain backends and out-of-range ints fail with the registry-listing
+      ValueError style, at config build time, never inside an engine;
+  (b) round-trip + key stability: replace()/asdict round-trip, equal
+      configs (including alias spellings) produce equal cache/plan keys,
+      different compile-relevant settings produce different keys;
+  (c) the loose-kwargs facade on every entry point is bit-identical to
+      the config-object form across the variant × schedule grid, and
+      explicit kwargs override config fields;
+  (d) PartitionRequest's deprecated loose-field constructor folds into a
+      config (warning), conflicts and unknown names are ValueErrors, and
+      the read-only property shims still serve old readers.
+"""
+
+import dataclasses
+import os
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(ROOT))
+
+from repro.core import PartitionConfig, partition, partition_batch  # noqa: E402
+from repro.core.config import resolve_config  # noqa: E402
+from repro.graphs.generators import grid2d  # noqa: E402
+from repro.refine.schedule import SCHEDULES, resolve_schedule  # noqa: E402
+from repro.refine.variants import registered_variants  # noqa: E402
+from repro.serve import PartitionRequest, bucket_signature  # noqa: E402
+
+KW = dict(k=4, max_inner=2, coarsen_until=16)
+
+
+def _labels(r):
+    return np.asarray(r.labels)
+
+
+# ---- (a) eager validation -------------------------------------------------
+
+def test_config_validates_at_construction():
+    with pytest.raises(ValueError, match="registered variants"):
+        PartitionConfig(refiner="nope")
+    with pytest.raises(ValueError, match="schedule"):
+        PartitionConfig(schedule="nope")
+    with pytest.raises(ValueError, match="known backends"):
+        PartitionConfig(gain="cuda")
+    with pytest.raises(ValueError, match="k must be"):
+        PartitionConfig(k=0)
+    with pytest.raises(ValueError, match="max_inner"):
+        PartitionConfig(max_inner=0)
+    # replace() re-validates (it routes through __post_init__)
+    with pytest.raises(ValueError, match="registered variants"):
+        PartitionConfig().replace(refiner="nope")
+
+
+def test_resolve_config_rejects_unknown_and_non_config():
+    with pytest.raises(ValueError, match="known settings"):
+        resolve_config(None, bogus=1)
+    with pytest.raises(ValueError, match="must be a PartitionConfig"):
+        resolve_config({"k": 4})
+    with pytest.raises(ValueError, match="partition: unknown config"):
+        resolve_config(None, where="partition", kk=8)
+
+
+def test_entry_points_reject_unknown_refiner_with_registry_listing():
+    g = grid2d(4, 4)
+    with pytest.raises(ValueError, match="registered variants"):
+        partition(g, 2, refiner="bogus")
+    with pytest.raises(ValueError, match="registered variants"):
+        partition_batch([g], 2, refiner="bogus")
+
+
+# ---- (b) round-trip + key stability ---------------------------------------
+
+def test_config_round_trip_and_replace():
+    cfg = PartitionConfig(k=8, refiner="jet_v", schedule="snap",
+                          max_inner=12)
+    # dict round-trip reconstructs an equal config with equal keys
+    again = PartitionConfig(**dataclasses.asdict(cfg))
+    assert again == cfg
+    assert again.cache_key() == cfg.cache_key()
+    assert again.plan_key() == cfg.plan_key()
+    # replace() touches only the named field
+    other = cfg.replace(k=16)
+    assert other.k == 16 and other.refiner == "jet_v"
+    assert cfg.k == 8  # frozen source unchanged
+
+
+def test_cache_key_collapses_aliases_and_splits_settings():
+    base = PartitionConfig(**KW)
+    # alias spellings are THE SAME compiled programs -> same key
+    assert PartitionConfig(refiner="d4xjet", **KW).cache_key() == \
+        PartitionConfig(refiner="jet", **KW).cache_key()
+    assert PartitionConfig(schedule="unconstrained-then-snap",
+                           **KW).cache_key() == \
+        PartitionConfig(schedule="snap", **KW).cache_key()
+    # every compile-relevant field splits the key
+    seen = {base.cache_key()}
+    for variant in ({"k": 8}, {"eps": 0.1}, {"refiner": "lp"},
+                    {"schedule": "geometric"}, {"gain": "pallas"},
+                    {"patience": 3}, {"max_inner": 9},
+                    {"coarsen_until": 32}):
+        key = resolve_config(base, **variant).cache_key()
+        assert key not in seen, variant
+        seen.add(key)
+    # an explicit eps_coarse rides into the resolved schedule
+    assert PartitionConfig(schedule="geometric", eps_coarse=0.5,
+                           **KW).cache_key() != \
+        PartitionConfig(schedule="geometric", **KW).cache_key()
+
+
+def test_plan_key_is_the_coarsening_subset():
+    base = PartitionConfig(**KW)
+    # variant/gain do NOT change the plan (coarsening + init chain)
+    assert base.plan_key() == resolve_config(base, refiner="lp").plan_key()
+    assert base.plan_key() == resolve_config(base, gain="pallas").plan_key()
+    # k / eps / schedule / coarsen_until DO
+    assert base.plan_key() != resolve_config(base, k=8).plan_key()
+    assert base.plan_key() != resolve_config(base, eps=0.1).plan_key()
+    assert base.plan_key() != \
+        resolve_config(base, schedule="snap").plan_key()
+    assert base.plan_key() != \
+        resolve_config(base, coarsen_until=64).plan_key()
+
+
+def test_resolved_views_match_registries():
+    for v in registered_variants():
+        for s in SCHEDULES:
+            cfg = PartitionConfig(refiner=v, schedule=s)
+            assert cfg.variant().name == v
+            assert cfg.tolerance_schedule() == resolve_schedule(s, None)
+
+
+# ---- (c) facade ≡ config bit-identity -------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    return grid2d(9, 7)
+
+
+def test_facade_config_bit_identity_grid(tiny):
+    """partition(loose kwargs) ≡ partition(config=) for every
+    variant × schedule smoke cell — the refactor moved parsing, not
+    semantics."""
+    bad = []
+    for v in registered_variants():
+        for s in SCHEDULES:
+            loose = partition(tiny, refiner=v, schedule=s, seed=2, **KW)
+            cfg = PartitionConfig(refiner=v, schedule=s, **KW)
+            viaconf = partition(tiny, seed=2, config=cfg)
+            if not (np.array_equal(_labels(loose), _labels(viaconf))
+                    and loose.cut == viaconf.cut
+                    and loose.level_eps == viaconf.level_eps):
+                bad.append((v, s))
+    assert not bad, f"facade diverging from config= form: {bad}"
+
+
+def test_facade_overrides_config_fields(tiny):
+    cfg = PartitionConfig(**KW)
+    # an explicit kwarg wins over the config field it shadows
+    r8 = partition(tiny, 8, config=cfg)
+    assert int(_labels(r8).max()) > 3
+    want = partition(tiny, refiner="jet_v", **KW)
+    got = partition(tiny, refiner="jet_v", config=cfg)
+    assert np.array_equal(_labels(want), _labels(got))
+    assert want.cut == got.cut
+
+
+def test_batch_facade_config_bit_identity(tiny):
+    cfg = PartitionConfig(**KW)
+    loose = partition_batch([tiny, tiny], seeds=[0, 3], **KW)
+    viaconf = partition_batch([tiny, tiny], seeds=[0, 3], config=cfg)
+    for a, b in zip(loose, viaconf):
+        assert np.array_equal(_labels(a), _labels(b))
+        assert a.cut == b.cut
+
+
+# ---- (d) PartitionRequest deprecation shim --------------------------------
+
+def test_request_loose_fields_fold_into_config(tiny):
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = PartitionRequest(tiny, k=4, max_inner=2, coarsen_until=16)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    new = PartitionRequest(tiny, config=PartitionConfig(**KW))
+    assert old.config == new.config
+    assert bucket_signature(old) == bucket_signature(new)
+    # property shims keep old readers working
+    assert (old.k, old.max_inner, old.coarsen_until) == (4, 2, 16)
+    assert old.refiner == "d4xjet" and old.gain == "jnp"
+
+
+def test_request_conflicting_and_unknown_settings(tiny):
+    with pytest.raises(ValueError, match="conflicting settings"):
+        PartitionRequest(tiny, config=PartitionConfig(**KW), k=8)
+    with pytest.raises(ValueError, match="unknown settings"):
+        PartitionRequest(tiny, bogus=1)
+    with pytest.raises(ValueError, match="registered variants"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            PartitionRequest(tiny, refiner="bogus")
+
+
+def test_request_replace_keeps_config(tiny):
+    cfg = PartitionConfig(**KW)
+    req = PartitionRequest(tiny, config=cfg, seed=1, t_us=5.0)
+    moved = dataclasses.replace(req, seed=9)
+    assert moved.config is cfg and moved.seed == 9 and moved.t_us == 5.0

@@ -30,7 +30,7 @@ import pytest
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.abspath(ROOT))
 
-from repro.core import partition  # noqa: E402
+from repro.core import PartitionConfig, partition  # noqa: E402
 from repro.graphs import batch as GB  # noqa: E402
 from repro.graphs.generators import grid2d, rmat  # noqa: E402
 from repro.refine import drivers  # noqa: E402
@@ -55,10 +55,11 @@ def _labels(r):
     return np.asarray(r.labels)
 
 
-def _req(g, t_us=0.0, **over):
+def _req(g, t_us=0.0, seed=0, **over):
     kw = dict(KW)
     kw.update(over)
-    return PartitionRequest(graph=g, t_us=t_us, **kw)
+    return PartitionRequest(graph=g, t_us=t_us, seed=seed,
+                            config=PartitionConfig(**kw))
 
 
 # ---- (a) bit-identity with per-request partition --------------------------
@@ -226,7 +227,7 @@ def test_steady_state_zero_retraces_zero_allocs():
 
     order = random.Random(7).sample(range(100), 100)
     shuffled = [PartitionRequest(graph=reqs[j].graph, t_us=float(i * 4),
-                                 seed=reqs[j].seed, **KW)
+                                 seed=reqs[j].seed, config=reqs[j].config)
                 for i, j in enumerate(order)]
     drivers.reset_counters()
     GB.reset_pad_builds()
@@ -275,8 +276,9 @@ SERVE_SPEEDUP_FLOOR = 1.5
 def test_serve_snapshot_gate():
     """The committed SERVE_smoke.json (and, under SERVE_FRESH, the document
     the CI serve-smoke job just produced) is schema-valid, steady-state
-    clean (retraces == 0, allocs_per_1k == 0 in every serve cell), and
-    shows >= 1.5x gmean serve-vs-baseline throughput."""
+    clean (retraces == 0, allocs_per_1k == 0 in every serve cell — BOTH
+    fronts, the async service included), and shows >= 1.5x gmean
+    serve-vs-baseline throughput."""
     from benchmarks.common import validate_bench
 
     paths = [SERVE_SNAPSHOT]
@@ -290,10 +292,18 @@ def test_serve_snapshot_gate():
         serve_cells = [c for c in doc["cells"] if c["engine"] == "serve"]
         base_cells = [c for c in doc["cells"] if c["engine"] == "dpartition"]
         assert serve_cells and base_cells
+        # the async front is snapshot-gated alongside the sync replay
+        fronts = {c["front"] for c in serve_cells}
+        assert fronts == {"sync", "async"}, fronts
         for c in serve_cells:
             assert c["retraces"] == 0, c
             assert c["allocs_per_1k"] == 0.0, c
             assert c["batch"] >= 8
+        for c in serve_cells:
+            if c["front"] == "async":
+                svc = c["service"]
+                assert svc["served"] == doc["config"]["requests"], svc
+                assert svc["failed"] == 0 and svc["cancelled"] == 0, svc
         s = doc["serve_summary"]
         assert s["pairs"] == len(serve_cells)
         assert s["gmean_speedup"] >= SERVE_SPEEDUP_FLOOR, s

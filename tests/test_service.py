@@ -1,0 +1,256 @@
+"""The async serving front (repro.serve.service, tentpole of PR 9):
+
+  (a) replay-mode PartitionService results are bit-identical to the
+      synchronous partition_stream replay for every variant × schedule
+      (futures resolve to the same PartitionResults);
+  (b) graceful degradation stays bit-identical: forced pool overflow
+      (LRU evict + counted re-pad spills) and the solo-dispatch fallbacks
+      (admission overload, lonely deadline buckets) all return exactly
+      per-request partition's results — never an error, never a stall;
+  (c) a 200-request mixed-size trace after warmup is served entirely from
+      warm state through the service: zero level-program retraces, zero
+      fresh pad+upload events (the acceptance counters);
+  (d) wall-clock mode liveness: deadlines fire against monotonic time, a
+      bucket that never fills still completes;
+  (e) lifecycle: shutdown(drain=True) resolves everything queued,
+      drain=False cancels undispatched work, submit-after-shutdown
+      raises, and flush telemetry goes through the level-gated
+      "repro.serve" logger.
+"""
+
+import logging
+import os
+import random
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(ROOT))
+
+from repro.core import PartitionConfig, partition  # noqa: E402
+from repro.graphs import batch as GB  # noqa: E402
+from repro.graphs.generators import grid2d, rmat  # noqa: E402
+from repro.refine import drivers  # noqa: E402
+from repro.refine.schedule import SCHEDULES  # noqa: E402
+from repro.refine.variants import registered_variants  # noqa: E402
+from repro.serve import (  # noqa: E402
+    BufferPool,
+    CancelledError,
+    FlushPolicy,
+    PartitionRequest,
+    PartitionService,
+    ServiceClosed,
+    partition_stream,
+)
+
+CFG = PartitionConfig(k=4, max_inner=2, coarsen_until=32)
+
+
+def _labels(r):
+    return np.asarray(r.labels)
+
+
+def _same(a, b):
+    return (np.array_equal(_labels(a), _labels(b)) and a.cut == b.cut
+            and a.imbalance == b.imbalance and a.level_eps == b.level_eps)
+
+
+def _replay(reqs, policy=None, pool=None, **kw) -> list:
+    """Submit a recorded trace through a replay-mode service, drain, and
+    return results in submit order."""
+    with PartitionService(policy=policy, pool=pool, mode="replay",
+                          **kw) as svc:
+        futs = [svc.submit_request(r) for r in reqs]
+    return [f.result(timeout=300) for f in futs]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return grid2d(11, 9)  # ragged 99 ∉ 8Z: padding in every bucket
+
+
+# ---- (a) async ≡ sync replay identity -------------------------------------
+
+def test_service_replay_identical_every_variant_and_schedule(tiny):
+    bad = []
+    for v in registered_variants():
+        for s in SCHEDULES:
+            cfg = CFG.replace(refiner=v, schedule=s)
+            reqs = [PartitionRequest(tiny, config=cfg, seed=i,
+                                     t_us=float(i)) for i in range(3)]
+            sync = partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                                    pool=BufferPool())
+            live = _replay(reqs, policy=FlushPolicy(batch_target=3),
+                           pool=BufferPool())
+            if not all(_same(a, b) for a, b in zip(sync, live)):
+                bad.append((v, s))
+    assert not bad, f"service diverging from partition_stream: {bad}"
+
+
+def test_service_replay_identical_mixed_trace(tiny):
+    big = grid2d(16, 16)
+    reqs = [PartitionRequest(tiny if i % 2 else big, config=CFG,
+                             seed=i % 3, t_us=float(5 * i))
+            for i in range(11)]
+    sync = partition_stream(reqs, policy=FlushPolicy(batch_target=4),
+                            pool=BufferPool())
+    live = _replay(reqs, policy=FlushPolicy(batch_target=4),
+                   pool=BufferPool())
+    assert all(_same(a, b) for a, b in zip(sync, live))
+
+
+# ---- (b) degradation is bit-identical -------------------------------------
+
+def test_forced_pool_overflow_spills_without_error(tiny):
+    """A pool far too small for the working set must evict + re-pad
+    (counted spills), never fail, and results stay exact."""
+    graphs = [tiny, grid2d(16, 16), rmat(scale=6, edge_factor=4, seed=3)]
+    pool = BufferPool(max_slots=2, max_plans=2)
+    reqs = [PartitionRequest(graphs[i % 3], config=CFG, seed=i % 2,
+                             t_us=float(i)) for i in range(12)]
+    live = _replay(reqs, policy=FlushPolicy(batch_target=4), pool=pool)
+    # replay once more so evicted slots get re-padded -> spills counted
+    live2 = _replay(reqs, policy=FlushPolicy(batch_target=4), pool=pool)
+    assert pool.evictions > 0
+    assert pool.spill_count > 0, pool.stats()
+    for q, r, r2 in zip(reqs, live, live2):
+        solo = partition(q.graph, seed=q.seed, config=CFG)
+        assert _same(r, solo) and _same(r2, solo)
+
+
+def test_admission_overload_degrades_to_solo(tiny):
+    """max_pending=1 forces every queued-behind submit onto the solo path;
+    results are still exactly per-request partition's."""
+    reqs = [PartitionRequest(tiny, config=CFG, seed=i, t_us=float(i))
+            for i in range(5)]
+    with PartitionService(policy=FlushPolicy(batch_target=8),
+                          pool=BufferPool(), mode="replay",
+                          max_pending=1) as svc:
+        futs = [svc.submit_request(r) for r in reqs]
+    res = [f.result(timeout=300) for f in futs]
+    assert svc.solo_overload > 0, svc.stats()
+    assert svc.served == 5
+    for q, r in zip(reqs, res):
+        assert _same(r, partition(tiny, seed=q.seed, config=CFG))
+
+
+def test_lonely_deadline_bucket_degrades_to_solo(tiny):
+    """Two singleton buckets under a deadline policy: nothing to batch, so
+    each flush degrades to one plain partition call."""
+    reqs = [PartitionRequest(tiny, config=CFG, seed=0, t_us=0.0),
+            PartitionRequest(tiny, config=CFG.replace(k=8), seed=0,
+                             t_us=1.0)]
+    with PartitionService(policy=FlushPolicy(batch_target=8,
+                                             deadline_us=10.0),
+                          pool=BufferPool(), mode="replay") as svc:
+        futs = [svc.submit_request(r) for r in reqs]
+    res = [f.result(timeout=300) for f in futs]
+    assert svc.solo_deadline == 2, svc.stats()
+    for q, r in zip(reqs, res):
+        assert _same(r, partition(tiny, seed=0, config=q.config))
+
+
+# ---- (c) 200-request steady state -----------------------------------------
+
+def test_service_steady_state_200_requests():
+    """After a warmup replay, a SHUFFLED 200-request mixed-size trace runs
+    through the service with ZERO retraces and ZERO fresh pad+uploads —
+    the async front inherits the engine's steady-state contract intact
+    (coalesce=False keeps per-signature flush sizes shuffle-invariant)."""
+    graphs = [grid2d(11, 9), grid2d(8, 8),
+              rmat(scale=6, edge_factor=4, seed=3)]
+    reqs = [PartitionRequest(graphs[i % 3], config=CFG, seed=i % 5,
+                             t_us=float(i * 4)) for i in range(200)]
+    pool = BufferPool()
+    policy = FlushPolicy(batch_target=8)
+    warm = _replay(reqs, policy=policy, pool=pool, coalesce=False)
+
+    order = random.Random(9).sample(range(200), 200)
+    shuffled = [PartitionRequest(reqs[j].graph, config=reqs[j].config,
+                                 seed=reqs[j].seed, t_us=float(i * 4))
+                for i, j in enumerate(order)]
+    drivers.reset_counters()
+    GB.reset_pad_builds()
+    pool.reset_counters()
+    res = _replay(shuffled, policy=policy, pool=pool, coalesce=False)
+    assert drivers.TRACE_COUNT == 0, dict(drivers.TRACES)
+    assert GB.PAD_BUILD_COUNT == 0
+    assert pool.alloc_count == 0
+    assert pool.plan_misses == 0 and pool.init_misses == 0
+    assert pool.spill_count == 0 and pool.plan_hits == 200
+    for i, j in enumerate(order):
+        assert _same(res[i], warm[j])
+
+
+# ---- (d) wall-clock liveness ----------------------------------------------
+
+def test_wallclock_deadline_flushes_unfilled_bucket(tiny):
+    """batch_target higher than the trace: only the wall-clock deadline can
+    flush, so completion proves the timer path is live."""
+    with PartitionService(policy=FlushPolicy(batch_target=64,
+                                             deadline_us=30_000.0),
+                          pool=BufferPool(), mode="wallclock") as svc:
+        futs = [svc.submit(tiny, config=CFG, seed=i) for i in range(3)]
+        res = [f.result(timeout=300) for f in futs]
+    assert svc.stats()["served"] == 3
+    for i, r in enumerate(res):
+        assert _same(r, partition(tiny, seed=i, config=CFG))
+
+
+def test_wallclock_size_flush(tiny):
+    with PartitionService(policy=FlushPolicy(batch_target=2),
+                          pool=BufferPool(), mode="wallclock") as svc:
+        futs = [svc.submit(tiny, config=CFG, seed=i) for i in range(4)]
+        res = [f.result(timeout=300) for f in futs]
+    assert svc.flush_count >= 2
+    for i, r in enumerate(res):
+        assert _same(r, partition(tiny, seed=i, config=CFG))
+
+
+# ---- (e) lifecycle + logging ----------------------------------------------
+
+def test_shutdown_drain_false_cancels_pending(tiny):
+    svc = PartitionService(policy=FlushPolicy(batch_target=64),
+                           pool=BufferPool(), mode="replay")
+    futs = [svc.submit_request(PartitionRequest(tiny, config=CFG, seed=i,
+                                                t_us=float(i)))
+            for i in range(2)]
+    svc.shutdown(drain=False)
+    assert svc.stats()["cancelled"] == 2
+    for f in futs:
+        assert f.done() and f.cancelled()
+        with pytest.raises(CancelledError):
+            f.result()
+
+
+def test_submit_after_shutdown_raises(tiny):
+    svc = PartitionService(pool=BufferPool(), mode="replay")
+    svc.shutdown()
+    with pytest.raises(ServiceClosed):
+        svc.submit(tiny, config=CFG)
+    svc.shutdown()  # idempotent
+
+
+def test_service_mode_and_bounds_validated():
+    with pytest.raises(ValueError, match="known modes"):
+        PartitionService(mode="psychic", pool=BufferPool())
+    with pytest.raises(ValueError, match="max_pending"):
+        PartitionService(max_pending=0, pool=BufferPool())
+
+
+def test_flush_telemetry_via_module_logger(tiny, caplog):
+    reqs = [PartitionRequest(tiny, config=CFG, seed=i, t_us=float(i))
+            for i in range(3)]
+    with caplog.at_level(logging.DEBUG, logger="repro.serve"):
+        partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                         pool=BufferPool())
+    recs = [r for r in caplog.records if r.name == "repro.serve"]
+    assert any("flush" in r.getMessage() for r in recs)
+    # gated off by default: nothing emitted above DEBUG
+    caplog.clear()
+    with caplog.at_level(logging.INFO, logger="repro.serve"):
+        partition_stream(reqs, policy=FlushPolicy(batch_target=3),
+                         pool=BufferPool())
+    assert not [r for r in caplog.records if r.name == "repro.serve"]
