@@ -1,6 +1,6 @@
 # The paper's primary contribution: distributed unconstrained local search
 # (Jet) + probabilistic rebalancing inside a multilevel graph partitioner.
-from repro.core.config import PartitionConfig, resolve_config  # noqa: F401
+from repro.core.config import UNSET, PartitionConfig, resolve_config  # noqa: F401
 from repro.core.graph import PAD, Graph, from_coo, pad_graph, to_padded, to_padded_fast  # noqa: F401
 from repro.core.jet import jet_round  # noqa: F401
 from repro.core.multilevel import PartitionResult, partition, partition_batch  # noqa: F401

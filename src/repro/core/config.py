@@ -119,17 +119,33 @@ class PartitionConfig:
 _FIELDS = tuple(f.name for f in dataclasses.fields(PartitionConfig))
 
 
+class _Unset:
+    """Sentinel type for "kwarg not passed" facade defaults — distinct
+    from ``None`` so an explicit ``None`` can override an Optional config
+    field (``partition(g, config=cfg, eps_coarse=None)`` really clears
+    ``cfg.eps_coarse``)."""
+
+    __slots__ = ()
+
+    def __repr__(self):  # keeps facade signatures readable in help()
+        return "UNSET"
+
+
+UNSET = _Unset()
+
+
 def resolve_config(config: PartitionConfig | None = None,
                    where: str = "PartitionConfig",
                    **overrides) -> PartitionConfig:
     """Merge loose keyword overrides over a base ``config`` — the facade
     every entry point routes through.
 
-    ``None``-valued overrides mean "not passed" and keep the base field
-    (all facade kwargs default to ``None``); unknown setting names raise
-    the registry-listing ``ValueError`` style of ``resolve_variant``.
-    Returns the base object itself when nothing overrides it, so
-    ``config=`` callers pay no re-validation."""
+    ``UNSET``-valued overrides mean "not passed" and keep the base field
+    (all facade kwargs default to :data:`UNSET`), so an *explicit*
+    ``None`` overrides Optional fields like any other value; unknown
+    setting names raise the registry-listing ``ValueError`` style of
+    ``resolve_variant``.  Returns the base object itself when nothing
+    overrides it, so ``config=`` callers pay no re-validation."""
     unknown = sorted(set(overrides) - set(_FIELDS))
     if unknown:
         raise ValueError(
@@ -140,5 +156,5 @@ def resolve_config(config: PartitionConfig | None = None,
             f"{where}: config= must be a PartitionConfig, "
             f"got {type(config).__name__}")
     base = config if config is not None else PartitionConfig()
-    changes = {kk: v for kk, v in overrides.items() if v is not None}
+    changes = {kk: v for kk, v in overrides.items() if v is not UNSET}
     return dataclasses.replace(base, **changes) if changes else base

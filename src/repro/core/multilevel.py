@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coarsen as C
-from repro.core.config import PartitionConfig, resolve_config
+from repro.core.config import UNSET, PartitionConfig, resolve_config
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.partition import edge_cut, imbalance
@@ -73,16 +73,16 @@ def _refine(g: Graph, labels, k, eps, key, var: Variant, patience: int,
 
 def partition(
     g: Graph,
-    k: int | None = None,
-    eps: float | None = None,
+    k: int | None = UNSET,
+    eps: float | None = UNSET,
     seed: int = 0,
-    refiner: Refiner | None = None,
-    coarsen_until: int | None = None,
-    patience: int | None = None,
-    max_inner: int | None = None,
-    gain: str | None = None,
-    schedule: str | ToleranceSchedule | None = None,
-    eps_coarse: float | None = None,
+    refiner: Refiner | None = UNSET,
+    coarsen_until: int | None = UNSET,
+    patience: int | None = UNSET,
+    max_inner: int | None = UNSET,
+    gain: str | None = UNSET,
+    schedule: str | ToleranceSchedule | None = UNSET,
+    eps_coarse: float | None = UNSET,
     trace_levels: bool = False,
     config: PartitionConfig | None = None,
 ) -> PartitionResult:
@@ -92,6 +92,9 @@ def partition(
     (``repro.core.config``); pass one via ``config=`` or use the loose
     kwargs — a thin facade that overrides the corresponding config fields
     and is bit-identical to the config form (tests/test_config.py).
+    Facade kwargs default to the ``UNSET`` sentinel, so an *explicit*
+    ``None`` overrides too: ``partition(g, config=cfg, eps_coarse=None)``
+    really clears ``cfg.eps_coarse``.
 
     ``refiner`` names a registered refinement variant (see module
     docstring; unknown names raise ``ValueError`` listing the registry).
@@ -359,16 +362,16 @@ def finalize_result(s: dict, k: int, trace_levels: bool) -> PartitionResult:
 
 def partition_batch(
     graphs,
-    k: int | None = None,
-    eps: float | None = None,
+    k: int | None = UNSET,
+    eps: float | None = UNSET,
     seed: int = 0,
-    refiner: Refiner | None = None,
-    coarsen_until: int | None = None,
-    patience: int | None = None,
-    max_inner: int | None = None,
-    gain: str | None = None,
-    schedule: str | ToleranceSchedule | None = None,
-    eps_coarse: float | None = None,
+    refiner: Refiner | None = UNSET,
+    coarsen_until: int | None = UNSET,
+    patience: int | None = UNSET,
+    max_inner: int | None = UNSET,
+    gain: str | None = UNSET,
+    schedule: str | ToleranceSchedule | None = UNSET,
+    eps_coarse: float | None = UNSET,
     trace_levels: bool = False,
     seeds=None,
     coalesce: bool = True,

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import coarsen as C
-from repro.core.config import PartitionConfig, resolve_config
+from repro.core.config import UNSET, PartitionConfig, resolve_config
 from repro.core.graph import Graph
 from repro.core.initial import initial_partition
 from repro.core.multilevel import level_trace_entry
@@ -301,21 +301,21 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
 
 def dpartition(
     g: Graph,
-    k: int | None = None,
+    k: int | None = UNSET,
     P: int | None = None,
-    eps: float | None = None,
+    eps: float | None = UNSET,
     seed: int = 0,
-    refiner: str | None = None,
+    refiner: str | None = UNSET,
     coarsen: str | None = "sharded",
-    coarsen_until: int | None = None,
-    patience: int | None = None,
-    max_inner: int | None = None,
+    coarsen_until: int | None = UNSET,
+    patience: int | None = UNSET,
+    max_inner: int | None = UNSET,
     halo: bool = False,
-    gain: str | None = None,
+    gain: str | None = UNSET,
     halo_uniform: str = "global",
     timing: bool = False,
-    schedule: str | ToleranceSchedule | None = None,
-    eps_coarse: float | None = None,
+    schedule: str | ToleranceSchedule | None = UNSET,
+    eps_coarse: float | None = UNSET,
     trace_levels: bool = False,
     config: PartitionConfig | None = None,
 ) -> DPartitionResult:

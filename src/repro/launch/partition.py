@@ -122,7 +122,11 @@ def main():
                                                seed=r.seed))
                 else:
                     futs = [svc.submit_request(r) for r in reqs]
-                results = [f.result() for f in futs]
+            # results AFTER the with block: __exit__ drains pending buckets
+            # (a size-only tail bucket, or a replay-mode deadline bucket with
+            # no later arrival to expire it, only flushes at drain — calling
+            # result() inside the block would deadlock on that tail)
+            results = [f.result() for f in futs]
             sec = time.time() - t0
             stats = svc.stats()
             stats.pop("pool", None)  # printed separately below

@@ -89,7 +89,11 @@ class PartitionRequest:
                 "PartitionRequest(k=..., refiner=..., ...) loose fields are "
                 "deprecated; pass config=PartitionConfig(...)",
                 DeprecationWarning, stacklevel=2)
-            config = resolve_config(None, where="PartitionRequest", **legacy)
+            # the old loose-field form used None-as-default; keep that here
+            # (the UNSET-sentinel override semantics are config-facade only)
+            config = resolve_config(None, where="PartitionRequest",
+                                    **{kk: v for kk, v in legacy.items()
+                                       if v is not None})
         object.__setattr__(self, "graph", graph)
         object.__setattr__(self, "config",
                            config if config is not None else PartitionConfig())
@@ -187,7 +191,13 @@ class SchedulerState:
     def __init__(self, policy: FlushPolicy | None = None):
         self.policy = policy or FlushPolicy()
         self._pending: dict[tuple, list] = {}    # sig -> [(index, request)]
-        self._first_seen: dict[tuple, int] = {}  # sig -> discovery rank
+        # sig -> discovery rank, PENDING sigs only: pruned on flush so a
+        # long-running service with churning signatures stays bounded (a
+        # re-appearing sig is a NEW bucket and ranks after live ones).
+        # Ranks come off a monotonic counter, never len(_first_seen) —
+        # pruning must not let a new sig collide with a live rank.
+        self._first_seen: dict[tuple, int] = {}
+        self._rank = 0
         self._t_last = 0.0                       # latest time offered
 
     def pending_count(self) -> int:
@@ -195,6 +205,7 @@ class SchedulerState:
 
     def _flush(self, sig: tuple, t: float, reason: str) -> Flush:
         items = self._pending.pop(sig)
+        del self._first_seen[sig]
         return Flush(sig=sig, indices=tuple(i for i, _ in items),
                      requests=tuple(r for _, r in items),
                      time_us=float(t), reason=reason)
@@ -225,7 +236,8 @@ class SchedulerState:
         sig = bucket_signature(req)
         if sig not in self._pending:
             self._pending[sig] = []
-            self._first_seen.setdefault(sig, len(self._first_seen))
+            self._first_seen[sig] = self._rank
+            self._rank += 1
         self._pending[sig].append((index, req))
         if len(self._pending[sig]) >= self.policy.batch_target:
             out.append(self._flush(sig, now, "size"))

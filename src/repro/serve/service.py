@@ -121,6 +121,10 @@ class PartitionFuture:
     def exception(self, timeout: float | None = None):
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.index} still in flight")
+        if self._cancelled:  # concurrent.futures contract: cancelled
+            raise CancelledError(  # futures raise, never "no exception"
+                f"request {self.index} was cancelled by "
+                f"shutdown(drain=False)")
         return self._exc
 
     def result(self, timeout: float | None = None):
@@ -228,11 +232,15 @@ class PartitionService:
             fut = PartitionFuture(index, req)
             self._futures[index] = fut
             pending = len(self._futures)
-        # admission control: over the bound, skip the bucket queue —
-        # batch invariance makes the solo result bit-identical, so the
-        # degradation is purely a batching-efficiency concession
-        solo = (self.max_pending is not None and pending > self.max_pending)
-        self._queue.put((index, req, solo))
+            # admission control: over the bound, skip the bucket queue —
+            # batch invariance makes the solo result bit-identical, so the
+            # degradation is purely a batching-efficiency concession
+            solo = (self.max_pending is not None
+                    and pending > self.max_pending)
+            # enqueue UNDER the lock: shutdown takes the lock before its
+            # sentinel, so every future handed out lands ahead of it and
+            # drain=True serves (never cancels) it
+            self._queue.put((index, req, solo))
         return fut
 
     # ---- dispatcher ----------------------------------------------------
@@ -331,7 +339,8 @@ class PartitionService:
                 self._dispatch(leftovers)
         with self._lock:
             futures, self._futures = self._futures, {}
-        for fut in futures.values():  # drain=False, or queued-after-close
+        for fut in futures.values():  # drain=False cancellations only —
+            # submits enqueue under the lock, so nothing trails the sentinel
             self.cancelled += 1
             fut.t_done_us = self.now_us()
             fut._cancel()

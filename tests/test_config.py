@@ -170,6 +170,24 @@ def test_facade_overrides_config_fields(tiny):
     assert want.cut == got.cut
 
 
+def test_explicit_none_overrides_optional_fields(tiny):
+    """Facade kwargs default to the UNSET sentinel, so an *explicitly*
+    passed None is a real override: Optional fields like eps_coarse /
+    coarsen_until can be cleared through the facade (regression: None
+    used to read as 'not passed' and silently kept the template's
+    value)."""
+    base = PartitionConfig(schedule="geometric", eps_coarse=0.5, **KW)
+    assert resolve_config(base).eps_coarse == 0.5  # not passed → kept
+    assert resolve_config(base, eps_coarse=None).eps_coarse is None
+    assert resolve_config(base, coarsen_until=None).coarsen_until is None
+    # end to end: clearing eps_coarse reproduces the default-eps_coarse
+    # geometric schedule bit-for-bit
+    want = partition(tiny, schedule="geometric", **KW)
+    got = partition(tiny, config=base, eps_coarse=None)
+    assert np.array_equal(_labels(want), _labels(got))
+    assert want.cut == got.cut
+
+
 def test_batch_facade_config_bit_identity(tiny):
     cfg = PartitionConfig(**KW)
     loose = partition_batch([tiny, tiny], seeds=[0, 3], **KW)

@@ -179,6 +179,31 @@ def test_scheduler_deadline_flushes(tiny):
         [("deadline", 100.0, (0, 1)), ("deadline", 600.0, (2,))]
 
 
+def test_scheduler_first_seen_pruned_on_flush(tiny):
+    """_first_seen holds PENDING signatures only — pruned with the bucket
+    at flush, so a long-running service with churning signatures stays
+    bounded — and ranks come off a monotonic counter, so a signature
+    re-appearing after its flush can never collide with a live rank."""
+    from repro.serve.scheduler import SchedulerState
+
+    st = SchedulerState(FlushPolicy(batch_target=2))
+    flushed, idx = [], 0
+    for kk in (2, 3, 4, 5):  # 4 distinct signatures, each filled to size
+        for _ in range(2):
+            flushed += st.offer(idx, _req(tiny, k=kk, t_us=float(idx)))
+            idx += 1
+    assert len(flushed) == 4
+    assert all(f.reason == "size" for f in flushed)
+    assert st.pending_count() == 0
+    assert st._first_seen == {}  # pruned with its bucket
+    # a flushed signature re-appears as a NEW bucket, ranked after every
+    # live one; ranks stay distinct
+    st.offer(idx, _req(tiny, k=2, t_us=float(idx)))
+    st.offer(idx + 1, _req(tiny, k=9, t_us=float(idx + 1)))
+    assert len(st._first_seen) == 2
+    assert len(set(st._first_seen.values())) == 2
+
+
 def test_scheduler_plan_is_deterministic_and_result_neutral(tiny):
     big = grid2d(16, 16)
     reqs = [_req(tiny if i % 2 else big, t_us=float(i * 5), seed=i % 3)

@@ -18,9 +18,11 @@
       "repro.serve" logger.
 """
 
+import json
 import logging
 import os
 import random
+import subprocess
 import sys
 
 import numpy as np
@@ -28,6 +30,7 @@ import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.abspath(ROOT))
+SRC = os.path.abspath(os.path.join(ROOT, "src"))
 
 from repro.core import PartitionConfig, partition  # noqa: E402
 from repro.graphs import batch as GB  # noqa: E402
@@ -223,6 +226,28 @@ def test_shutdown_drain_false_cancels_pending(tiny):
         assert f.done() and f.cancelled()
         with pytest.raises(CancelledError):
             f.result()
+        # concurrent.futures contract: exception() raises on a cancelled
+        # future too — it never reads as "completed without exception"
+        with pytest.raises(CancelledError):
+            f.exception()
+
+
+def test_cli_replay_tail_bucket_terminates():
+    """A --serve-mode replay trace smaller than --serve-batch leaves a
+    tail bucket that only flushes at drain, so the CLI must collect
+    future results AFTER the service context exits (regression: calling
+    result() inside the `with` block deadlocked the CLI forever)."""
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.partition",
+         "--graph", "rgg3d_8k", "--k", "2", "--serve-trace", "poisson:3:50",
+         "--serve-mode", "replay", "--serve-batch", "8"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["requests"] == 3 and out["front"] == "replay"
+    assert out["service"]["served"] == 3
+    assert out["service"]["cancelled"] == 0
 
 
 def test_submit_after_shutdown_raises(tiny):
