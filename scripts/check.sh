@@ -14,6 +14,12 @@
 # zero-alloc contract and the schema per cell — plus the serving test
 # suite (scheduler determinism, buffer-pool counters, stream bit-identity,
 # PartitionConfig facade identity, service lifecycle/degradation).
+#
+# --ckpt: the crash/fault-injection preflight (CI's ckpt-smoke leg): the
+# out-of-core ingest + checkpoint-store + resumable-V-cycle suites, plus —
+# via REPRO_CKPT_SUBPROC=1 — the kill-and-resume subprocess cells that
+# SIGKILL the CLI mid-V-cycle (same-P and elastic P=8↔P=1) and are too
+# heavy for tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,6 +35,16 @@ if [[ "${1:-}" == "--batch" ]]; then
     --out "${BENCH_BATCH_OUT:-/tmp/BENCH_batch_smoke.json}"
   python -m pytest -x -q tests/test_batch_parity.py tests/test_bench.py
   echo "check.sh --batch: all green"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--ckpt" ]]; then
+  echo "== out-of-core ingest + resumable-V-cycle preflight =="
+  REPRO_CKPT_SUBPROC=1 JAX_PLATFORMS=cpu \
+    python -m pytest -x -q tests/test_ingest.py tests/test_checkpoint.py \
+    tests/test_ckpt_faults.py tests/test_vcycle_ckpt.py \
+    tests/test_kill_resume.py
+  echo "check.sh --ckpt: all green"
   exit 0
 fi
 

@@ -1,6 +1,12 @@
 from repro.checkpoint.store import (  # noqa: F401
+    CheckpointError,
+    SaveHandle,
+    committed_steps,
     latest_step,
+    load_meta,
     restore,
     restore_resharded,
     save,
+    verify_step,
 )
+from repro.checkpoint.vcycle import CheckpointPolicy  # noqa: F401

@@ -1,23 +1,37 @@
 """Sharded checkpointing with atomic commit, keep-N GC and elastic restore.
 
 Layout:
-    <dir>/step_<n>.tmp/     — in-flight write
-    <dir>/step_<n>/         — committed (atomic rename)
-        META.json           — treedef (path-encoded), shapes, dtypes, step
-        <leaf-path>.npy     — one file per leaf
+    <dir>/step_<n>.tmp-<token>/ — in-flight write (token unique per save, so
+                                  concurrent saves of the same step never
+                                  collide; legacy bare ``step_<n>.tmp`` dirs
+                                  from older writers are equally ignored)
+    <dir>/step_<n>/             — committed (atomic rename)
+        META.json               — treedef (path-encoded), shapes, dtypes,
+                                  step, caller ``extra`` metadata
+        <leaf-path>.npy         — one file per leaf
 
-Fault-tolerance contract:
-  * a crash mid-save leaves only a .tmp dir → ignored on restore;
-  * ``restore`` picks the latest *committed* step;
+Fault-tolerance contract (pinned by tests/test_ckpt_faults.py):
+  * a crash mid-save leaves only a ``.tmp*`` dir → ignored on restore;
+  * a committed-looking step with a truncated / unreadable leaf is treated
+    as torn: ``restore(step=None)`` falls back to the previous good step,
+    ``committed_steps(verify=True)`` excludes it;
+  * ``restore`` raises a descriptive ``ValueError`` (never a bare
+    ``KeyError``) when the target structure wants a leaf the checkpoint
+    does not hold;
+  * commit + keep-N GC run under one process-wide lock, so interleaved
+    (async) saves always leave exactly the ``keep`` newest committed steps
+    and no torn state;
+  * ``save(async_=True)`` returns a :class:`SaveHandle` whose ``join()`` /
+    ``result()`` re-raise any worker exception — a failed async save is
+    never silently reported as success;
   * ``restore_resharded`` device_puts every leaf with a target sharding —
     restoring onto a different mesh (elastic scale up/down) is a first-class
-    operation, tested in tests/test_checkpoint.py;
-  * async mode runs the serialisation on a worker thread (double-buffered via
-    a host copy) so the train loop is not blocked.
+    operation, tested in tests/test_checkpoint.py.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import re
@@ -29,6 +43,54 @@ import jax
 import numpy as np
 
 _SEP = "/"
+
+# commit (rename + GC) is a critical section: two async saves racing the
+# keep-N scan could otherwise rmtree a step the other just committed
+_COMMIT_LOCK = threading.Lock()
+_TMP_COUNTER = itertools.count()
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint step exists but cannot be read (torn write, truncated
+    leaf, unparseable META) — distinct from caller errors like asking for a
+    leaf the checkpoint never held (those raise ``ValueError``)."""
+
+
+class SaveHandle:
+    """Handle for an in-flight async save.
+
+    ``join()`` waits for the worker and re-raises anything it raised;
+    ``result()`` additionally returns the committed path.  The old
+    behaviour (a bare daemon ``Thread`` that swallowed write errors) meant
+    a failed async save looked exactly like a successful one.
+    """
+
+    def __init__(self, fn):
+        self._path: str | None = None
+        self._exc: BaseException | None = None
+
+        def _run():
+            try:
+                self._path = fn()
+            except BaseException as e:  # noqa: BLE001 — re-raised at join()
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("async checkpoint save still running")
+        if self._exc is not None:
+            raise self._exc
+
+    def result(self, timeout: float | None = None) -> str:
+        self.join(timeout)
+        return self._path  # type: ignore[return-value]
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
 
 
 def _flatten_with_paths(tree) -> dict[str, Any]:
@@ -50,19 +112,24 @@ def _path_elem(p) -> str:
     return str(p)
 
 
-def save(ckpt_dir: str, step: int, tree, keep: int = 3, async_: bool = False):
-    """Write a checkpoint; atomic commit via rename.  Returns the final path
-    (or a started Thread in async mode)."""
+def save(ckpt_dir: str, step: int, tree, keep: int = 3, async_: bool = False,
+         extra: dict | None = None):
+    """Write a checkpoint; atomic commit via rename.
+
+    ``extra`` is an optional JSON-serialisable dict stored in META.json
+    (read back via :func:`load_meta`) — callers use it for resume
+    fingerprints.  Returns the final path, or a :class:`SaveHandle` in
+    async mode (``handle.result()`` re-raises worker errors).
+    """
     leaves = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
     treedef_repr = jax.tree_util.tree_structure(tree)
 
     def _write():
-        tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+        tmp = os.path.join(
+            ckpt_dir, f"step_{step}.tmp-{os.getpid()}-{next(_TMP_COUNTER)}")
         final = os.path.join(ckpt_dir, f"step_{step}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp, exist_ok=True)
-        meta = {"step": step, "leaves": {}}
+        os.makedirs(tmp, exist_ok=False)
+        meta = {"step": step, "leaves": {}, "extra": extra or {}}
         for key, arr in leaves.items():
             fn = key.replace(_SEP, "__") + ".npy"
             true_dtype = str(arr.dtype)
@@ -76,16 +143,15 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3, async_: bool = False):
         meta["treedef"] = str(treedef_repr)
         with open(os.path.join(tmp, "META.json"), "w") as f:
             json.dump(meta, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)  # atomic commit
-        _gc(ckpt_dir, keep)
+        with _COMMIT_LOCK:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            _gc(ckpt_dir, keep)
         return final
 
     if async_:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        return t
+        return SaveHandle(_write)
     return _write()
 
 
@@ -95,13 +161,45 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
 
 
-def committed_steps(ckpt_dir: str):
+def _step_problems(path: str) -> list[str]:
+    """Integrity check of one committed-looking step dir; [] when sound."""
+    try:
+        with open(os.path.join(path, "META.json")) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable META.json: {e}"]
+    problems = []
+    for key, info in meta.get("leaves", {}).items():
+        leaf = os.path.join(path, info["file"])
+        try:
+            arr = np.load(leaf)
+        except Exception as e:  # truncated / missing / not-an-npy
+            problems.append(f"leaf {key!r} ({info['file']}): {e}")
+            continue
+        if list(arr.shape) != list(info["shape"]):
+            problems.append(
+                f"leaf {key!r} ({info['file']}): shape {list(arr.shape)} "
+                f"!= META {info['shape']}")
+    return problems
+
+
+def verify_step(ckpt_dir: str, step: int) -> list[str]:
+    """Problems with a committed step (empty list = intact)."""
+    return _step_problems(os.path.join(ckpt_dir, f"step_{step}"))
+
+
+def committed_steps(ckpt_dir: str, verify: bool = False):
+    """Sorted committed step numbers.  ``verify=True`` additionally loads
+    every leaf and drops steps with torn writes (truncated / missing /
+    shape-mismatched leaf files)."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
         m = re.fullmatch(r"step_(\d+)", name)
         if m and os.path.exists(os.path.join(ckpt_dir, name, "META.json")):
+            if verify and _step_problems(os.path.join(ckpt_dir, name)):
+                continue
             out.append(int(m.group(1)))
     return sorted(out)
 
@@ -111,35 +209,88 @@ def latest_step(ckpt_dir: str):
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir: str, like, step: int | None = None):
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  Host arrays; use restore_resharded to place."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(path, "META.json")) as f:
-        meta = json.load(f)
+def load_meta(ckpt_dir: str, step: int) -> dict:
+    """Parsed META.json of a committed step (incl. the caller ``extra``)."""
+    path = os.path.join(ckpt_dir, f"step_{step}", "META.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"unreadable checkpoint meta {path}: {e}") from e
 
-    flat_like = _flatten_with_paths(like)
+
+def _load_leaves(path: str, keys) -> dict[str, np.ndarray]:
+    """Load the named leaves of one step dir.
+
+    Raises ``ValueError`` when the checkpoint does not hold a wanted key
+    (a caller/structure mismatch — listing the stored leaves), and
+    :class:`CheckpointError` when a held leaf cannot be read (torn write).
+    """
+    try:
+        with open(os.path.join(path, "META.json")) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
     loaded = {}
-    for key in flat_like:
+    for key in keys:
+        if key not in meta["leaves"]:
+            raise ValueError(
+                f"checkpoint {path} has no leaf {key!r}; stored leaves: "
+                f"{sorted(meta['leaves'])}")
         info = meta["leaves"][key]
-        arr = np.load(os.path.join(path, info["file"]))
+        leaf = os.path.join(path, info["file"])
+        try:
+            arr = np.load(leaf)
+        except Exception as e:
+            raise CheckpointError(
+                f"torn checkpoint {path}: leaf {key!r} ({info['file']}) "
+                f"unreadable: {e}") from e
+        if list(arr.shape) != list(info["shape"]):
+            raise CheckpointError(
+                f"torn checkpoint {path}: leaf {key!r} has shape "
+                f"{list(arr.shape)}, META says {info['shape']}")
         if info["dtype"] == "bfloat16":
             import ml_dtypes
 
             arr = arr.view(ml_dtypes.bfloat16)
         loaded[key] = arr
+    return loaded
 
-    # rebuild in like's treedef order
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for p, _ in flat:
-        key = _SEP.join(_path_elem(e) for e in p)
-        leaves.append(loaded[key])
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+def restore(ckpt_dir: str, like, step: int | None = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Host arrays; use restore_resharded to place.
+
+    With ``step=None`` the latest *intact* committed step wins: steps whose
+    leaves turn out torn (truncated mid-write) are skipped in favour of the
+    previous good one.  An explicit ``step`` is restored as-is — torn state
+    raises :class:`CheckpointError`.
+    """
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(_path_elem(e) for e in p) for p, _ in flat_like]
+
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = list(reversed(committed_steps(ckpt_dir)))
+        if not candidates:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+
+    errors: list[str] = []
+    for s in candidates:
+        path = os.path.join(ckpt_dir, f"step_{s}")
+        try:
+            loaded = _load_leaves(path, keys)
+        except CheckpointError as e:
+            if step is not None:
+                raise
+            errors.append(str(e))
+            continue
+        leaves = [loaded[key] for key in keys]
+        return jax.tree_util.tree_unflatten(treedef, leaves), s
+    raise CheckpointError(
+        f"no intact committed checkpoint in {ckpt_dir}; "
+        f"torn steps skipped: {errors}")
 
 
 def restore_resharded(ckpt_dir: str, like, shardings, step: int | None = None):

@@ -1,0 +1,155 @@
+"""Resumable V-cycle checkpointing (`CheckpointPolicy` + snapshot helpers).
+
+What is snapshotted, and why resume is bit-identical (DESIGN.md §6):
+
+* Coarsening is a deterministic function of (graph, seed): the hierarchy is
+  **recomputed** on resume, never serialised — a snapshot is O(n), not
+  O(levels · m).
+* A snapshot ``step_s`` holds the only per-level mutable state: the labels
+  (always in **global** (n_level,) layout, so a checkpoint written at P=8
+  restores onto P=1 and vice versa — the partitions themselves are
+  P-invariant, a pinned repo contract) and the RNG key *after* the rung's
+  split (the schedule position ``s`` is the step number itself).  Replaying
+  rung ``s`` onward from that state therefore reproduces the uninterrupted
+  run's remaining arithmetic exactly.
+* Step numbering: ``step_0`` = initial partition on the coarsest level
+  (after coarsening, before any refinement); ``step_s`` (s ≥ 1) = labels
+  after refinement rung ``s−1`` (rung 0 refines the coarsest level).
+* Snapshots commit atomically through :mod:`repro.checkpoint.store`; a
+  fingerprint of the resolved config + seed + graph shape is stored in the
+  step META and checked on resume — resuming under a different
+  configuration raises instead of silently diverging.
+
+``REPRO_CKPT_KILL_AFTER_STEP=<s>`` is the crash-test hook: the process
+SIGKILLs itself immediately after committing snapshot ``s`` — the
+kill-and-resume suite (tests/test_kill_resume.py) uses it to die
+mid-V-cycle at a deterministic point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+
+VCKPT_VERSION = 1
+_KILL_ENV = "REPRO_CKPT_KILL_AFTER_STEP"
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When and where a V-cycle snapshots its state.
+
+    ``every_levels`` is the rung cadence: snapshot after rungs where
+    ``(rung + 1) % every_levels == 0`` — plus always after initial
+    partitioning (step 0) and after the finest rung.  ``keep`` bounds the
+    committed steps on disk (keep-N GC).  Deliberately NOT part of
+    ``PartitionConfig.cache_key()``/``plan_key()``: checkpointing never
+    changes the computed partition, so it must not split compiled-program
+    or serving-cache buckets.
+    """
+
+    ckpt_dir: str
+    every_levels: int = 1
+    keep: int = 3
+
+    def __post_init__(self):
+        if not isinstance(self.ckpt_dir, str) or not self.ckpt_dir:
+            raise ValueError(
+                f"CheckpointPolicy.ckpt_dir must be a non-empty path, "
+                f"got {self.ckpt_dir!r}")
+        if self.every_levels < 1:
+            raise ValueError(
+                f"CheckpointPolicy.every_levels must be >= 1, "
+                f"got {self.every_levels}")
+        if self.keep < 1:
+            raise ValueError(
+                f"CheckpointPolicy.keep must be >= 1, got {self.keep}")
+
+    def want_step(self, rung: int, n_levels: int) -> bool:
+        """Snapshot after refinement rung ``rung``?"""
+        return (rung + 1) % self.every_levels == 0 or rung == n_levels - 1
+
+
+def fingerprint(cfg, seed: int, n: int, m_live: int) -> dict:
+    """Resume-compatibility fingerprint: the resolved config cache key
+    (aliases collapsed), the seed, and the input graph's (n, live directed
+    edges) — everything the key chain and hierarchy are a function of.
+    Deliberately excludes P / comm / gain backends: those change *where*
+    the arithmetic runs, not the partition (the repo's cross-backend
+    bit-identity contract), so elastic resume across them is legal."""
+    return {"version": VCKPT_VERSION, "cache_key": repr(cfg.cache_key()),
+            "seed": int(seed), "n": int(n), "m": int(m_live)}
+
+
+def save_step(policy: CheckpointPolicy, step: int, labels, key, fp: dict):
+    """Commit one V-cycle snapshot (synchronous: the snapshot is the crash
+    barrier, so it must be durable before the next rung mutates state)."""
+    labels = np.asarray(labels, dtype=np.int32)
+    tree = {"labels": labels, "key": np.asarray(key)}
+    store.save(policy.ckpt_dir, step, tree, keep=policy.keep,
+               extra={"vckpt": fp, "n_labels": int(labels.shape[0])})
+    _maybe_kill(step)
+
+
+def _maybe_kill(step: int):
+    want = os.environ.get(_KILL_ENV)
+    if want is not None and int(want) == step:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+def find_resume_step(resume_dir: str, fp: dict) -> int | None:
+    """Latest intact committed step in ``resume_dir``, or ``None`` when the
+    directory holds no usable snapshot (fresh start).  A snapshot written
+    under a different config/seed/graph raises a descriptive ValueError."""
+    steps = store.committed_steps(resume_dir, verify=True)
+    if not steps:
+        return None
+    step = steps[-1]
+    meta = store.load_meta(resume_dir, step)
+    got = (meta.get("extra") or {}).get("vckpt")
+    if got != fp:
+        diffs = sorted(
+            k for k in set(fp) | set(got or {})
+            if (got or {}).get(k) != fp.get(k))
+        raise ValueError(
+            f"checkpoint {resume_dir} step {step} was written under a "
+            f"different run (mismatched fields: {diffs}; stored {got!r}, "
+            f"this run {fp!r}) — refusing to resume")
+    return step
+
+
+def restore_step(resume_dir: str, step: int, n_labels: int, mesh=None):
+    """Restore snapshot ``step`` → ``(labels, key)`` host arrays.
+
+    ``n_labels`` is the expected label length at the step's level (from the
+    recomputed hierarchy); a mismatch means the checkpoint belongs to a
+    different hierarchy and raises.  With ``mesh`` given, the leaves are
+    placed through :func:`store.restore_resharded` replicated onto that
+    mesh — the elastic-resume path (the writing run's device count may
+    have been different; labels are global-layout, so placement is the
+    only device-dependent part)."""
+    meta = store.load_meta(resume_dir, step)
+    stored_n = (meta.get("extra") or {}).get("n_labels")
+    if stored_n is not None and int(stored_n) != int(n_labels):
+        raise ValueError(
+            f"checkpoint {resume_dir} step {step} holds {stored_n} labels "
+            f"but this hierarchy's level expects {n_labels} — the snapshot "
+            f"belongs to a different hierarchy")
+    like = {"labels": jax.ShapeDtypeStruct((n_labels,), jnp.int32),
+            "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        repl = NamedSharding(mesh, PartitionSpec())
+        tree, _ = store.restore_resharded(
+            resume_dir, like, {"labels": repl, "key": repl}, step=step)
+    else:
+        tree, _ = store.restore(resume_dir, like, step=step)
+    return tree["labels"], tree["key"]

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.checkpoint.vcycle import CheckpointPolicy
 from repro.refine.schedule import ToleranceSchedule, resolve_schedule
 from repro.refine.variants import Variant, resolve_variant
 
@@ -58,6 +59,12 @@ class PartitionConfig:
     patience: int = 12
     max_inner: int = 64
     coarsen_until: int | None = None
+    # V-cycle snapshot policy (repro.checkpoint.vcycle).  Deliberately NOT
+    # part of cache_key()/plan_key(): checkpointing never changes the
+    # computed partition, so it must not split compiled-program or serving
+    # cache buckets.  Honoured by partition/dpartition; the batched/serving
+    # engines reject it at the API boundary.
+    ckpt: CheckpointPolicy | None = None
 
     def __post_init__(self):
         # registry-listing ValueErrors at construction time — a typo fails
@@ -76,6 +83,11 @@ class PartitionConfig:
             raise ValueError(f"patience must be >= 1, got {self.patience}")
         if self.max_inner < 1:
             raise ValueError(f"max_inner must be >= 1, got {self.max_inner}")
+        if self.ckpt is not None and not isinstance(self.ckpt,
+                                                    CheckpointPolicy):
+            raise ValueError(
+                f"ckpt must be a repro.checkpoint.CheckpointPolicy or None, "
+                f"got {type(self.ckpt).__name__}")
 
     # ---- resolved views ------------------------------------------------
     def variant(self) -> Variant:

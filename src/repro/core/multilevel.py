@@ -18,6 +18,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import coarsen as C
 from repro.core.config import UNSET, PartitionConfig, resolve_config
@@ -60,6 +61,10 @@ class PartitionResult:
     # per-level {n, eps, imbalance} after each level's refinement
     # (coarsest → finest), populated by partition(trace_levels=True)
     level_trace: tuple | None = None
+    # checkpoint step this run restored (None = ran from scratch); with a
+    # resume the labels are bit-identical to the uninterrupted run, but
+    # level_trace only covers the rungs actually re-executed
+    resume_step: int | None = None
 
 
 def _refine(g: Graph, labels, k, eps, key, var: Variant, patience: int,
@@ -84,6 +89,8 @@ def partition(
     schedule: str | ToleranceSchedule | None = UNSET,
     eps_coarse: float | None = UNSET,
     trace_levels: bool = False,
+    ckpt=UNSET,
+    resume: str | None = None,
     config: PartitionConfig | None = None,
 ) -> PartitionResult:
     """Full multilevel partition of ``g`` into ``k`` blocks.
@@ -105,15 +112,27 @@ def partition(
     partition and the finest level always target the final ``eps``.
     ``trace_levels=True`` records per-level imbalance after each level's
     refinement in ``PartitionResult.level_trace`` (adds one host sync per
-    level — the property suite's hook)."""
+    level — the property suite's hook).
+
+    ``config.ckpt`` (or the ``ckpt=`` facade kwarg — a
+    :class:`repro.checkpoint.CheckpointPolicy`) snapshots the V-cycle
+    state after initial partitioning and after each uncoarsening rung;
+    ``resume=ckpt_dir`` restores the latest intact snapshot and continues
+    to a **bit-identical** final partition (repro.checkpoint.vcycle — the
+    hierarchy is recomputed deterministically, only labels + RNG key are
+    restored).  An empty/absent resume dir starts from scratch."""
+    from repro.checkpoint import vcycle as vc
+
     cfg = resolve_config(config, where="partition", k=k, eps=eps,
                          refiner=refiner, schedule=schedule,
                          eps_coarse=eps_coarse, gain=gain, patience=patience,
-                         max_inner=max_inner, coarsen_until=coarsen_until)
+                         max_inner=max_inner, coarsen_until=coarsen_until,
+                         ckpt=ckpt)
     var, sched = cfg.variant(), cfg.tolerance_schedule()
     k, eps, gain = cfg.k, cfg.eps, cfg.gain
     patience, max_inner = cfg.patience, cfg.max_inner
     coarsen_until = cfg.coarsen_until
+    policy = cfg.ckpt
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
 
@@ -123,7 +142,25 @@ def partition(
         sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
     eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
-    labels = initial_partition(coarsest, k, eps, k_init)
+    # rung j refines level_graphs[j]; rung j > 0 first projects through
+    # mappings[j-1] (identical to the old reversed(levels) loop)
+    level_graphs = [coarsest] + [fine for fine, _ in reversed(levels)]
+    mappings = [mapping for _, mapping in reversed(levels)]
+
+    fp = (vc.fingerprint(cfg, seed, g.n, int(np.asarray(g.row_ptr)[-1]))
+          if (policy or resume) else None)
+    start, resume_step = 0, None
+    if resume is not None:
+        resume_step = vc.find_resume_step(resume, fp)
+    if resume_step is not None:
+        n_at = level_graphs[max(0, resume_step - 1)].n
+        lab_h, key_h = vc.restore_step(resume, resume_step, n_at)
+        labels, key = jnp.asarray(lab_h), jnp.asarray(key_h)
+        start = resume_step
+    else:
+        labels = initial_partition(coarsest, k, eps, k_init)
+        if policy is not None:
+            vc.save_step(policy, 0, labels, key, fp)
 
     trace: list[dict] = []
 
@@ -132,17 +169,15 @@ def partition(
             trace.append(level_trace_entry(lvl_g.n, e,
                                            imbalance(lvl_g, lab, k)))
 
-    key, sub = jax.random.split(key)
-    labels = _refine(coarsest, labels, k, eps_l[0], sub, var, patience,
-                     max_inner, gain)
-    _record(coarsest, labels, eps_l[0])
-
-    for i, (fine, mapping) in enumerate(reversed(levels), start=1):
-        labels = labels[mapping]  # project coarse labels to the finer level
+    for j in range(start, n_levels):
+        if j > 0:
+            labels = labels[mappings[j - 1]]  # project to the finer level
         key, sub = jax.random.split(key)
-        labels = _refine(fine, labels, k, eps_l[i], sub, var, patience,
-                         max_inner, gain)
-        _record(fine, labels, eps_l[i])
+        labels = _refine(level_graphs[j], labels, k, eps_l[j], sub, var,
+                         patience, max_inner, gain)
+        _record(level_graphs[j], labels, eps_l[j])
+        if policy is not None and policy.want_step(j, n_levels):
+            vc.save_step(policy, j + 1, labels, key, fp)
 
     return PartitionResult(
         labels=labels,
@@ -151,6 +186,7 @@ def partition(
         levels=n_levels,
         level_eps=eps_l,
         level_trace=tuple(trace) if trace_levels else None,
+        resume_step=resume_step,
     )
 
 
@@ -413,6 +449,12 @@ def partition_batch(
     k, eps, gain = cfg.k, cfg.eps, cfg.gain
     patience, max_inner = cfg.patience, cfg.max_inner
     coarsen_until = cfg.coarsen_until
+    if cfg.ckpt is not None:
+        raise ValueError(
+            "partition_batch: checkpointing (config.ckpt) is only supported "
+            "by the solo V-cycle entry points partition/dpartition — batched "
+            "slots share compiled programs and have no per-request rung "
+            "state to snapshot")
     graphs = list(graphs)
     seeds = seed_list(graphs, seeds, seed)  # API-boundary check, even for []
     if not graphs:

@@ -64,22 +64,43 @@ class ShardedGraph:
         return jnp.sum(self.nw)
 
 
-def shard_graph(g: Graph, P: int) -> ShardedGraph:
-    """Host-side partition of ``g`` into P contiguous, edge-balanced ranges."""
-    deg = np.asarray(g.degrees, dtype=np.int64)
-    row_ptr = np.asarray(g.row_ptr, dtype=np.int64)
+def shard_plan(row_ptr: np.ndarray, n: int, P: int):
+    """The edge-balanced contiguous vertex split, from ``row_ptr`` alone.
+
+    Returns ``(starts, n_local, m_local)`` with ``starts`` of length P+1.
+    The single home of the split arithmetic: :func:`shard_graph` (in-memory
+    path) and ``repro.graphs.ingest.ingest_sharded`` (out-of-core chunked
+    path) both call it, which is what makes the two paths bit-identical by
+    construction — the chunked ingest needs only this O(n) plan plus one
+    chunk of edges resident at a time."""
+    row_ptr = np.asarray(row_ptr, dtype=np.int64)
     m_live = int(row_ptr[-1])
 
     # contiguous ranges with ~equal edges: cut at multiples of m/P
     targets = (np.arange(1, P) * m_live) / P
     cuts = np.searchsorted(row_ptr[1:], targets, side="left") + 1
-    starts = np.concatenate([[0], cuts, [g.n]]).astype(np.int64)
+    starts = np.concatenate([[0], cuts, [n]]).astype(np.int64)
     starts = np.maximum.accumulate(starts)  # guard degenerate graphs
 
-    n_local = int(np.max(np.diff(starts))) if P > 0 else g.n
+    n_local = int(np.max(np.diff(starts))) if P > 0 else n
     n_local = max(1, n_local)
     m_per = [int(row_ptr[starts[p + 1]] - row_ptr[starts[p]]) for p in range(P)]
     m_local = max(1, max(m_per))
+    return starts, n_local, m_local
+
+
+def gathered_ids(heads: np.ndarray, owner_starts: np.ndarray,
+                 n_local: int) -> np.ndarray:
+    """Translate global head ids → gathered-layout ids
+    (owner·n_local + offset) — shared by shard_graph and chunked ingest."""
+    owner = np.searchsorted(owner_starts, heads, side="right") - 1
+    return owner * n_local + (heads - owner_starts[owner])
+
+
+def shard_graph(g: Graph, P: int) -> ShardedGraph:
+    """Host-side partition of ``g`` into P contiguous, edge-balanced ranges."""
+    row_ptr = np.asarray(g.row_ptr, dtype=np.int64)
+    starts, n_local, m_local = shard_plan(row_ptr, g.n, P)
 
     src = np.zeros((P, m_local), dtype=np.int32)
     dst = np.full((P, m_local), int(PAD), dtype=np.int32)
@@ -94,8 +115,7 @@ def shard_graph(g: Graph, P: int) -> ShardedGraph:
     # translate global head ids → gathered-layout ids (owner·n_local + offset)
     owner_starts = starts[:P]
     def to_gathered(v: np.ndarray) -> np.ndarray:
-        owner = np.searchsorted(owner_starts, v, side="right") - 1
-        return owner * n_local + (v - owner_starts[owner])
+        return gathered_ids(v, owner_starts, n_local)
 
     for p in range(P):
         v0, v1 = starts[p], starts[p + 1]
@@ -185,6 +205,28 @@ def sharded_to_graph(sg: ShardedGraph) -> Graph:
         v = np.zeros(0, np.int64)
         w = np.zeros(0, np.float32)
     return from_coo(sg.n_real, u, v, w, nw=nw, symmetrize=False)
+
+
+def sharded_edge_cut(sg: ShardedGraph, lab_sh: jax.Array) -> jax.Array:
+    """Edge cut from the sharded layout alone (no host Graph needed — the
+    out-of-core ingest path's metric).  ``lab_sh`` is (P, n_local)
+    owner-sharded labels; each undirected edge is stored as two directed
+    copies, so the masked sum halves exactly like ``core.partition.edge_cut``
+    (bit-equal on integer weights; summation order may differ otherwise)."""
+    lab_g = lab_sh.reshape(-1)  # gathered layout: PE p's vertex i at p·n_local+i
+    src_lab = jnp.take_along_axis(lab_sh, sg.src, axis=1)
+    live = sg.dst != PAD
+    dst_lab = lab_g[jnp.where(live, sg.dst, 0)]
+    return jnp.sum(jnp.where(live & (src_lab != dst_lab), sg.ew, 0.0)) * 0.5
+
+
+def sharded_imbalance(sg: ShardedGraph, lab_sh: jax.Array, k: int):
+    """Imbalance from the sharded layout (padding slots weigh 0, so they
+    contribute nothing to the block weights)."""
+    bw = jax.ops.segment_sum(sg.nw.reshape(-1),
+                             lab_sh.reshape(-1).astype(jnp.int32),
+                             num_segments=k)
+    return jnp.max(bw) / (jnp.sum(sg.nw) / k) - 1.0
 
 
 def owned_mask(sg: ShardedGraph) -> jax.Array:

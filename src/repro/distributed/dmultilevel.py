@@ -35,10 +35,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint import vcycle as vc
 from repro.core import coarsen as C
 from repro.core.config import UNSET, PartitionConfig, resolve_config
-from repro.core.graph import Graph
+from repro.core.graph import PAD, Graph
 from repro.core.initial import initial_partition
 from repro.core.multilevel import level_trace_entry
 from repro.core.partition import edge_cut, imbalance, l_max
@@ -49,6 +51,8 @@ from repro.distributed.dgraph import (
     labels_from_sharded,
     labels_to_sharded,
     shard_graph,
+    sharded_edge_cut,
+    sharded_imbalance,
     sharded_to_graph,
 )
 from repro.refine.drivers import (
@@ -78,6 +82,8 @@ class DPartitionResult:
     # per-level {n, eps, imbalance} after each level's refinement
     # (coarsest → finest), populated by dpartition(trace_levels=True)
     level_trace: tuple | None = None
+    # committed snapshot step the V-cycle restarted from (None = fresh run)
+    resume_step: int | None = None
 
 
 class _PhaseTimer:
@@ -122,10 +128,7 @@ def _dl_max(sg: ShardedGraph, k: int, eps: float):
 def _dimbalance(sg: ShardedGraph, lab_sh, k: int) -> float:
     """Imbalance of a sharded labelling — padding slots carry zero weight,
     so they contribute nothing to the block weights."""
-    bw = jax.ops.segment_sum(sg.nw.reshape(-1),
-                             lab_sh.reshape(-1).astype(jnp.int32),
-                             num_segments=k)
-    return float(jnp.max(bw) / (jnp.sum(sg.nw) / k) - 1.0)
+    return float(sharded_imbalance(sg, lab_sh, k))
 
 
 def _drefine_sharded(mesh, sg: ShardedGraph, lab_sh, k, lmax, key,
@@ -193,20 +196,36 @@ def _drefine_level(mesh, g: Graph, labels, k, eps, key, var: Variant,
 
 def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, var,
                              coarsen_until, patience, max_inner, halo, gain,
-                             halo_uniform, timer, sched, trace_levels):
+                             halo_uniform, timer, sched, trace_levels,
+                             policy=None, resume=None, fp=None):
     """Fallback: centralised coarsening, per-level re-sharded refinement."""
     timer.start()
     levels, coarsest = C.coarsen_hierarchy(g, k, k_coarse,
                                            coarsen_until=coarsen_until)
     timer.stop("coarsen_s", coarsest.nw)
     n_levels = len(levels) + 1
-    w_fracs = _level_w_fracs(
-        sched, [coarsest.nw] + [f.nw for f, _ in reversed(levels)])
+    level_graphs = [coarsest] + [fine for fine, _ in reversed(levels)]
+    mappings = [mapping for _, mapping in reversed(levels)]
+    w_fracs = _level_w_fracs(sched, [lg.nw for lg in level_graphs])
     eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
-    timer.start()
-    labels = initial_partition(coarsest, k, eps, k_init)
-    timer.stop("init_s", labels)
+    start, resume_step = 0, None
+    if resume is not None:
+        resume_step = vc.find_resume_step(resume, fp)
+    if resume_step is not None:
+        # step s holds post-rung-(s−1) labels on level s−1 (s=0: initial
+        # partition on the coarsest); restore_resharded onto THIS mesh is
+        # the elastic path — the writing run's P may have differed
+        at = level_graphs[max(0, resume_step - 1)]
+        lab_h, key_h = vc.restore_step(resume, resume_step, at.n, mesh=mesh)
+        labels, key = jnp.asarray(lab_h), jnp.asarray(key_h)
+        start = resume_step
+    else:
+        timer.start()
+        labels = initial_partition(coarsest, k, eps, k_init)
+        timer.stop("init_s", labels)
+        if policy is not None:
+            vc.save_step(policy, 0, labels, key, fp)
 
     trace: list[dict] = []
 
@@ -216,34 +235,34 @@ def _dpartition_host_coarsen(mesh, g, k, eps, key, k_coarse, k_init, var,
                                            imbalance(lvl_g, lab, k)))
 
     timer.start()
-    key, sub = jax.random.split(key)
-    labels = _drefine_level(mesh, coarsest, labels, k, eps_l[0], sub, var,
-                            patience, max_inner, halo=halo, gain=gain,
-                            halo_uniform=halo_uniform)
-    _record(coarsest, labels, eps_l[0])
-
-    for i, (fine, mapping) in enumerate(reversed(levels), start=1):
-        labels = labels[mapping]
+    for j in range(start, n_levels):
+        if j > 0:
+            labels = labels[mappings[j - 1]]
         key, sub = jax.random.split(key)
-        labels = _drefine_level(mesh, fine, labels, k, eps_l[i], sub, var,
-                                patience, max_inner, halo=halo, gain=gain,
-                                halo_uniform=halo_uniform)
-        _record(fine, labels, eps_l[i])
+        labels = _drefine_level(mesh, level_graphs[j], labels, k, eps_l[j],
+                                sub, var, patience, max_inner, halo=halo,
+                                gain=gain, halo_uniform=halo_uniform)
+        _record(level_graphs[j], labels, eps_l[j])
+        if policy is not None and policy.want_step(j, n_levels):
+            vc.save_step(policy, j + 1, labels, key, fp)
     timer.stop("refine_s", labels)
-    return labels, n_levels, eps_l, trace
+    return labels, n_levels, eps_l, trace, resume_step
 
 
 def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
                                 var, coarsen_until, patience, max_inner,
                                 halo, gain, halo_uniform, timer, sched,
-                                trace_levels):
+                                trace_levels, policy=None, resume=None,
+                                fp=None):
     """On-device V-cycle: graph is sharded once; every level stays sharded.
 
     With halo=True the hierarchy emits device-derived halo metadata per
     level and every refinement runs under the interface-only protocol — the
-    fully on-device halo V-cycle (no per-level host gather of the graph)."""
+    fully on-device halo V-cycle (no per-level host gather of the graph).
+    ``g`` may already be a :class:`ShardedGraph` (the out-of-core ingest
+    path) — it is used as-is instead of re-sharding a host Graph."""
     P_ = mesh.devices.size
-    sg0 = shard_graph(g, P_)
+    sg0 = g if isinstance(g, ShardedGraph) else shard_graph(g, P_)
     timer.start(sg0.nw)
     if halo:
         levels, coarsest, halos = dcoarsen_hierarchy(
@@ -254,20 +273,37 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
         halos = [None] * (len(levels) + 1)
     timer.stop("coarsen_s", coarsest.nw)
     n_levels = len(levels) + 1
+    # refinement-order level list: coarsest, then levels[i][0] fine graphs
+    # (levels[i][2] is level_sgs[depth-1] — the coarse side of contraction i)
+    level_sgs = [coarsest] + [levels[i][0]
+                              for i in reversed(range(len(levels)))]
     # per-level w_max/c(V) from the sharded nw slices (padding weighs 0, so
-    # the fraction matches the host hierarchy's bit-for-bit); coarsest
-    # first, then levels[i][0] fine graphs walking the refinement order
-    w_fracs = _level_w_fracs(
-        sched, [coarsest.nw] + [levels[i][0].nw
-                                for i in reversed(range(len(levels)))])
+    # the fraction matches the host hierarchy's bit-for-bit)
+    w_fracs = _level_w_fracs(sched, [sg.nw for sg in level_sgs])
     eps_l = level_tolerances(sched, eps, n_levels, k, w_fracs=w_fracs)
 
-    # initial partitioning on the (small) centralised coarsest graph
-    timer.start()
-    gc = sharded_to_graph(coarsest)
-    labels = initial_partition(gc, k, eps, k_init)
-    lab_sh = labels_to_sharded(coarsest, labels)
-    timer.stop("init_s", lab_sh)
+    start, resume_step = 0, None
+    if resume is not None:
+        resume_step = vc.find_resume_step(resume, fp)
+    if resume_step is not None:
+        # snapshots hold GLOBAL-layout labels; re-shard onto the recomputed
+        # level — elastic resume (different P) falls out of the layout
+        at = level_sgs[max(0, resume_step - 1)]
+        lab_h, key_h = vc.restore_step(resume, resume_step, at.n_real,
+                                       mesh=mesh)
+        lab_sh = labels_to_sharded(at, jnp.asarray(lab_h))
+        key = jnp.asarray(key_h)
+        start = resume_step
+    else:
+        # initial partitioning on the (small) centralised coarsest graph
+        timer.start()
+        gc = sharded_to_graph(coarsest)
+        labels = initial_partition(gc, k, eps, k_init)
+        lab_sh = labels_to_sharded(coarsest, labels)
+        timer.stop("init_s", lab_sh)
+        if policy is not None:
+            vc.save_step(policy, 0, labels_from_sharded(coarsest, lab_sh),
+                         key, fp)
 
     trace: list[dict] = []
 
@@ -277,30 +313,31 @@ def _dpartition_sharded_coarsen(mesh, g, k, eps, key, k_coarse, k_init,
                                            _dimbalance(lvl_sg, lab, k)))
 
     timer.start()
-    key, sub = jax.random.split(key)
-    lab_sh = _drefine_sharded(mesh, coarsest, lab_sh, k,
-                              _dl_max(coarsest, k, eps_l[0]), sub, var,
-                              patience, max_inner, gain=gain, hsg=halos[-1],
-                              halo_uniform=halo_uniform)
-    _record(coarsest, lab_sh, eps_l[0])
-
-    for i in reversed(range(len(levels))):
-        fine_sg, map_sh, coarse_sg = levels[i]
-        lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
+    for j in range(start, n_levels):
+        if j == 0:
+            sg_j, hs = coarsest, halos[-1]
+        else:
+            i = len(levels) - j
+            fine_sg, map_sh, coarse_sg = levels[i]
+            lab_sh = duncoarsen(mesh, fine_sg, map_sh, coarse_sg, lab_sh)
+            sg_j, hs = fine_sg, halos[i]
         key, sub = jax.random.split(key)
-        depth = len(levels) - i  # 1 (coarsest-but-one) … n_levels-1 (finest)
-        lab_sh = _drefine_sharded(mesh, fine_sg, lab_sh, k,
-                                  _dl_max(fine_sg, k, eps_l[depth]), sub, var,
-                                  patience, max_inner, gain=gain,
-                                  hsg=halos[i], halo_uniform=halo_uniform)
-        _record(fine_sg, lab_sh, eps_l[depth])
+        lab_sh = _drefine_sharded(mesh, sg_j, lab_sh, k,
+                                  _dl_max(sg_j, k, eps_l[j]), sub, var,
+                                  patience, max_inner, gain=gain, hsg=hs,
+                                  halo_uniform=halo_uniform)
+        _record(sg_j, lab_sh, eps_l[j])
+        if policy is not None and policy.want_step(j, n_levels):
+            vc.save_step(policy, j + 1, labels_from_sharded(sg_j, lab_sh),
+                         key, fp)
     timer.stop("refine_s", lab_sh)
 
-    return labels_from_sharded(sg0, lab_sh), n_levels, eps_l, trace
+    return labels_from_sharded(sg0, lab_sh), n_levels, eps_l, trace, \
+        resume_step
 
 
 def dpartition(
-    g: Graph,
+    g: Graph | ShardedGraph,
     k: int | None = UNSET,
     P: int | None = None,
     eps: float | None = UNSET,
@@ -317,6 +354,8 @@ def dpartition(
     schedule: str | ToleranceSchedule | None = UNSET,
     eps_coarse: float | None = UNSET,
     trace_levels: bool = False,
+    ckpt=UNSET,
+    resume: str | None = None,
     config: PartitionConfig | None = None,
 ) -> DPartitionResult:
     """Distributed multilevel partition; ``halo=True`` composes with either
@@ -345,11 +384,24 @@ def dpartition(
     non-constant schedule adds no dispatches.  ``trace_levels=True``
     records per-level {n, eps, imbalance} in
     ``DPartitionResult.level_trace`` (one host sync per level — the
-    property suite's hook)."""
+    property suite's hook).
+
+    ``g`` may be a :class:`ShardedGraph` — the out-of-core ingest path
+    (``repro.graphs.ingest.ingest_sharded``): the global edge list is never
+    materialised on the host, the V-cycle runs straight off the device
+    shards (``coarsen="sharded"`` only) and the final cut/imbalance come
+    from the sharded layout.  ``ckpt`` (a
+    :class:`repro.checkpoint.CheckpointPolicy`, or via ``config=``)
+    snapshots the V-cycle state after initial partitioning and each
+    refinement rung; ``resume=<ckpt_dir>`` restores the latest committed
+    snapshot and continues — bit-identical to the uninterrupted run,
+    including onto a different device count (snapshots hold global-layout
+    labels; partitions are P-invariant)."""
     cfg = resolve_config(config, where="dpartition", k=k, eps=eps,
                          refiner=refiner, schedule=schedule,
                          eps_coarse=eps_coarse, gain=gain, patience=patience,
-                         max_inner=max_inner, coarsen_until=coarsen_until)
+                         max_inner=max_inner, coarsen_until=coarsen_until,
+                         ckpt=ckpt)
     var, sched = cfg.variant(), cfg.tolerance_schedule()
     k, eps, gain = cfg.k, cfg.eps, cfg.gain
     patience, max_inner = cfg.patience, cfg.max_inner
@@ -358,29 +410,60 @@ def dpartition(
         coarsen = "sharded"  # old auto default; halo no longer forces "host"
     if coarsen not in ("sharded", "host"):
         raise ValueError(f"coarsen must be 'sharded' or 'host', got {coarsen!r}")
+    sharded_in = isinstance(g, ShardedGraph)
+    if sharded_in:
+        if coarsen != "sharded":
+            raise ValueError(
+                "coarsen='host' needs a centralised Graph; a ShardedGraph "
+                "input (out-of-core ingest) runs under coarsen='sharded'")
+        if P is None:
+            P = g.P
+        elif P != g.P:
+            raise ValueError(
+                f"P={P} does not match the ingested ShardedGraph's P={g.P}; "
+                f"re-ingest with ingest_sharded(manifest, P={P})")
     mesh, P_ = make_pe_mesh(P)
     key = jax.random.PRNGKey(seed)
     k_coarse, k_init, key = jax.random.split(key, 3)
     timer = _PhaseTimer(timing)
 
-    if coarsen == "host":
-        labels, n_levels, eps_l, trace = _dpartition_host_coarsen(
-            mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform, timer, sched,
-            trace_levels)
-    else:
-        labels, n_levels, eps_l, trace = _dpartition_sharded_coarsen(
-            mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
-            patience, max_inner, halo, gain, halo_uniform, timer, sched,
-            trace_levels)
+    policy = cfg.ckpt
+    fp = None
+    if policy is not None or resume is not None:
+        if sharded_in:
+            n_g, m_live = g.n_real, int(jnp.sum(g.dst != PAD))
+        else:
+            n_g, m_live = g.n, int(np.asarray(g.row_ptr)[-1])
+        fp = vc.fingerprint(cfg, seed, n_g, m_live)
 
+    if coarsen == "host":
+        labels, n_levels, eps_l, trace, resume_step = \
+            _dpartition_host_coarsen(
+                mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
+                patience, max_inner, halo, gain, halo_uniform, timer, sched,
+                trace_levels, policy=policy, resume=resume, fp=fp)
+    else:
+        labels, n_levels, eps_l, trace, resume_step = \
+            _dpartition_sharded_coarsen(
+                mesh, g, k, eps, key, k_coarse, k_init, var, coarsen_until,
+                patience, max_inner, halo, gain, halo_uniform, timer, sched,
+                trace_levels, policy=policy, resume=resume, fp=fp)
+
+    if sharded_in:
+        lab_fin = labels_to_sharded(g, labels)
+        cut = float(sharded_edge_cut(g, lab_fin))
+        imb = float(sharded_imbalance(g, lab_fin, k))
+    else:
+        cut = float(edge_cut(g, labels))
+        imb = float(imbalance(g, labels, k))
     return DPartitionResult(
         labels=labels,
-        cut=float(edge_cut(g, labels)),
-        imbalance=float(imbalance(g, labels, k)),
+        cut=cut,
+        imbalance=imb,
         levels=n_levels,
         P=P_,
         timings=timer.result(),
         level_eps=eps_l,
         level_trace=tuple(trace) if trace_levels else None,
+        resume_step=resume_step,
     )

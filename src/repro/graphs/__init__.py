@@ -4,6 +4,13 @@ from repro.graphs.batch import (  # noqa: F401
     from_graphs,
     from_padded_slots,
 )
+from repro.graphs.ingest import (  # noqa: F401
+    MANIFEST_VERSION,
+    ingest_sharded,
+    load_manifest,
+    reset_host_peak,
+    write_chunks,
+)
 from repro.graphs.generators import (  # noqa: F401
     BENCHMARK_SET,
     chung_lu_powerlaw,

@@ -182,6 +182,10 @@ BENCHMARK_SET = {
     "rmat_14": (rmat, dict(scale=14, edge_factor=8, seed=5), "high"),
     "rmat_15": (rmat, dict(scale=15, edge_factor=6, seed=6), "high"),
     "ws_16k": (watts_strogatz, dict(n=16384, k=8, beta=0.05, seed=7), "low"),
+    # tiny smoke instances — seconds-scale CLI subprocess tests
+    # (tests/test_kill_resume.py) and quick local runs, not benchmark cells
+    "grid2d_1k": (grid2d, dict(nx=32, ny=32), "low"),
+    "rmat_9": (rmat, dict(scale=9, edge_factor=4, seed=5), "high"),
 }
 
 

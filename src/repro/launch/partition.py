@@ -28,8 +28,29 @@ def main():
     ap.add_argument("--eps-coarse", type=float, default=None,
                     help="coarsest-level tolerance of the geometric schedule")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coarsen-until", type=int, default=None,
+                    help="stop coarsening at this many vertices "
+                         "(default: max(512, 16k))")
     ap.add_argument("--distributed", type=int, default=0,
                     help="run refinement under shard_map with P forced host devices")
+    ap.add_argument("--ingest", default=None, metavar="MANIFEST",
+                    help="out-of-core input: build the device shards from a "
+                         "chunked edge manifest (repro.graphs.ingest) instead "
+                         "of generating --graph centrally; requires "
+                         "--distributed P")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="snapshot the V-cycle into this directory after "
+                         "initial partitioning and each refinement rung "
+                         "(repro.checkpoint.CheckpointPolicy)")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="snapshot cadence in refinement rungs (default 1)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest committed snapshot from "
+                         "--ckpt-dir and continue; bit-identical to the "
+                         "uninterrupted run, including under a different "
+                         "--distributed P (elastic resume)")
+    ap.add_argument("--labels-out", default=None, metavar="PATH",
+                    help="np.save the final (n,) int32 label array here")
     ap.add_argument("--halo", action="store_true",
                     help="interface-only halo exchange (distributed fast path)")
     ap.add_argument("--batch", type=int, default=0,
@@ -62,12 +83,28 @@ def main():
                       args.serve_trace))) > 1:
         ap.error("--batch, --distributed and --serve-trace are "
                  "mutually exclusive")
+    if args.ingest and not args.distributed:
+        ap.error("--ingest needs --distributed P (the shards are built for "
+                 "P devices; the centralised paths would gather them back)")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume restores from --ckpt-dir; pass both")
+    if args.ckpt_dir and (args.batch or args.serve_trace):
+        ap.error("--ckpt-dir applies to the solo and --distributed paths; "
+                 "the batched/serving engines reject checkpointing")
     # canonicalize aliases (unconstrained-then-snap → snap): the string is
     # echoed in the output JSON, where it keys cross-run comparisons
     args.schedule = resolve_schedule(args.schedule).mode
 
+    policy = None
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointPolicy
+
+        policy = CheckpointPolicy(ckpt_dir=args.ckpt_dir,
+                                  every_levels=args.ckpt_every)
     cfg = PartitionConfig(k=args.k, eps=args.eps, refiner=args.refiner,
-                          schedule=args.schedule, eps_coarse=args.eps_coarse)
+                          schedule=args.schedule, eps_coarse=args.eps_coarse,
+                          coarsen_until=args.coarsen_until, ckpt=policy)
+    resume_dir = args.ckpt_dir if args.resume else None
 
     if args.serve_trace:
         import numpy as np
@@ -96,6 +133,7 @@ def main():
         t_uss = np.cumsum(gaps)
 
         g = generate(args.graph)
+        n_out, m_out = g.n, g.m
         reqs = [PartitionRequest(g, config=cfg, seed=i % 8, t_us=float(t))
                 for i, t in enumerate(t_uss)]
         policy = FlushPolicy(batch_target=args.serve_batch,
@@ -141,6 +179,7 @@ def main():
         from repro.core import partition_batch
 
         g = generate(args.graph)
+        n_out, m_out = g.n, g.m
         t0 = time.time()
         results = partition_batch([g] * args.batch, seed=args.seed,
                                   config=cfg)
@@ -157,19 +196,35 @@ def main():
         )
         from repro.distributed import dpartition
 
-        g = generate(args.graph)
+        if args.ingest:
+            from repro.graphs import ingest_sharded, load_manifest
+
+            man = load_manifest(args.ingest)
+            g = ingest_sharded(man, P=args.distributed)
+            n_out, m_out = man["n"], man["m"]
+        else:
+            g = generate(args.graph)
+            n_out, m_out = g.n, g.m
         t0 = time.time()
         res = dpartition(g, P=args.distributed, seed=args.seed,
-                         halo=args.halo, config=cfg)
+                         halo=args.halo, resume=resume_dir, config=cfg)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    P=res.P, sec=round(time.time() - t0, 2))
     else:
         g = generate(args.graph)
+        n_out, m_out = g.n, g.m
         t0 = time.time()
-        res = partition(g, seed=args.seed, config=cfg)
+        res = partition(g, seed=args.seed, resume=resume_dir, config=cfg)
         out = dict(cut=res.cut, imbalance=res.imbalance, levels=res.levels,
                    sec=round(time.time() - t0, 2))
-    out.update(graph=args.graph, n=g.n, m=g.m, k=args.k,
+    if args.ckpt_dir:
+        out.update(resumed_from=res.resume_step)
+    if args.labels_out:
+        import numpy as np
+
+        np.save(args.labels_out, np.asarray(res.labels, dtype=np.int32))
+        out.update(labels_out=args.labels_out)
+    out.update(graph=args.ingest or args.graph, n=n_out, m=m_out, k=args.k,
                refiner=args.refiner, schedule=args.schedule,
                level_eps=[round(e, 6) for e in res.level_eps])
     print(json.dumps(out))

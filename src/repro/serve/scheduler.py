@@ -95,8 +95,14 @@ class PartitionRequest:
                                     **{kk: v for kk, v in legacy.items()
                                        if v is not None})
         object.__setattr__(self, "graph", graph)
-        object.__setattr__(self, "config",
-                           config if config is not None else PartitionConfig())
+        config = config if config is not None else PartitionConfig()
+        if config.ckpt is not None:
+            raise ValueError(
+                "PartitionRequest: checkpointing (config.ckpt) is only "
+                "supported by the solo V-cycle entry points "
+                "partition/dpartition — serving flushes share batched "
+                "programs and have no per-request rung state to snapshot")
+        object.__setattr__(self, "config", config)
         object.__setattr__(self, "seed", seed)
         object.__setattr__(self, "t_us", t_us)
 

@@ -1,0 +1,220 @@
+"""Checkpoint-store fault injection: the atomic-commit contract under torn
+writes, async worker failures, and interleaved save/GC races.
+
+The store's fault-tolerance contract (store.py module docstring):
+  * crash mid-save → only ``.tmp*`` dirs left → invisible to restore;
+  * committed-looking step with a truncated / unreadable / shape-mangled
+    leaf → torn: auto restore falls back to the previous good step,
+    ``committed_steps(verify=True)`` excludes it, explicit-step restore
+    raises ``CheckpointError``;
+  * asking for a leaf the checkpoint never held → ``ValueError`` listing
+    the stored leaves (a caller bug, never a bare ``KeyError``);
+  * async saves surface worker exceptions at ``join()``/``result()``;
+  * interleaved async saves + keep-N GC leave exactly the newest ``keep``
+    committed steps and no torn state.
+"""
+
+import json
+import os
+import random
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError,
+    committed_steps,
+    latest_step,
+    restore,
+    save,
+    verify_step,
+)
+
+
+def tree(step=0):
+    return {"labels": np.arange(64, dtype=np.int32) + step,
+            "key": np.asarray([7, step], dtype=np.uint32)}
+
+
+# --------------------------------------------------------------------------
+# async SaveHandle: worker failures re-raise instead of vanishing
+# --------------------------------------------------------------------------
+
+def test_async_save_reports_worker_failure(tmp_path):
+    """Regression: save(async_=True) used to run on a bare daemon thread —
+    a worker exception (bad path, full disk) was swallowed and the save
+    reported as success.  The handle must re-raise at join()/result()."""
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")  # makedirs inside will fail
+    h = save(str(blocker), 0, tree(), async_=True)
+    with pytest.raises(OSError):
+        h.result()
+    # join() re-raises too (and keeps re-raising on repeat calls)
+    with pytest.raises(OSError):
+        h.join()
+    assert h.done()
+
+
+def test_async_save_success_returns_path(tmp_path):
+    h = save(str(tmp_path), 3, tree(3), async_=True)
+    path = h.result()
+    assert path == str(tmp_path / "step_3")
+    assert committed_steps(str(tmp_path)) == [3]
+    h.join()  # idempotent after success
+
+
+def test_concurrent_async_saves_same_step(tmp_path):
+    """Two in-flight saves of the SAME step must not collide on the tmp
+    path (unique per-save suffix) and must both commit cleanly."""
+    hs = [save(str(tmp_path), 5, tree(i), async_=True) for i in range(4)]
+    for h in hs:
+        h.result()
+    assert committed_steps(str(tmp_path)) == [5]
+    assert verify_step(str(tmp_path), 5) == []
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_gc_race_property(tmp_path, seed):
+    """Property: under any interleaving of concurrent async saves with
+    keep-N GC, the directory converges to exactly the ``keep`` newest
+    steps, all intact, with no leftover tmp dirs.  (Deterministic seeded
+    schedules stand in for a hypothesis search — the dependency is not in
+    the image.)"""
+    rng = random.Random(seed)
+    keep = 3
+    steps = list(range(12))
+    rng.shuffle(steps)
+    handles, barrier = [], threading.Barrier(4)
+
+    def burst(chunk):
+        barrier.wait()
+        for s in chunk:
+            handles.append(save(str(tmp_path), s, tree(s), keep=keep,
+                                async_=True))
+
+    threads = [threading.Thread(target=burst, args=(steps[i::4],))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for h in list(handles):
+        h.result()
+
+    got = committed_steps(str(tmp_path))
+    assert len(got) == keep
+    # every survivor is intact and GC never resurrected a tmp dir
+    for s in got:
+        assert verify_step(str(tmp_path), s) == []
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]
+    # the newest committed step survived: GC only ever deletes from the
+    # oldest end, and some save committed max(steps) at some point
+    assert got[-1] == max(steps)
+
+
+# --------------------------------------------------------------------------
+# torn-write shapes: orphan tmp, missing META, truncated leaf
+# --------------------------------------------------------------------------
+
+def test_orphan_tmp_dirs_both_styles_ignored(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    os.makedirs(tmp_path / "step_2.tmp")  # legacy bare style
+    os.makedirs(tmp_path / "step_3.tmp-999-7")  # unique-suffix style
+    (tmp_path / "step_3.tmp-999-7" / "labels.npy").write_bytes(b"junk")
+    assert committed_steps(str(tmp_path)) == [1]
+    got, step = restore(str(tmp_path), tree())
+    assert step == 1
+    np.testing.assert_array_equal(got["labels"], tree(1)["labels"])
+
+
+def test_step_dir_without_meta_ignored(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    os.makedirs(tmp_path / "step_2")  # committed-looking name, no META.json
+    np.save(tmp_path / "step_2" / "labels.npy", tree(2)["labels"])
+    assert committed_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+    _, step = restore(str(tmp_path), tree())
+    assert step == 1
+
+
+def _truncate_leaf(tmp_path, step, leaf="labels.npy", keep_bytes=16):
+    p = tmp_path / f"step_{step}" / leaf
+    data = p.read_bytes()
+    p.write_bytes(data[:keep_bytes])
+
+
+def test_truncated_leaf_falls_back_to_previous_step(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    save(str(tmp_path), 2, tree(2))
+    _truncate_leaf(tmp_path, 2)
+    # verify-mode listing excludes the torn step; plain listing still sees it
+    assert committed_steps(str(tmp_path)) == [1, 2]
+    assert committed_steps(str(tmp_path), verify=True) == [1]
+    assert verify_step(str(tmp_path), 2) != []
+    # auto restore skips the torn newest step
+    got, step = restore(str(tmp_path), tree())
+    assert step == 1
+    np.testing.assert_array_equal(got["labels"], tree(1)["labels"])
+    # explicit-step restore of torn state raises the typed error
+    with pytest.raises(CheckpointError):
+        restore(str(tmp_path), tree(), step=2)
+
+
+def test_shape_mangled_leaf_is_torn(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    save(str(tmp_path), 2, tree(2))
+    np.save(tmp_path / "step_2" / "labels.npy",
+            np.zeros(3, np.int32))  # valid npy, wrong shape vs META
+    assert committed_steps(str(tmp_path), verify=True) == [1]
+    _, step = restore(str(tmp_path), tree())
+    assert step == 1
+
+
+def test_all_steps_torn_raises_checkpoint_error(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    _truncate_leaf(tmp_path, 1)
+    with pytest.raises(CheckpointError, match="torn steps skipped"):
+        restore(str(tmp_path), tree())
+
+
+def test_unparseable_meta_is_torn_not_committed(tmp_path):
+    save(str(tmp_path), 1, tree(1))
+    save(str(tmp_path), 2, tree(2))
+    (tmp_path / "step_2" / "META.json").write_text("{not json")
+    assert committed_steps(str(tmp_path), verify=True) == [1]
+    _, step = restore(str(tmp_path), tree())
+    assert step == 1
+
+
+# --------------------------------------------------------------------------
+# caller/structure mismatch: descriptive ValueError, never KeyError
+# --------------------------------------------------------------------------
+
+def test_missing_leaf_key_raises_listing_value_error(tmp_path):
+    save(str(tmp_path), 4, {"labels": np.arange(8, dtype=np.int32)})
+    like = {"labels": np.zeros(8, np.int32), "key": np.zeros(2, np.uint32)}
+    with pytest.raises(ValueError, match=r"no leaf 'key'.*labels"):
+        restore(str(tmp_path), like)
+    # and it is NOT the torn-write error: an explicit step raises the same
+    with pytest.raises(ValueError, match="stored leaves"):
+        restore(str(tmp_path), like, step=4)
+
+
+def test_extra_roundtrips_through_meta(tmp_path):
+    from repro.checkpoint import load_meta
+
+    save(str(tmp_path), 7, tree(7), extra={"vckpt": {"seed": 3}, "tag": "x"})
+    meta = load_meta(str(tmp_path), 7)
+    assert meta["extra"] == {"vckpt": {"seed": 3}, "tag": "x"}
+    assert meta["step"] == 7
+
+
+def test_gc_keeps_newest_with_gaps(tmp_path):
+    for s in (3, 10, 4, 20, 15):
+        save(str(tmp_path), s, tree(s), keep=2)
+    assert committed_steps(str(tmp_path)) == [15, 20]
+    shutil.rmtree(tmp_path / "step_20")
+    assert latest_step(str(tmp_path)) == 15

@@ -1,0 +1,126 @@
+"""Kill-and-resume: SIGKILL the partitioner CLI mid-V-cycle, rerun with
+--resume, and require the final labels bit-identical to an uninterrupted
+reference — same device count AND elastic (write P=8 → resume P=1 and
+vice versa), plus the out-of-core --ingest front.
+
+Heavy (each cell is 2–3 fresh interpreter launches with 8 forced host
+devices), so the module is gated behind REPRO_CKPT_SUBPROC=1 — set by
+``scripts/check.sh --ckpt`` and the CI ckpt-smoke job, kept out of tier-1.
+
+The crash is real: ``REPRO_CKPT_KILL_AFTER_STEP=<s>`` makes the run
+``os.kill(getpid(), SIGKILL)`` immediately after snapshot ``s`` commits —
+no atexit, no flushing, exactly the failure the atomic-commit store claims
+to survive."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.skipif(
+    os.environ.get("REPRO_CKPT_SUBPROC") != "1",
+    reason="subprocess kill/resume suite: set REPRO_CKPT_SUBPROC=1 "
+           "(scripts/check.sh --ckpt)")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GRAPH = ("--graph", "grid2d_1k", "--k", "4", "--coarsen-until", "64",
+         "--seed", "3")
+KILL_STEP = 1  # after the coarsest-but-one rung commits: mid-V-cycle
+
+
+def run_cli(*args, env_extra=None, expect_kill=False):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    env.update(env_extra or {})
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.partition", *GRAPH, *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, (
+            f"expected SIGKILL, got rc={proc.returncode}\n"
+            f"stdout: {proc.stdout}\nstderr: {proc.stderr}")
+        return None
+    assert proc.returncode == 0, (
+        f"rc={proc.returncode}\nstdout: {proc.stdout}\n"
+        f"stderr: {proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def dist(P):
+    return ("--distributed", str(P)) if P else ()
+
+
+def crash_then_resume(tmp_path, tag, write_P, resume_P, cell=()):
+    """Reference run, SIGKILLed checkpointing run, resumed run → (ref
+    labels, resumed labels, resumed JSON)."""
+    ck = str(tmp_path / f"ck_{tag}")
+    ref_npy = str(tmp_path / f"ref_{tag}.npy")
+    out_npy = str(tmp_path / f"out_{tag}.npy")
+
+    ref = run_cli(*cell, *dist(resume_P), "--labels-out", ref_npy)
+    run_cli(*cell, *dist(write_P), "--ckpt-dir", ck,
+            env_extra={"REPRO_CKPT_KILL_AFTER_STEP": str(KILL_STEP)},
+            expect_kill=True)
+    res = run_cli(*cell, *dist(resume_P), "--ckpt-dir", ck, "--resume",
+                  "--labels-out", out_npy)
+    assert res["resumed_from"] == KILL_STEP
+    assert res["cut"] == ref["cut"]
+    return np.load(ref_npy), np.load(out_npy), res
+
+
+@pytest.mark.parametrize("refiner,schedule",
+                         [("jet", "constant"), ("jet_v", "geometric")])
+def test_kill_resume_same_P8(tmp_path, refiner, schedule):
+    """SIGKILL at step 1 under 8 forced host devices; resume at the same
+    device count is bit-identical to the uninterrupted run, across a
+    {variant × schedule} sample."""
+    cell = ("--refiner", refiner, "--schedule", schedule)
+    ref, out, _ = crash_then_resume(
+        tmp_path, f"{refiner}_{schedule}", write_P=8, resume_P=8, cell=cell)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_kill_resume_elastic_8_to_1(tmp_path):
+    """Checkpoint written under P=8, resumed under P=1 — elastic scale-down
+    through global-layout snapshots + restore_resharded."""
+    ref, out, _ = crash_then_resume(tmp_path, "e81", write_P=8, resume_P=1)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_kill_resume_elastic_solo_to_8(tmp_path):
+    """Checkpoint written by the single-device driver (no --distributed),
+    resumed under P=8 — elastic scale-up."""
+    ref, out, _ = crash_then_resume(tmp_path, "e18", write_P=0, resume_P=8)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_ingest_cli_matches_generated_graph(tmp_path):
+    """--ingest (out-of-core chunked front) computes the same partition as
+    --graph for the identical graph at P=4 — and kill/resume composes with
+    it."""
+    chunks = str(tmp_path / "chunks")
+    script = (
+        "from repro.graphs import generate, write_chunks; "
+        f"write_chunks(generate('grid2d_1k'), {chunks!r}, 512)")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    subprocess.run([sys.executable, "-c", script], check=True, env=env,
+                   cwd=ROOT, timeout=300)
+
+    ref_npy = str(tmp_path / "ref.npy")
+    out_npy = str(tmp_path / "out.npy")
+    ck = str(tmp_path / "ck")
+    ref = run_cli(*dist(4), "--labels-out", ref_npy)
+    run_cli(*dist(4), "--ingest", chunks, "--ckpt-dir", ck,
+            env_extra={"REPRO_CKPT_KILL_AFTER_STEP": str(KILL_STEP)},
+            expect_kill=True)
+    res = run_cli(*dist(4), "--ingest", chunks, "--ckpt-dir", ck,
+                  "--resume", "--labels-out", out_npy)
+    assert res["resumed_from"] == KILL_STEP
+    np.testing.assert_array_equal(np.load(ref_npy), np.load(out_npy))
+    assert res["cut"] == ref["cut"]
+    assert res["n"] == ref["n"] and res["m"] == ref["m"]

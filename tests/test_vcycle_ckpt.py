@@ -1,0 +1,190 @@
+"""Resumable V-cycle: snapshot cadence, bit-identical resume across both
+drivers and both coarsening paths, fingerprint guards, API-boundary rejects.
+
+The resume contract (checkpoint/vcycle.py): a snapshot holds only {global
+labels, post-split RNG key, step number}; the hierarchy is recomputed, so
+restarting from ANY committed step replays the remaining rungs bit-exactly
+— including across drivers (partition ↔ dpartition) and device counts,
+because partitions are P-invariant (the repo's pinned contract).  The
+kill-and-resume subprocess suite (tests/test_kill_resume.py, gated behind
+REPRO_CKPT_SUBPROC=1) exercises the same contract through SIGKILL + CLI;
+this module keeps the in-process cells in tier-1."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointPolicy, committed_steps, load_meta
+from repro.checkpoint.vcycle import fingerprint
+from repro.core import partition
+from repro.core.config import PartitionConfig
+from repro.distributed import dpartition
+from repro.graphs import grid2d
+
+G = grid2d(24, 24)
+KW = dict(k=4, coarsen_until=64)
+
+
+def _steps_dir(tmp_path, name):
+    return str(tmp_path / name)
+
+
+def test_snapshot_steps_and_meta(tmp_path):
+    ck = _steps_dir(tmp_path, "ck")
+    ref = partition(G, seed=3, **KW)
+    res = partition(G, seed=3, ckpt=CheckpointPolicy(ck, keep=100), **KW)
+    # checkpointing never changes the partition
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+    assert res.resume_step is None
+    # step 0 (initial partition) .. step n_levels (after finest rung)
+    assert committed_steps(ck) == list(range(res.levels + 1))
+    meta = load_meta(ck, res.levels)
+    assert meta["extra"]["n_labels"] == G.n
+    assert meta["extra"]["vckpt"]["n"] == G.n
+
+
+@pytest.mark.parametrize("refiner,schedule",
+                         [("jet", "constant"), ("jet_v", "geometric")])
+@pytest.mark.parametrize("drop", [1, 2])
+def test_partition_resume_bit_identical(tmp_path, refiner, schedule, drop):
+    """Truncate the newest ``drop`` snapshots (simulating a crash that far
+    back) and resume: the final labels are bit-identical to the
+    uninterrupted run, for a sample of {variant × schedule} cells."""
+    ck = _steps_dir(tmp_path, "ck")
+    kw = dict(KW, refiner=refiner, schedule=schedule)
+    ref = partition(G, seed=3, **kw)
+    partition(G, seed=3, ckpt=CheckpointPolicy(ck, keep=100), **kw)
+    steps = committed_steps(ck)
+    for s in steps[-drop:]:
+        shutil.rmtree(os.path.join(ck, f"step_{s}"))
+    res = partition(G, seed=3, resume=ck, **kw)
+    assert res.resume_step == steps[-drop - 1]
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+    assert res.cut == ref.cut
+
+
+@pytest.mark.parametrize("coarsen", ["sharded", "host"])
+def test_dpartition_resume_bit_identical(tmp_path, coarsen):
+    ck = _steps_dir(tmp_path, coarsen)
+    ref = dpartition(G, P=1, seed=3, coarsen=coarsen, **KW)
+    res = dpartition(G, P=1, seed=3, coarsen=coarsen,
+                     ckpt=CheckpointPolicy(ck, keep=100), **KW)
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+    steps = committed_steps(ck)
+    shutil.rmtree(os.path.join(ck, f"step_{steps[-1]}"))
+    res2 = dpartition(G, P=1, seed=3, coarsen=coarsen, resume=ck, **KW)
+    assert res2.resume_step == steps[-2]
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res2.labels))
+
+
+def test_cross_driver_resume(tmp_path):
+    """A checkpoint written by the single-device driver resumes under the
+    distributed driver (and lands on the same labels) — snapshots are
+    layout-free, so the restore path reshards them onto whatever mesh the
+    resuming run has.  This is the in-process face of elastic resume; the
+    P=8↔P=1 cells live in the subprocess suite."""
+    ck = _steps_dir(tmp_path, "ck")
+    ref = partition(G, seed=3, **KW)
+    partition(G, seed=3, ckpt=CheckpointPolicy(ck, keep=2), **KW)
+    kept = committed_steps(ck)
+    assert len(kept) == 2  # keep-N pruned the older rungs
+    res = dpartition(G, P=1, seed=3, resume=ck, **KW)
+    assert res.resume_step == kept[-1]
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+
+
+def test_resume_empty_dir_is_fresh_run(tmp_path):
+    ck = _steps_dir(tmp_path, "empty")
+    os.makedirs(ck)
+    ref = partition(G, seed=3, **KW)
+    res = partition(G, seed=3, resume=ck, **KW)
+    assert res.resume_step is None
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+
+
+def test_resume_fingerprint_mismatch_raises(tmp_path):
+    ck = _steps_dir(tmp_path, "ck")
+    partition(G, seed=3, ckpt=CheckpointPolicy(ck), **KW)
+    with pytest.raises(ValueError, match="seed"):
+        partition(G, seed=4, resume=ck, **KW)
+    with pytest.raises(ValueError, match="cache_key"):
+        partition(G, seed=3, resume=ck, k=8, coarsen_until=64)
+    with pytest.raises(ValueError, match="different run"):
+        dpartition(grid2d(16, 16), P=1, seed=3, resume=ck, **KW)
+
+
+def test_resume_skips_torn_newest_step(tmp_path):
+    """A SIGKILL can tear the newest snapshot mid-write even after rename
+    became visible on some filesystems — resume must land on the last
+    INTACT step, not die on the torn one."""
+    ck = _steps_dir(tmp_path, "ck")
+    ref = partition(G, seed=3, **KW)
+    partition(G, seed=3, ckpt=CheckpointPolicy(ck, keep=100), **KW)
+    steps = committed_steps(ck)
+    leaf = os.path.join(ck, f"step_{steps[-1]}", "labels.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(16)
+    res = partition(G, seed=3, resume=ck, **KW)
+    assert res.resume_step == steps[-2]
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res.labels))
+
+
+def test_every_levels_cadence(tmp_path):
+    ck = _steps_dir(tmp_path, "ck")
+    res = partition(G, seed=3,
+                    ckpt=CheckpointPolicy(ck, every_levels=2, keep=100), **KW)
+    n = res.levels
+    want = [0] + [r + 1 for r in range(n) if (r + 1) % 2 == 0 or r == n - 1]
+    assert committed_steps(ck) == sorted(set(want))
+    # and resume from the sparser trail still reproduces the run
+    ref = partition(G, seed=3, **KW)
+    shutil.rmtree(os.path.join(ck, f"step_{committed_steps(ck)[-1]}"))
+    res2 = partition(G, seed=3, resume=ck, **KW)
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(res2.labels))
+
+
+# --------------------------------------------------------------------------
+# API boundary
+# --------------------------------------------------------------------------
+
+def test_ckpt_not_in_cache_or_plan_key(tmp_path):
+    base = PartitionConfig(k=4)
+    with_ckpt = base.replace(ckpt=CheckpointPolicy(str(tmp_path)))
+    assert base.cache_key() == with_ckpt.cache_key()
+    assert base.plan_key() == with_ckpt.plan_key()
+    # but the fingerprint DOES pin the partition-relevant fields
+    assert fingerprint(base, 0, 10, 20) == fingerprint(with_ckpt, 0, 10, 20)
+    assert fingerprint(base, 0, 10, 20) != fingerprint(base, 1, 10, 20)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        CheckpointPolicy("")
+    with pytest.raises(ValueError, match="every_levels"):
+        CheckpointPolicy("/tmp/x", every_levels=0)
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointPolicy("/tmp/x", keep=0)
+    with pytest.raises(ValueError, match="ckpt must be"):
+        PartitionConfig(ckpt="not-a-policy")
+
+
+def test_batched_and_serving_reject_ckpt(tmp_path):
+    from repro.core import partition_batch
+    from repro.serve import PartitionRequest
+
+    cfg = PartitionConfig(k=4, ckpt=CheckpointPolicy(str(tmp_path)))
+    g = grid2d(8, 8)
+    with pytest.raises(ValueError, match="ckpt"):
+        partition_batch([g], config=cfg)
+    with pytest.raises(ValueError, match="ckpt"):
+        PartitionRequest(g, config=cfg)
